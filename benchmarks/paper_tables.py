@@ -1,0 +1,147 @@
+"""Paper-experiment benchmarks — one function per GPFL table/figure.
+
+Scaled-down by default (CPU container): rounds and client counts are reduced
+but every selector / partition combination is real.  Pass ``--full`` for the
+paper-scale settings (500 / 2000 rounds — hours on CPU).
+
+Outputs CSV rows ``name,us_per_call,derived`` (derived = the figure's
+headline quantity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.paper import cifar10_experiment, femnist_experiment
+from repro.fl import run_experiment
+
+SELECTORS = ("random", "powd", "fedcor", "gpfl")
+PARTITIONS = ("1spc", "2spc", "dir")
+
+
+def _scale(exp, rounds, n_clients=40, spc_mean=80):
+    return dataclasses.replace(
+        exp, rounds=rounds, n_clients=n_clients,
+        clients_per_round=max(2, exp.clients_per_round // 2),
+        samples_per_client_mean=spc_mean, samples_per_client_std=20,
+        local_iters=max(5, exp.local_iters // 4), eval_size=1000)
+
+
+def table2_accuracy(rounds: int = 60, full: bool = False, dataset="femnist"):
+    """Table II: test accuracy per selector × partition at 15/50/100% of
+    training."""
+    rows = []
+    make = femnist_experiment if dataset == "femnist" else cifar10_experiment
+    for part in PARTITIONS:
+        for sel in SELECTORS:
+            exp = make(part, sel)
+            if not full:
+                exp = _scale(exp, rounds)
+            t0 = time.perf_counter()
+            res = run_experiment(exp)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "table": "table2", "dataset": dataset, "partition": part,
+                "selector": sel,
+                "acc_15": res.accuracy_at(0.15),
+                "acc_50": res.accuracy_at(0.50),
+                "acc_100": res.final_accuracy(10),
+                "seconds": dt,
+                "result": res,
+            })
+    return rows
+
+
+def fig4_coverage(rounds: int = 60, full: bool = False):
+    """Fig. 4: fraction of clients selected at least once vs round."""
+    rows = []
+    for sel in SELECTORS:
+        exp = femnist_experiment("2spc", sel)
+        if not full:
+            exp = _scale(exp, rounds)
+        res = run_experiment(exp)
+        full_cov = np.argmax(res.coverage >= 1.0) + 1 \
+            if res.coverage[-1] >= 1.0 else -1
+        rows.append({"table": "fig4", "selector": sel,
+                     "rounds_to_full_coverage": int(full_cov),
+                     "final_coverage": float(res.coverage[-1]),
+                     "result": res})
+    return rows
+
+
+def fig5_histogram(rounds: int = 60, full: bool = False):
+    """Fig. 5: per-client selection-frequency histogram shape (tail length +
+    spread)."""
+    rows = []
+    for sel in SELECTORS:
+        exp = femnist_experiment("2spc", sel)
+        if not full:
+            exp = _scale(exp, rounds)
+        res = run_experiment(exp)
+        c = res.selection_counts
+        rows.append({"table": "fig5", "selector": sel,
+                     "mean": float(c.mean()), "max": int(c.max()),
+                     "std": float(c.std()),
+                     "tail_ratio": float(c.max() / max(1.0, c.mean())),
+                     "result": res})
+    return rows
+
+
+def fig6_time(rounds: int = 30, full: bool = False):
+    """Fig. 6: wall time per selector (the pre- vs post-selection claim)."""
+    rows = []
+    for sel in SELECTORS:
+        exp = femnist_experiment("2spc", sel)
+        exp = _scale(exp, rounds)
+        res = run_experiment(exp)
+        # drop the first (compile-heavy) round
+        per_round = float(res.round_time_s[1:].mean())
+        rows.append({"table": "fig6", "selector": sel,
+                     "s_per_round": per_round,
+                     "total_s": float(res.round_time_s.sum()),
+                     "result": res})
+    return rows
+
+
+def fig7_alpha_ablation(rounds: int = 60, full: bool = False):
+    """Fig. 7: EE ablation — fixed α (incl. 0 = no exploration) vs the
+    linear ρ·t/T schedule at several ρ."""
+    import repro.core.selector as selmod
+    rows = []
+
+    for label, kw in [
+        ("no_ee_alpha0", dict(use_ee=False)),
+        ("rho_0.5", dict(rho=0.5)),
+        ("rho_1", dict(rho=1.0)),
+        ("rho_2", dict(rho=2.0)),
+        ("rho_5", dict(rho=5.0)),
+    ]:
+        exp = _scale(femnist_experiment("2spc", "gpfl"), rounds)
+        exp = dataclasses.replace(exp, rho=kw.get("rho", 1.0))
+        res = run_experiment(exp) if "use_ee" not in kw else \
+            _run_no_ee(exp)
+        rows.append({"table": "fig7", "variant": label,
+                     "final_acc": res.final_accuracy(10), "result": res})
+    return rows
+
+
+def _run_no_ee(exp):
+    """GPFL with the EE mechanism disabled (α=0 → pure top-K by GP)."""
+    import repro.fl.simulation as sim
+    from repro.core.selector import GPFLSelector
+
+    orig = sim.make_selector
+
+    def patched(name, n, k, T, **kw):
+        s = orig(name, n, k, T, **kw)
+        if isinstance(s, GPFLSelector):
+            s.use_ee = False
+        return s
+
+    sim.make_selector = patched
+    try:
+        return run_experiment(exp)
+    finally:
+        sim.make_selector = orig

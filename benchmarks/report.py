@@ -1,0 +1,94 @@
+"""Regenerate the data tables in EXPERIMENTS.md from results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    out = []
+    for line in open(path):
+        line = line.strip()
+        if line:
+            out.append(json.loads(line))
+    return out
+
+
+def fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024 or unit == "TB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}TB"
+
+
+def dryrun_table(path, mesh_label):
+    recs = load(path)
+    print(f"\n#### Mesh {mesh_label} — {sum(r['status']=='ok' for r in recs)}"
+          f"/{len(recs)} pairs lower+compile OK\n")
+    print("| arch | shape | compile s | args/device | temp/device | "
+          "collectives (count → bytes/device/step, scan bodies ×1) |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | FAIL | | | {r.get('error','')[:60]} |")
+            continue
+        m = r["memory"]
+        c = r["collectives"]
+        cparts = [f"{k}:{v['count']}" for k, v in sorted(c.items())
+                  if isinstance(v, dict)]
+        print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
+              f"{fmt_bytes(m.get('argument_size_in_bytes', 0))} | "
+              f"{fmt_bytes(m.get('temp_size_in_bytes', 0))} | "
+              f"{' '.join(cparts for cparts in cparts)} → "
+              f"{fmt_bytes(c.get('total_bytes', 0))} |")
+
+
+def roofline_table(path):
+    recs = [r for r in load(path) if "error" not in r]
+    # keep last record per (arch, shape)
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"])] = r
+    print("\n| arch | shape | compute s | memory s | collective s | "
+          "dominant | MODEL_FLOPS | useful ratio | step lower-bound |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(seen.items()):
+        print(f"| {a} | {s} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+              f"{r['collective_s']:.3f} | **{r['dominant']}** | "
+              f"{r['model_flops']:.2e} | {r['useful_ratio']:.3f} | "
+              f"{r['step_seconds_lower_bound']:.2f}s |")
+
+
+def table2(path):
+    recs = load(path)
+    if not recs:
+        return
+    print("\n| partition | selector | acc@15% | acc@50% | acc@100% | "
+          "rounds→full coverage | s/round |")
+    print("|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(f"| {r['partition']} | {r['selector']} | {r['acc_15']:.4f} | "
+              f"{r['acc_50']:.4f} | {r['acc_100']:.4f} | {r['cov_full']} | "
+              f"{r['mean_round_s']:.3f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### §Dry-run")
+        dryrun_table("results/dryrun_1pod.json", "16×16 (256 chips)")
+        dryrun_table("results/dryrun_2pod.json", "2×16×16 (512 chips)")
+    if which in ("all", "roofline"):
+        print("\n### §Roofline (single-pod, loop-corrected probes)")
+        roofline_table("results/roofline.json")
+    if which in ("all", "table2"):
+        print("\n### Table II analogue (synthetic FEMNIST, 250 rounds, "
+              "N=100)")
+        table2("results/table2_medium.json")

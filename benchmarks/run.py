@@ -1,0 +1,120 @@
+"""Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (Table II, Fig. 4-7) on the synthetic
+FEMNIST stand-in (scaled-down rounds — the offline container has no FEMNIST;
+see DESIGN.md), plus micro-benchmarks of the Pallas kernel wrappers.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks everything
+(CI); ``--full`` runs paper-scale rounds.  The §Roofline analysis is a
+separate entrypoint (``benchmarks.roofline``) because it must own
+XLA_FLAGS=...device_count=512 at process start.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _kernel_micro():
+    """Microbench the kernel wrappers (interpret mode ⇒ measures dispatch
+    overhead + oracle correctness, not TPU speed)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rows = []
+    rng = np.random.default_rng(0)
+    K, D = 16, 262_144
+    G = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+    d = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    ops.gp_projection(G, d)  # warm
+    t0 = time.perf_counter()
+    for _ in range(5):
+        ops.gp_projection(G, d).block_until_ready()
+    rows.append(("kernel_gp_projection_16x262k",
+                 (time.perf_counter() - t0) / 5 * 1e6, K * D))
+    n = 1_000_000
+    p = jnp.asarray(rng.normal(size=n), jnp.float32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    m = jnp.asarray(rng.normal(size=n), jnp.float32)
+    ops.fused_momentum(p, g, m, lr=0.01)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        ops.fused_momentum(p, g, m, lr=0.01)[0].block_until_ready()
+    rows.append(("kernel_momentum_1M",
+                 (time.perf_counter() - t0) / 5 * 1e6, n))
+    B, S, H, hd = 2, 2048, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    vl = jnp.asarray([S, S // 2], jnp.int32)
+    ops.decode_attention(q, kk, vv, vl)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        ops.decode_attention(q, kk, vv, vl).block_until_ready()
+    rows.append(("kernel_decode_attention_2x2k",
+                 (time.perf_counter() - t0) / 3 * 1e6, B * S * H * hd))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny rounds (CI smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds (hours)")
+    ap.add_argument("--only", default=None,
+                    help="comma-list: table2,fig4,fig5,fig6,fig7,kernels")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_tables as pt
+
+    rounds = 12 if args.quick else 60
+    only = set(args.only.split(",")) if args.only else \
+        {"table2", "fig4", "fig5", "fig6", "fig7", "kernels"}
+
+    print("name,us_per_call,derived")
+    t_all = time.time()
+
+    if "table2" in only:
+        for r in pt.table2_accuracy(rounds=rounds, full=args.full):
+            name = f"table2_{r['dataset']}_{r['partition']}_{r['selector']}"
+            per_round_us = r["seconds"] / max(1, len(r["result"].accuracy)) \
+                * 1e6
+            print(f"{name},{per_round_us:.0f},"
+                  f"acc15={r['acc_15']:.4f};acc50={r['acc_50']:.4f};"
+                  f"acc100={r['acc_100']:.4f}", flush=True)
+
+    if "fig4" in only:
+        for r in pt.fig4_coverage(rounds=rounds, full=args.full):
+            print(f"fig4_coverage_{r['selector']},0,"
+                  f"rounds_to_full={r['rounds_to_full_coverage']};"
+                  f"final={r['final_coverage']:.2f}", flush=True)
+
+    if "fig5" in only:
+        for r in pt.fig5_histogram(rounds=rounds, full=args.full):
+            print(f"fig5_hist_{r['selector']},0,"
+                  f"mean={r['mean']:.1f};max={r['max']};"
+                  f"tail_ratio={r['tail_ratio']:.2f}", flush=True)
+
+    if "fig6" in only:
+        for r in pt.fig6_time(rounds=max(10, rounds // 2), full=args.full):
+            print(f"fig6_time_{r['selector']},"
+                  f"{r['s_per_round'] * 1e6:.0f},"
+                  f"total_s={r['total_s']:.1f}", flush=True)
+
+    if "fig7" in only:
+        for r in pt.fig7_alpha_ablation(rounds=rounds, full=args.full):
+            print(f"fig7_{r['variant']},0,final_acc={r['final_acc']:.4f}",
+                  flush=True)
+
+    if "kernels" in only:
+        for name, us, derived in _kernel_micro():
+            print(f"{name},{us:.0f},elems={derived}", flush=True)
+
+    print(f"# total {time.time() - t_all:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end pretraining driver: train a ~100M-param LM for a few hundred
+steps with the GPFL-gated datacenter step (Scale B of DESIGN.md).
+
+Virtual clients = gradient groups fed from distinct synthetic domains;
+the GPCB bandit gates which groups' gradients enter each MGD update.
+
+    # ~20M params, 300 steps — ≈10 min on CPU:
+    PYTHONPATH=src python examples/pretrain_gpfl.py
+
+    # the full ~100M variant (slower):
+    PYTHONPATH=src python examples/pretrain_gpfl.py --scale 100m --steps 200
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.configs import get_arch
+from repro.launch.train import data_stream
+from repro.dist import init_train_state, make_gpfl_train_step
+from repro.models import build
+
+
+def scaled_cfg(scale: str):
+    base = get_arch("mamba2-370m")  # attn-free → fast CPU steps
+    if scale == "20m":
+        return dataclasses.replace(base, n_layers=6, d_model=512,
+                                   vocab_size=8192, ssm_state=64)
+    if scale == "100m":
+        return dataclasses.replace(base, n_layers=16, d_model=768,
+                                   vocab_size=16384, ssm_state=64)
+    raise SystemExit(f"unknown scale {scale}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="20m", choices=["20m", "100m"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--n-groups", type=int, default=8)
+    ap.add_argument("--k-select", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = scaled_cfg(args.scale)
+    api = build(cfg)
+    n_params = api.count_params()
+    print(f"model: {cfg.family}, {cfg.n_layers}L d={cfg.d_model} "
+          f"→ {n_params/1e6:.1f}M params")
+
+    params = api.init(jax.random.key(0))
+    state = init_train_state(params, args.n_groups)
+    step = jax.jit(make_gpfl_train_step(
+        api, n_groups=args.n_groups, k_select=args.k_select,
+        total_rounds=args.steps, lr=args.lr, remat="none"), donate_argnums=0)
+
+    stream = data_stream(cfg, args.n_groups, args.batch, args.seq)
+    losses, t0 = [], time.time()
+    counts = np.zeros(args.n_groups, int)
+    for i in range(args.steps):
+        state, m = step(state, next(stream))
+        losses.append(float(m["ce"]))
+        counts += np.asarray(m["selected_mask"]).astype(int)
+        if (i + 1) % 25 == 0:
+            print(f"step {i+1:4d}  ce={np.mean(losses[-25:]):.4f}  "
+                  f"sel_counts={counts.tolist()}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+
+    print(f"\nfinal 25-step ce: {np.mean(losses[-25:]):.4f} "
+          f"(from {np.mean(losses[:25]):.4f})")
+    print("per-group selection counts:", counts.tolist())
+    assert np.mean(losses[-25:]) < np.mean(losses[:25]), "no learning?"
+    print("OK: loss decreased under GPFL-gated training")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: GPFL vs Random client selection on Non-IID synthetic FEMNIST.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+~2 minutes on CPU.  Reproduces the paper's core claim in miniature: under
+label-skewed (2-shards-per-client) data, gradient-projection selection beats
+random selection, and covers every client sooner.
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.paper import femnist_experiment
+from repro.fl import run_experiment
+
+
+def main():
+    results = {}
+    for selector in ("random", "gpfl"):
+        exp = femnist_experiment("2spc", selector, rounds=40, seed=0)
+        exp = dataclasses.replace(exp, n_clients=40,
+                                  samples_per_client_mean=80,
+                                  local_iters=10, eval_size=1000)
+        print(f"== running {selector} ({exp.rounds} rounds, "
+              f"{exp.n_clients} clients, K={exp.clients_per_round}) ==")
+        results[selector] = run_experiment(exp, log_every=10)
+
+    print("\nselector  final_acc  acc@50%  rounds_to_full_coverage")
+    for name, res in results.items():
+        import numpy as np
+        cov = int(np.argmax(res.coverage >= 1.0) + 1) \
+            if res.coverage[-1] >= 1.0 else -1
+        print(f"{name:9s} {res.final_accuracy(5):8.4f} "
+              f"{res.accuracy_at(0.5):8.4f}  {cov}")
+    gain = results["gpfl"].final_accuracy(5) - results["random"].final_accuracy(5)
+    print(f"\nGPFL − Random final accuracy: {gain:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Serving example: batched greedy decoding against a KV cache via the same
+``serve_step`` the decode_32k / long_500k dry-runs lower.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-4b
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.dist import make_serve_step
+from repro.models import build, concrete_inputs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=48)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    api = build(cfg)
+    params = api.init(jax.random.key(0))
+    B = args.batch
+
+    batch = concrete_inputs(cfg, B, args.prompt_len, rng=jax.random.key(1))
+    cache = api.init_cache(B, args.cache_len, dtype=jnp.float32)
+    if cfg.family == "vlm":
+        from repro.models import stack
+        cache = stack.fill_cross_caches(params, cache, batch["patches"], cfg)
+    if cfg.is_encoder_decoder:
+        from repro.models import whisper
+        cache = whisper.fill_cross_caches(params, cache, batch["frames"], cfg)
+
+    serve = jax.jit(make_serve_step(api))
+
+    # prefill by stepping the prompt through the cache (teacher forcing)
+    tok = batch["tokens"][:, :1]
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        nxt, logits, cache = serve(params, cache,
+                                   batch["tokens"][:, t : t + 1],
+                                   jnp.int32(t))
+    print(f"prefilled {args.prompt_len} positions "
+          f"({(time.time()-t0)/args.prompt_len*1e3:.1f} ms/tok incl. "
+          f"compile)")
+
+    # autoregressive generation
+    seqs = [nxt]
+    t0 = time.time()
+    for t in range(args.prompt_len, args.prompt_len + args.gen_len):
+        nxt, logits, cache = serve(params, cache, nxt, jnp.int32(t))
+        seqs.append(nxt)
+    dt = time.time() - t0
+    out = jnp.concatenate(seqs, axis=1)
+    print(f"generated {args.gen_len} tokens × {B} seqs in {dt:.2f}s "
+          f"({dt/args.gen_len*1e3:.1f} ms/step)")
+    print("sample token ids:", out[0, :16].tolist())
+    assert out.shape == (B, args.gen_len + 1)
+    assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.vocab_size))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

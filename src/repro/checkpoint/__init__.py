@@ -1,0 +1,4 @@
+"""msgpack+zstd pytree checkpointing (sharding-aware restore)."""
+from repro.checkpoint.msgpack_ckpt import save_checkpoint, restore_checkpoint
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]

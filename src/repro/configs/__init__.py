@@ -1,0 +1,42 @@
+"""Config registry: ``get_arch("qwen2.5-3b")``, ``get_shape("train_4k")``."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, supports_shape
+from repro.configs.archs import ASSIGNED
+from repro.configs import paper
+
+ARCHS = dict(ASSIGNED)
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def list_shapes():
+    return list(SHAPES)
+
+
+__all__ = [
+    "ArchConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCHS",
+    "supports_shape",
+    "get_arch",
+    "get_shape",
+    "list_archs",
+    "list_shapes",
+    "paper",
+]

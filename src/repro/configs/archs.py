@@ -1,0 +1,29 @@
+"""Aggregates the 10 assigned architecture configs (one module per arch)."""
+from __future__ import annotations
+
+from repro.configs.qwen2_5_3b import QWEN2_5_3B
+from repro.configs.recurrentgemma_9b import RECURRENTGEMMA_9B
+from repro.configs.phi3_medium_14b import PHI3_MEDIUM_14B
+from repro.configs.phi3_mini_3_8b import PHI3_MINI_3_8B
+from repro.configs.llama_3_2_vision_90b import LLAMA_3_2_VISION_90B
+from repro.configs.whisper_small import WHISPER_SMALL
+from repro.configs.gemma3_4b import GEMMA3_4B
+from repro.configs.qwen3_moe_235b_a22b import QWEN3_MOE_235B_A22B
+from repro.configs.grok_1_314b import GROK_1_314B
+from repro.configs.mamba2_370m import MAMBA2_370M
+
+ASSIGNED = {
+    cfg.name: cfg
+    for cfg in (
+        QWEN2_5_3B,
+        RECURRENTGEMMA_9B,
+        PHI3_MEDIUM_14B,
+        PHI3_MINI_3_8B,
+        LLAMA_3_2_VISION_90B,
+        WHISPER_SMALL,
+        GEMMA3_4B,
+        QWEN3_MOE_235B_A22B,
+        GROK_1_314B,
+        MAMBA2_370M,
+    )
+}

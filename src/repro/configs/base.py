@@ -1,0 +1,228 @@
+"""Architecture + input-shape config system.
+
+Every assigned architecture is a frozen ``ArchConfig`` in its own module under
+``repro/configs`` (citation in the ``citation`` field).  The full configs are
+exercised only via the dry-run (ShapeDtypeStruct, no allocation); each config
+exposes ``reduced()`` — a ≤2-layer, d_model ≤ 512, ≤4-expert variant of the same
+family — which the CPU smoke tests instantiate for a real forward/train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    citation: str
+    n_layers: int
+    d_model: int
+    n_heads: int            # query heads (0 for attn-free SSM)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # defaults to d_model // n_heads
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    act: str = "swiglu"             # swiglu | gelu
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # --- attention pattern -------------------------------------------------
+    sliding_window: int = 0         # >0: local-attention window size
+    global_every: int = 0           # >0: one full-attention layer every N layers
+    layer_pattern: Tuple[str, ...] = ()  # cycle of per-layer block kinds, e.g.
+                                         # ("rglru", "rglru", "local_attn")
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    # for MoE archs d_ff is the *per-expert* hidden width
+    # --- SSM (Mamba-2 / SSD, arXiv:2405.21060) ------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    # --- VLM (cross-attention image layers) ---------------------------------
+    cross_attn_every: int = 0       # one cross-attn layer every N layers
+    n_patches: int = 0              # stub vision-frontend output length
+    # --- audio enc-dec -------------------------------------------------------
+    n_encoder_layers: int = 0       # >0 → encoder-decoder (whisper)
+    n_audio_frames: int = 0         # stub conv-frontend output length
+    # -------------------------------------------------------------------------
+    max_seq_len: int = 131_072
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        if self.n_heads == 0:
+            return 0
+        return self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def layer_kind(self, layer_idx: int) -> str:
+        """Block kind for layer ``layer_idx``.
+
+        Resolution order: explicit layer_pattern cycle > global_every mix >
+        sliding_window-only > family default.
+        """
+        if self.layer_pattern:
+            return self.layer_pattern[layer_idx % len(self.layer_pattern)]
+        if self.family == "ssm":
+            return "ssd"
+        if self.global_every > 0:
+            # gemma3 style: layers (global_every-1) local then 1 global
+            if (layer_idx + 1) % self.global_every == 0:
+                return "global_attn"
+            return "local_attn"
+        if self.cross_attn_every > 0 and (layer_idx + 1) % self.cross_attn_every == 0:
+            return "cross_attn"
+        if self.sliding_window > 0:
+            return "local_attn"
+        return "global_attn"
+
+    @property
+    def pattern_period(self) -> int:
+        """Length of the repeating layer-kind cycle (scan unit)."""
+        if self.layer_pattern:
+            return len(self.layer_pattern)
+        if self.global_every > 0:
+            return self.global_every
+        if self.cross_attn_every > 0:
+            return self.cross_attn_every
+        return 1
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no layer attends to unbounded history (long_500k eligible)."""
+        if self.family == "ssm":
+            return True
+        kinds = {self.layer_kind(i) for i in range(self.n_layers)}
+        return "global_attn" not in kinds and "cross_attn" not in kinds
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches models.registry.init exactly is
+        asserted in tests for the reduced variants)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d  # lm head
+
+        def attn_params(kv_heads: int) -> int:
+            q = d * self.n_heads * hd
+            kv = 2 * d * kv_heads * hd
+            o = self.n_heads * hd * d
+            b = (self.n_heads * hd + 2 * kv_heads * hd) if self.qkv_bias else 0
+            return q + kv + o + b
+
+        def mlp_params(ff: int) -> int:
+            if self.act == "swiglu":
+                return 3 * d * ff
+            return 2 * d * ff
+
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            total += d  # pre-norm scale
+            if kind in ("global_attn", "local_attn"):
+                total += attn_params(self.n_kv_heads)
+            elif kind == "cross_attn":
+                total += attn_params(self.n_kv_heads)  # cross K/V from patches
+            elif kind == "ssd":
+                d_in = self.ssm_expand * d
+                n_h = d_in // self.ssm_head_dim
+                # in_proj (z, x, B, C, dt) + out_proj + A,D + norm
+                total += d * (2 * d_in + 2 * self.ssm_state + n_h) + d_in * d
+                total += 2 * n_h + d_in
+            elif kind == "rglru":
+                # RG-LRU block (arXiv:2402.19427): linear in/out + gates
+                w = self.ssm_expand * d
+                total += 2 * d * w + w * d + 3 * w
+            total += d  # post/mlp pre-norm scale
+            if self.is_moe and kind != "ssd":
+                total += self.n_experts * mlp_params(self.d_ff) + d * self.n_experts
+            elif kind == "rglru":
+                pass  # rglru block replaces attn only; mlp still counted below
+            if not self.is_moe:
+                total += mlp_params(self.d_ff) if self.d_ff else 0
+        total += d  # final norm
+        # encoder stack (whisper)
+        if self.is_encoder_decoder:
+            enc = 0
+            for _ in range(self.n_encoder_layers):
+                enc += 2 * d + attn_params(self.n_heads) + mlp_params(self.d_ff)
+            total += enc + d
+            # decoder cross-attn (one per decoder layer)
+            total += self.n_layers * (d + attn_params(self.n_heads))
+        return total
+
+    def reduced(self) -> "ArchConfig":
+        """CPU-smoke variant: same family/block pattern, tiny dims."""
+        pat = self.layer_pattern
+        n_layers = max(2, len(pat)) if pat else 2
+        d_model = min(self.d_model, 128)
+        n_heads = min(self.n_heads, 4) if self.n_heads else 0
+        n_kv = max(1, min(self.n_kv_heads, n_heads)) if n_heads else 0
+        return dataclasses.replace(
+            self,
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=32 if n_heads else None,
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            ssm_chunk=16 if self.ssm_state else self.ssm_chunk,
+            sliding_window=min(self.sliding_window, 16),
+            n_patches=min(self.n_patches, 16),
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            n_audio_frames=min(self.n_audio_frames, 32),
+            cross_attn_every=min(self.cross_attn_every, 2) if self.cross_attn_every else 0,
+            global_every=min(self.global_every, 2) if self.global_every else 0,
+            max_seq_len=1024,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def supports_shape(arch: ArchConfig, shape: ShapeConfig) -> bool:
+    """Skip table (documented in DESIGN.md §Arch-applicability).
+
+    long_500k is eligible for sub-quadratic families (SSM/hybrid) and for
+    sliding-window dense archs (gemma3: 5 of 6 layers are 1k-window; the six
+    global layers decode linearly per token over a sequence-sharded cache).
+    Pure full-attention archs and the enc-dec audio model skip it.
+    """
+    if shape.name == "long_500k":
+        return arch.sub_quadratic or (arch.sliding_window > 0 and not arch.is_encoder_decoder)
+    return True

@@ -1,0 +1,20 @@
+"""Config for gemma3-4b — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-4b",
+    family="dense",
+    citation="[hf:google/gemma-3-1b-pt] — 5:1 local:global, 128k context",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262_144,
+    sliding_window=1024,
+    global_every=6,        # 5 local then 1 global
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+GEMMA3_4B = CONFIG

@@ -1,0 +1,18 @@
+"""Config for grok-1-314b — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b",
+    family="moe",
+    citation="[hf:xai-org/grok-1] — 8 experts, top-2",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,            # per-expert hidden width
+    vocab_size=131_072,
+    n_experts=8,
+    experts_per_token=2,
+)
+GROK_1_314B = CONFIG

@@ -1,0 +1,19 @@
+"""Config for llama-3.2-vision-90b — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    citation="[hf:meta-llama/Llama-3.2-11B-Vision] — cross-attn image layers",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,   # 20 of 100 layers are image cross-attention
+    n_patches=1601,       # stub ViT frontend: (1 + 40*40) patch embeddings
+)
+LLAMA_3_2_VISION_90B = CONFIG

@@ -1,0 +1,20 @@
+"""Config for mamba2-370m — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-370m",
+    family="ssm",
+    citation="[arXiv:2405.21060] — SSD (state-space duality)",
+    n_layers=48,
+    d_model=1024,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50_280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=64,
+    tie_embeddings=True,
+)
+MAMBA2_370M = CONFIG

@@ -1,0 +1,107 @@
+"""The paper's own model + experiment configs (GPFL §V).
+
+FEMNIST: MLP with hidden layers (64, 30); batch 64, 20 local iters, η=0.005,
+SGD weight decay 1e-4, momentum 0.1, N=100 clients, K=10 (1SPC) / 5 (2SPC, Dir).
+CIFAR-10: CNN conv(32, 64, 64) + fc(64); batch 50, 40 local iters, η=0.01,
+weight decay 3e-4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallModelConfig:
+    name: str
+    kind: str                     # "mlp" | "cnn"
+    input_shape: Tuple[int, ...]  # per-example
+    num_classes: int
+    hidden: Tuple[int, ...] = ()
+    conv_channels: Tuple[int, ...] = ()
+    fc_width: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FLExperimentConfig:
+    name: str
+    model: SmallModelConfig
+    n_clients: int
+    clients_per_round: int        # K
+    partition: str                # "1spc" | "2spc" | "dir" | "iid"
+    dirichlet_zeta: float = 0.2
+    rounds: int = 500
+    local_batch_size: int = 64
+    local_iters: int = 20
+    lr: float = 0.005
+    weight_decay: float = 1e-4
+    momentum: float = 0.1         # γ in Eq. (1)
+    rho: float = 1.0              # ρ in Eq. (7)
+    selector: str = "gpfl"        # gpfl | random | powd | fedcor
+    seed: int = 0
+    # synthetic-data stand-in knobs (offline container; see DESIGN.md)
+    samples_per_client_mean: int = 226
+    samples_per_client_std: int = 88
+    eval_size: int = 2000
+
+
+FEMNIST_MLP = SmallModelConfig(
+    name="femnist-mlp",
+    kind="mlp",
+    input_shape=(784,),
+    num_classes=62,
+    hidden=(64, 30),
+)
+
+CIFAR10_CNN = SmallModelConfig(
+    name="cifar10-cnn",
+    kind="cnn",
+    input_shape=(32, 32, 3),
+    num_classes=10,
+    conv_channels=(32, 64, 64),
+    fc_width=64,
+)
+
+
+def femnist_experiment(partition: str = "2spc", selector: str = "gpfl",
+                       rounds: int = 500, seed: int = 0) -> FLExperimentConfig:
+    k = 10 if partition == "1spc" else 5
+    return FLExperimentConfig(
+        name=f"femnist-{partition}-{selector}",
+        model=FEMNIST_MLP,
+        n_clients=100,
+        clients_per_round=k,
+        partition=partition,
+        rounds=rounds,
+        local_batch_size=64,
+        local_iters=20,
+        lr=0.005,
+        weight_decay=1e-4,
+        momentum=0.1,
+        selector=selector,
+        seed=seed,
+        samples_per_client_mean=226,
+        samples_per_client_std=88,
+    )
+
+
+def cifar10_experiment(partition: str = "2spc", selector: str = "gpfl",
+                       rounds: int = 2000, seed: int = 0) -> FLExperimentConfig:
+    k = 10 if partition == "1spc" else 5
+    return FLExperimentConfig(
+        name=f"cifar10-{partition}-{selector}",
+        model=CIFAR10_CNN,
+        n_clients=100,
+        clients_per_round=k,
+        partition=partition,
+        rounds=rounds,
+        local_batch_size=50,
+        local_iters=40,
+        lr=0.01,
+        weight_decay=3e-4,
+        momentum=0.1,
+        selector=selector,
+        seed=seed,
+        samples_per_client_mean=946,
+        samples_per_client_std=256,
+    )

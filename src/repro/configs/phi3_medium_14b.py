@@ -1,0 +1,16 @@
+"""Config for phi3-medium-14b — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    citation="[arXiv:2404.14219] — RoPE SwiGLU GQA",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    head_dim=128,
+    d_ff=17920,
+    vocab_size=100_352,
+)
+PHI3_MEDIUM_14B = CONFIG

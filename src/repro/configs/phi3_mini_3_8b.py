@@ -1,0 +1,16 @@
+"""Config for phi3-mini-3.8b — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    citation="[arXiv:2404.14219] — RoPE SwiGLU GQA (MHA: kv=32)",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32_064,
+)
+PHI3_MINI_3_8B = CONFIG

@@ -1,0 +1,18 @@
+"""Config for qwen3-moe-235b-a22b — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    citation="[hf:Qwen/Qwen3-30B-A3B] — 128 experts, top-8",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,             # per-expert hidden width
+    vocab_size=151_936,
+    n_experts=128,
+    experts_per_token=8,
+)
+QWEN3_MOE_235B_A22B = CONFIG

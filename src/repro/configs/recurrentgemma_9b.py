@@ -1,0 +1,20 @@
+"""Config for recurrentgemma-9b — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    citation="[arXiv:2402.19427] — RG-LRU + local attn, 1:2 pattern",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256_000,
+    layer_pattern=("rglru", "rglru", "local_attn"),
+    sliding_window=2048,
+    ssm_expand=1,  # RG-LRU width == d_model for the 9B config
+    tie_embeddings=True,
+)
+RECURRENTGEMMA_9B = CONFIG

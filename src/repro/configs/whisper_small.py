@@ -1,0 +1,20 @@
+"""Config for whisper-small — see citation field for the source."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    citation="[arXiv:2212.04356] — enc-dec, conv frontend (stub)",
+    n_layers=12,           # decoder layers
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51_865,
+    norm="layernorm",
+    act="gelu",
+    n_encoder_layers=12,
+    n_audio_frames=1500,   # stub mel+conv frontend: 30 s → 1500 frames
+)
+WHISPER_SMALL = CONFIG

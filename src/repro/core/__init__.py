@@ -1,0 +1,37 @@
+"""GPFL core: gradient projection (Eq. 3/5), GPCB bandit (Eq. 6-7), reward
+calibration (Eq. 8), and the selector zoo (GPFL + Random/Pow-d/FedCor)."""
+from repro.core.gp import (
+    gp_score_tree,
+    gp_scores_tree,
+    gp_scores_stacked,
+    gp_scores_matrix,
+    gp_scores_jvp,
+    normalize_gp,
+)
+from repro.core.gpcb import (
+    BanditState,
+    init_state,
+    alpha_schedule,
+    gpcb_values,
+    calibrate_reward,
+    select_topk,
+    update_state,
+)
+from repro.core.selector import (
+    RoundFeedback,
+    RandomSelector,
+    GPFLSelector,
+    PowDSelector,
+    FedCorSelector,
+    make_selector,
+    SELECTORS,
+)
+
+__all__ = [
+    "gp_score_tree", "gp_scores_tree", "gp_scores_stacked",
+    "gp_scores_matrix", "gp_scores_jvp", "normalize_gp",
+    "BanditState", "init_state", "alpha_schedule", "gpcb_values",
+    "calibrate_reward", "select_topk", "update_state",
+    "RoundFeedback", "RandomSelector", "PowDSelector", "GPFLSelector",
+    "FedCorSelector", "make_selector", "SELECTORS",
+]

@@ -1,0 +1,85 @@
+"""Gradient Projection (GP) — the paper's data-quality metric (Eq. 3).
+
+    c_i = <∇F(w_i), g> / |g|
+
+where ``g`` is the *global momentum-based gradient direction* from the
+previous round (Eq. 1-2) and ``∇F(w_i)`` is client i's local gradient.
+
+Two equivalent computation paths:
+
+* pytree path (``gp_scores_tree``) — client grads as pytrees; used by the FL
+  simulation where per-client grads are materialised.
+* matrix path (``gp_scores_matrix``) — clients' flattened grads stacked into
+  (K, D); this is the form the Pallas ``gp_projection`` kernel accelerates
+  (one pass over HBM instead of K vdots).
+* jvp path (``gp_scores_jvp``) — scores WITHOUT materialising per-client
+  grads: <∇L_i, g> is the directional derivative of L_i along g, so one
+  forward-mode pass over a per-client loss vector yields every score.  This
+  is the TPU-native beyond-paper formulation (DESIGN.md §2, Scale B).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_dot, tree_global_norm
+
+
+def gp_score_tree(client_grad, direction, dir_norm=None):
+    """Single-client GP (Eq. 3)."""
+    if dir_norm is None:
+        dir_norm = tree_global_norm(direction)
+    return tree_dot(client_grad, direction) / jnp.maximum(dir_norm, 1e-12)
+
+
+def gp_scores_tree(client_grads: Sequence, direction):
+    """GP for a list of client gradient pytrees → (K,) scores."""
+    dn = tree_global_norm(direction)
+    return jnp.stack([gp_score_tree(g, direction, dn) for g in client_grads])
+
+
+def gp_scores_stacked(stacked_grads, direction):
+    """GP when client grads are stacked leafwise (leading client axis)."""
+    dn = tree_global_norm(direction)
+
+    def leaf_dots(g, d):
+        return jnp.einsum("k...,...->k", g.astype(jnp.float32),
+                          d.astype(jnp.float32))
+
+    dots = sum(jax.tree.leaves(jax.tree.map(leaf_dots, stacked_grads,
+                                            direction)))
+    return dots / jnp.maximum(dn, 1e-12)
+
+
+def gp_scores_matrix(grad_matrix, direction_vec, *, use_kernel: bool = False,
+                     interpret: bool = True):
+    """GP from a (K, D) gradient matrix and a (D,) direction.
+
+    ``use_kernel=True`` routes through the Pallas ``gp_projection`` kernel
+    (interpret mode on CPU)."""
+    if use_kernel:
+        from repro.kernels.ops import gp_projection
+        return gp_projection(grad_matrix, direction_vec, interpret=interpret)
+    dn = jnp.linalg.norm(direction_vec.astype(jnp.float32))
+    return (grad_matrix.astype(jnp.float32) @
+            direction_vec.astype(jnp.float32)) / jnp.maximum(dn, 1e-12)
+
+
+def gp_scores_jvp(per_client_loss_fn: Callable, params, direction):
+    """Every client's GP score in ONE forward-mode pass.
+
+    per_client_loss_fn(params) must return a (K,) vector of per-client mean
+    losses.  Then  jvp(per_client_loss_fn, params, direction)  ==
+    (<∇L_i, direction>)_i  — exactly Eq. 3's numerators, K at a time, with no
+    per-client gradient materialisation (K× memory saving).
+    """
+    dn = tree_global_norm(direction)
+    _, tangents = jax.jvp(per_client_loss_fn, (params,), (direction,))
+    return tangents / jnp.maximum(dn, 1e-12)
+
+
+def normalize_gp(scores):
+    """Softmax normalisation c̃ (Eq. 5) — the MAB reward μ."""
+    return jax.nn.softmax(scores.astype(jnp.float32))

@@ -1,0 +1,87 @@
+"""Gradient Projection Confidence Bound (Eq. 6-7) and the bandit state.
+
+    u_i = μ̄_i + α·sqrt(2 ln n / n_i),      α = ρ · t / T
+
+with μ̄_i the running mean of the (re-calibrated, Eq. 8) rewards and n_i the
+selection count of client i.  All state lives in a jit-friendly pytree so the
+datacenter train step can carry it; the FL simulation uses the same code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BanditState(NamedTuple):
+    reward_sum: jnp.ndarray   # (N,) Σ μ_i over rounds where i was selected
+    count: jnp.ndarray        # (N,) n_i — times selected
+    round: jnp.ndarray        # () current round t
+    prev_acc: jnp.ndarray     # () A^{t-1} for Eq. 8
+    prev_loss: jnp.ndarray    # () F(w^{t-1}) for Eq. 8
+
+
+def init_state(n_clients: int) -> BanditState:
+    return BanditState(
+        reward_sum=jnp.zeros((n_clients,), jnp.float32),
+        count=jnp.zeros((n_clients,), jnp.float32),
+        round=jnp.zeros((), jnp.float32),
+        prev_acc=jnp.zeros((), jnp.float32),
+        prev_loss=jnp.zeros((), jnp.float32),
+    )
+
+
+def alpha_schedule(t, total_rounds: int, rho: float = 1.0):
+    """Eq. 7: α = ρ·t/T — exploration weight ramps up over training."""
+    return rho * t / jnp.maximum(1.0, float(total_rounds))
+
+
+def gpcb_values(state: BanditState, total_rounds: int, rho: float = 1.0):
+    """Eq. 6.  Clients never selected get +inf (must-explore), matching the
+    UCB convention."""
+    n = jnp.maximum(state.round, 1.0)
+    mean = state.reward_sum / jnp.maximum(state.count, 1.0)
+    alpha = alpha_schedule(state.round, total_rounds, rho)
+    bonus = alpha * jnp.sqrt(2.0 * jnp.log(n) / jnp.maximum(state.count, 1e-9))
+    u = mean + bonus
+    return jnp.where(state.count > 0, u, jnp.inf)
+
+
+def calibrate_reward(mu, acc, prev_acc, loss, prev_loss):
+    """Eq. 8: reward re-calibration from the global model's progress.
+
+        μ_i ← c̃_i · 2·exp(A^t − A^{t−1})      if A^t ≠ A^{t−1}
+        μ_i ← c̃_i ·   exp(F(w^t) − F(w^{t−1})) otherwise
+
+    (exp args clipped for numeric safety; rewards then clipped to [0, 1] per
+    Assumption 2)."""
+    acc_moved = jnp.abs(acc - prev_acc) > 1e-9
+    factor = jnp.where(
+        acc_moved,
+        2.0 * jnp.exp(jnp.clip(acc - prev_acc, -10.0, 10.0)),
+        jnp.exp(jnp.clip(loss - prev_loss, -10.0, 10.0)),
+    )
+    return jnp.clip(mu * factor, 0.0, 1.0)
+
+
+def select_topk(u, k: int):
+    """Top-K clients by GPCB value → (values, indices)."""
+    return jax.lax.top_k(u, k)
+
+
+def update_state(state: BanditState, selected_mask, rewards, acc, loss
+                 ) -> BanditState:
+    """Record this round: add (calibrated) rewards for selected clients,
+    bump their counts, advance the round counter.
+
+    selected_mask: (N,) float {0,1};  rewards: (N,) pre-masked μ values.
+    """
+    return BanditState(
+        reward_sum=state.reward_sum + selected_mask * rewards,
+        count=state.count + selected_mask,
+        round=state.round + 1.0,
+        prev_acc=jnp.asarray(acc, jnp.float32),
+        prev_loss=jnp.asarray(loss, jnp.float32),
+    )

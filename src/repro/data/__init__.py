@@ -1,0 +1,10 @@
+"""Data pipeline: synthetic datasets, Non-IID partitioners, client stores."""
+from repro.data.synthetic import Dataset, make_dataset, make_femnist_like, \
+    make_cifar_like, lm_token_stream
+from repro.data.partition import partition
+from repro.data.store import ClientStore
+
+__all__ = [
+    "Dataset", "make_dataset", "make_femnist_like", "make_cifar_like",
+    "lm_token_stream", "partition", "ClientStore",
+]

@@ -1,0 +1,78 @@
+"""Non-IID client partitioners (paper §V-A): 1SPC, 2SPC, Dirichlet(ζ), IID.
+
+* ``spc`` (shards-per-client): sort by label, cut into n_clients·spc equal
+  shards, deal ``spc`` shards to each client — balanced sizes, extreme label
+  skew (1SPC ⇒ single-label clients).
+* ``dirichlet``: per-client label distribution q_i ~ Dir(ζ·p).  The paper
+  additionally solves a QP for client sizes (min ‖x‖₂ s.t. Qx = d); we use
+  the standard proportional allocation from the FedCor reference code — the
+  balanced-vs-unbalanced character (their reason for the QP) is preserved.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def partition_iid(labels: np.ndarray, n_clients: int, rng) -> List[np.ndarray]:
+    idx = rng.permutation(len(labels))
+    return [np.sort(s) for s in np.array_split(idx, n_clients)]
+
+
+def partition_spc(labels: np.ndarray, n_clients: int, spc: int, rng
+                  ) -> List[np.ndarray]:
+    """shards-per-client. n_shards = n_clients * spc, all equal size."""
+    n_shards = n_clients * spc
+    order = np.argsort(labels, kind="stable")
+    shard_size = len(labels) // n_shards
+    shards = [order[i * shard_size : (i + 1) * shard_size]
+              for i in range(n_shards)]
+    perm = rng.permutation(n_shards)
+    out = []
+    for c in range(n_clients):
+        mine = [shards[perm[c * spc + j]] for j in range(spc)]
+        out.append(np.sort(np.concatenate(mine)))
+    return out
+
+
+def partition_dirichlet(labels: np.ndarray, n_clients: int, zeta: float, rng,
+                        min_per_client: int = 8) -> List[np.ndarray]:
+    n_classes = int(labels.max()) + 1
+    prior = np.bincount(labels, minlength=n_classes).astype(np.float64)
+    prior = prior / prior.sum()
+    for _ in range(100):
+        q = rng.dirichlet(zeta * prior * n_classes, size=n_clients)  # (n, C)
+        # allocate each class's samples to clients ∝ q[:, c]
+        buckets = [[] for _ in range(n_clients)]
+        for c in range(n_classes):
+            cls_idx = rng.permutation(np.where(labels == c)[0])
+            share = q[:, c] / max(q[:, c].sum(), 1e-12)
+            counts = np.floor(share * len(cls_idx)).astype(int)
+            # distribute remainder
+            rem = len(cls_idx) - counts.sum()
+            if rem > 0:
+                extra = rng.choice(n_clients, size=rem, replace=True, p=share)
+                np.add.at(counts, extra, 1)
+            ofs = 0
+            for i in range(n_clients):
+                buckets[i].append(cls_idx[ofs : ofs + counts[i]])
+                ofs += counts[i]
+        sizes = np.array([sum(len(b) for b in bs) for bs in buckets])
+        if sizes.min() >= min_per_client:
+            break
+    return [np.sort(np.concatenate(bs).astype(np.int64)) for bs in buckets]
+
+
+def partition(name: str, labels: np.ndarray, n_clients: int, *, zeta=0.2,
+              seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    if name == "iid":
+        return partition_iid(labels, n_clients, rng)
+    if name == "1spc":
+        return partition_spc(labels, n_clients, 1, rng)
+    if name == "2spc":
+        return partition_spc(labels, n_clients, 2, rng)
+    if name == "dir":
+        return partition_dirichlet(labels, n_clients, zeta, rng)
+    raise KeyError(name)

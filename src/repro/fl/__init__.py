@@ -1,0 +1,10 @@
+"""FL runtime: client engine, FedAvg server, full simulation driver."""
+from repro.fl.client import make_cohort_trainer, make_cohort_loss_eval
+from repro.fl.server import fedavg, make_evaluator, update_global_direction
+from repro.fl.simulation import RunResult, run_experiment
+
+__all__ = [
+    "make_cohort_trainer", "make_cohort_loss_eval",
+    "fedavg", "make_evaluator", "update_global_direction",
+    "RunResult", "run_experiment",
+]

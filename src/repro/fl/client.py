@@ -1,0 +1,77 @@
+"""Client-side local training engine (paper Eq. 1-2).
+
+The selected cohort trains as ONE compiled computation: ``vmap`` over clients
+of a ``lax.scan`` over local MGD iterations.  Each client runs
+``local_iters`` steps of heavy-ball SGD (γ momentum, weight decay) on
+replacement-sampled local batches.
+
+Returns per client:
+  * final local params  w_i^t
+  * final momentum      d_i^t   — the "momentum-based gradient" GPFL projects
+  * mean local loss (diagnostics / Pow-d probes)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import FLExperimentConfig, SmallModelConfig
+from repro.models import small
+
+
+def make_cohort_trainer(exp: FLExperimentConfig) -> Callable:
+    """Compile once per experiment; reused every round.
+
+    signature: (params, x, y, sizes, rng) -> (w_i, d_i, loss_i) with leading
+    cohort dimension on x/y/sizes and on every output."""
+    cfg = exp.model
+
+    def one_client(params0, x, y, size, rng):
+        def step(carry, rng_i):
+            params, d = carry
+            idx = jax.random.randint(rng_i, (exp.local_batch_size,), 0,
+                                     jnp.maximum(size, 1))
+            batch = {"x": x[idx], "y": y[idx]}
+            loss, grads = jax.value_and_grad(small.loss_fn)(params, batch, cfg)
+
+            def upd(p, g, m):
+                gf = g + exp.weight_decay * p
+                m_new = exp.momentum * m + gf          # Eq. (1)
+                return p - exp.lr * m_new, m_new       # Eq. (2)
+
+            out = jax.tree.map(upd, params, grads, d)
+            params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+            d = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+            return (params, d), loss
+
+        d0 = jax.tree.map(jnp.zeros_like, params0)
+        rngs = jax.random.split(rng, exp.local_iters)
+        (params, d), losses = jax.lax.scan(step, (params0, d0), rngs)
+        return params, d, jnp.mean(losses)
+
+    cohort = jax.vmap(one_client, in_axes=(None, 0, 0, 0, 0))
+    return jax.jit(cohort)
+
+
+def make_cohort_loss_eval(exp: FLExperimentConfig, batch_cap: int = 256
+                          ) -> Callable:
+    """Local loss of the *global* params on each client's data (Pow-d probes,
+    FedCor's all-client monitoring).  Evaluates up to batch_cap samples."""
+    cfg = exp.model
+
+    def one_client(params, x, y, size):
+        n = x.shape[0]
+        take = min(batch_cap, n)
+        logits = small.forward(params, x[:take], cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:take, None], axis=-1)[:, 0]
+        per = lse - gold
+        mask = (jnp.arange(take) < size).astype(jnp.float32)
+        return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    return jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0, 0)))

@@ -1,0 +1,54 @@
+"""Server side: FedAvg aggregation, the global momentum direction GPFL
+projects onto, and global-model evaluation."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import FLExperimentConfig
+from repro.models import small
+from repro.utils.pytree import tree_axpy, tree_scale, tree_sub
+
+
+@jax.jit
+def fedavg(cohort_params):
+    """w^t = mean_i w_i^t over the selected cohort (leading cohort dim)."""
+    return jax.tree.map(lambda w: jnp.mean(w, axis=0), cohort_params)
+
+
+def update_global_direction(direction, w_prev, w_new, lr: float,
+                            gamma: float):
+    """Server-side momentum-based gradient (the projection target of Eq. 3):
+
+        g_eff = (w^{t-1} − w^t) / η        (aggregated descent this round)
+        d     = γ d + g_eff                (global MGD accumulation)
+    """
+    g_eff = tree_scale(tree_sub(w_prev, w_new), 1.0 / max(lr, 1e-12))
+    if direction is None:
+        return g_eff
+    return jax.tree.map(lambda d, g: gamma * d + g, direction, g_eff)
+
+
+def make_evaluator(exp: FLExperimentConfig, eval_x, eval_y,
+                   batch: int = 512) -> Callable:
+    cfg = exp.model
+    n = eval_x.shape[0]
+
+    @jax.jit
+    def evaluate(params):
+        correct = jnp.zeros((), jnp.float32)
+        loss_sum = jnp.zeros((), jnp.float32)
+        for ofs in range(0, n, batch):
+            xb = eval_x[ofs : ofs + batch]
+            yb = eval_y[ofs : ofs + batch]
+            logits = small.forward(params, xb, cfg).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+            loss_sum += jnp.sum(lse - gold)
+            correct += jnp.sum(
+                (jnp.argmax(logits, -1) == yb).astype(jnp.float32))
+        return correct / n, loss_sum / n
+
+    return evaluate

@@ -1,0 +1,162 @@
+"""End-to-end FL simulation (paper Algorithm 1 + all baselines).
+
+One ``run_experiment(FLExperimentConfig)`` call reproduces one cell of the
+paper's Table II: build the synthetic dataset, partition it (1SPC/2SPC/Dir),
+run T rounds of select → local-train (vmapped cohort) → FedAvg → evaluate,
+and return the full metric history (accuracy curve, selection log, wall time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import FLExperimentConfig
+from repro.core import gp as gp_mod
+from repro.core.selector import RoundFeedback, make_selector, PowDSelector
+from repro.data import ClientStore, make_dataset, partition
+from repro.fl.client import make_cohort_trainer, make_cohort_loss_eval
+from repro.fl.server import fedavg, make_evaluator, update_global_direction
+from repro.models import small
+
+
+@dataclasses.dataclass
+class RunResult:
+    config: FLExperimentConfig
+    accuracy: np.ndarray          # (T,)
+    loss: np.ndarray              # (T,)
+    selections: np.ndarray        # (T, K)
+    round_time_s: np.ndarray      # (T,)
+    selection_counts: np.ndarray  # (N,)
+    coverage: np.ndarray          # (T,) fraction of clients seen ≥1×
+
+    def final_accuracy(self, last: int = 10) -> float:
+        return float(self.accuracy[-last:].mean())
+
+    def accuracy_at(self, frac: float) -> float:
+        i = max(0, int(len(self.accuracy) * frac) - 1)
+        return float(self.accuracy[i])
+
+
+def _build_data(exp: FLExperimentConfig, seed: int):
+    total = exp.n_clients * exp.samples_per_client_mean
+    data = make_dataset(exp.model.name, total + exp.eval_size, seed=seed)
+    train_x, train_y = data.x[: total], data.y[: total]
+    eval_x, eval_y = data.x[total :], data.y[total :]
+    from repro.data.synthetic import Dataset
+    train = Dataset(x=train_x, y=train_y, num_classes=data.num_classes)
+    parts = partition(exp.partition, train_y, exp.n_clients,
+                      zeta=exp.dirichlet_zeta, seed=seed)
+    store = ClientStore(train, parts)
+    return store, jnp.asarray(eval_x), jnp.asarray(eval_y)
+
+
+def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
+                   use_gp_kernel: bool = False) -> RunResult:
+    rng_np = np.random.default_rng(exp.seed)
+    key = jax.random.key(exp.seed)
+
+    store, eval_x, eval_y = _build_data(exp, exp.seed)
+    key, k0 = jax.random.split(key)
+    params = small.init(k0, exp.model)
+
+    trainer = make_cohort_trainer(exp)
+    loss_eval = make_cohort_loss_eval(exp)
+    evaluate = make_evaluator(exp, eval_x, eval_y)
+    selector = make_selector(exp.selector, store.n_clients,
+                             exp.clients_per_round, exp.rounds, rho=exp.rho)
+
+    N, K, T = store.n_clients, exp.clients_per_round, exp.rounds
+    direction = None
+
+    # ---- initialization phase (Algorithm 1): every client trains once ----
+    if hasattr(selector, "seed_gp"):
+        all_momenta = []
+        chunk = 25
+        key, kinit = jax.random.split(key)
+        for ofs in range(0, N, chunk):
+            ids = np.arange(ofs, min(ofs + chunk, N))
+            x, y, sizes = store.gather(ids)
+            rngs = jax.random.split(jax.random.fold_in(kinit, ofs), len(ids))
+            _, d_i, _ = trainer(params, x, y, sizes, rngs)
+            all_momenta.append(d_i)
+        momenta = jax.tree.map(lambda *xs: jnp.concatenate(xs), *all_momenta)
+        direction = jax.tree.map(lambda m: jnp.mean(m, axis=0), momenta)
+        gp_all = gp_mod.gp_scores_stacked(momenta, direction)
+        selector.seed_gp(np.asarray(gp_all))
+        del momenta, all_momenta
+
+    acc_hist, loss_hist, sel_hist, time_hist = [], [], [], []
+    counts = np.zeros(N, np.int64)
+    coverage = []
+    seen = np.zeros(N, bool)
+
+    for t in range(T):
+        t0 = time.perf_counter()
+
+        # ---- selection (pre- or post- style per selector) ----
+        if isinstance(selector, PowDSelector):
+            cands = selector.propose_candidates(rng_np)
+            x, y, sizes = store.gather(cands)
+            cand_losses = loss_eval(params, x, y, sizes)
+            selector.receive_candidate_losses(np.asarray(cand_losses))
+        all_losses = None
+        if getattr(selector, "needs_all_losses", False):
+            x, y, sizes = store.gather(np.arange(N))
+            all_losses = np.asarray(loss_eval(params, x, y, sizes))
+        ids = np.asarray(selector.select(rng_np, t))
+
+        # ---- cohort local training (one compiled vmap) ----
+        x, y, sizes = store.gather(ids)
+        key, kt = jax.random.split(key)
+        rngs = jax.random.split(kt, len(ids))
+        w_i, d_i, local_losses = trainer(params, x, y, sizes, rngs)
+
+        # ---- GP scores vs the global momentum direction (Eq. 3) ----
+        if direction is not None:
+            if use_gp_kernel:
+                from repro.kernels.ops import gp_projection_tree
+                gp_scores = gp_projection_tree(d_i, direction)
+            else:
+                gp_scores = gp_mod.gp_scores_stacked(d_i, direction)
+            gp_scores = np.asarray(gp_scores)
+        else:
+            gp_scores = np.zeros(len(ids), np.float32)
+
+        # ---- FedAvg + global direction update ----
+        w_prev = params
+        params = fedavg(w_i)
+        direction = update_global_direction(direction, w_prev, params,
+                                            exp.lr, exp.momentum)
+
+        # ---- evaluate + bandit feedback ----
+        acc, gl_loss = evaluate(params)
+        acc, gl_loss = float(acc), float(gl_loss)
+        selector.observe(RoundFeedback(
+            round_idx=t, selected=ids, gp_scores=gp_scores,
+            global_acc=acc, global_loss=gl_loss, client_losses=all_losses))
+
+        counts[ids] += 1
+        seen[ids] = True
+        acc_hist.append(acc)
+        loss_hist.append(gl_loss)
+        sel_hist.append(ids)
+        coverage.append(seen.mean())
+        time_hist.append(time.perf_counter() - t0)
+        if log_every and (t + 1) % log_every == 0:
+            print(f"[{exp.name}] round {t+1}/{T} acc={acc:.4f} "
+                  f"loss={gl_loss:.4f} cov={seen.mean():.2f}")
+
+    return RunResult(
+        config=exp,
+        accuracy=np.asarray(acc_hist, np.float32),
+        loss=np.asarray(loss_hist, np.float32),
+        selections=np.asarray(sel_hist),
+        round_time_s=np.asarray(time_hist, np.float32),
+        selection_counts=counts,
+        coverage=np.asarray(coverage, np.float32),
+    )

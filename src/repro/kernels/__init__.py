@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles.
+
+Kernels: gp_projection (GPFL Eq. 3 scores, one HBM pass), momentum (fused
+MGD Eq. 1-2), rmsnorm, flash_attention (causal/sliding-window)."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

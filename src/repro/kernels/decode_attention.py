@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: single-token decode attention against a KV cache.
+
+The decode_32k / long_500k serve steps are memory-bound on streaming the
+cache (roofline table: memory-dominated for every arch).  This kernel fuses
+score + online-softmax + weighted-sum into ONE pass over the cache tiles —
+the cache is read exactly once and no (B, H, S) score tensor ever
+materialises in HBM.
+
+Layout: q (B, H, hd) one token per sequence; cache k/v (B, S, H, hd).
+Grid: (B·H, S/BLOCK_S), cache tiles innermost; running max/denominator/
+accumulator in VMEM scratch.  ``valid_len`` masks the unwritten cache tail.
+GQA: expand kv heads before the call (same convention as flash_attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_s, n_s):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale                # (1, hd)
+    k = k_ref[0].astype(jnp.float32)                        # (bs, hd)
+    v = v_ref[0].astype(jnp.float32)                        # (bs, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bs)
+    pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, valid_len, *, block_s: int = 512,
+                            interpret: bool = True):
+    """q: (B, H, hd); k, v: (B, S, H, hd); valid_len: (B,) int32 — number of
+    live cache positions per sequence.  Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    S = k.shape[1]
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    n_s = Sp // block_s
+    scale = hd ** -0.5
+
+    qf = q.reshape(B * H, 1, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    lens = jnp.repeat(jnp.minimum(valid_len, S).astype(jnp.int32), H)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_s=block_s, n_s=n_s),
+        grid=(B * H, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, lens)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: GP scores for K clients in one HBM pass.
+
+Computes  dots = G @ g  and  |g|²  simultaneously, tiling the D axis through
+VMEM — the direction vector is streamed exactly once, vs K separate vdots
+which re-read it K times (GPFL's score step is bandwidth-bound: 2 bytes/param
+per client-group at ~10⁸-10¹¹ params; see DESIGN.md §4).
+
+Grid: (D // BLOCK_D,).  Per step the kernel loads a (K, BLOCK_D) tile of
+grads + a (BLOCK_D,) tile of the direction, does an MXU matvec, and
+accumulates into the (K,) dots output and the (1,) squared-norm output —
+both mapped to the same block every step (revisiting accumulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_D = 2048
+
+
+def _kernel(g_ref, d_ref, dots_ref, nsq_ref):
+    step = pl.program_id(0)
+    gtile = g_ref[...].astype(jnp.float32)      # (K, BD)
+    dtile = d_ref[...].astype(jnp.float32)      # (1, BD)
+
+    @pl.when(step == 0)
+    def _init():
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+        nsq_ref[...] = jnp.zeros_like(nsq_ref)
+
+    dots_ref[...] += jnp.sum(gtile * dtile, axis=1, keepdims=True)  # (K, 1)
+    nsq_ref[...] += jnp.sum(dtile * dtile, axis=1, keepdims=True)   # (1, 1)
+
+
+def gp_projection_pallas(grads, direction, *, block_d: int = DEFAULT_BLOCK_D,
+                         interpret: bool = True):
+    """grads (K, D), direction (D,) → (K,) GP scores."""
+    K, D = grads.shape
+    block_d = min(block_d, D)
+    pad = (-D) % block_d
+    if pad:
+        grads = jnp.pad(grads, ((0, 0), (0, pad)))
+        direction = jnp.pad(direction, (0, pad))
+    Dp = D + pad
+    d2 = direction.reshape(1, Dp)
+
+    dots, nsq = pl.pallas_call(
+        _kernel,
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(grads, d2)
+    return dots[:, 0] / jnp.maximum(jnp.sqrt(nsq[0, 0]), 1e-12)

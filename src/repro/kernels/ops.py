@@ -1,0 +1,88 @@
+"""jit'd public wrappers around the Pallas kernels (+ pytree adapters).
+
+``interpret=True`` everywhere by default: this container is CPU-only; on a
+real TPU deployment flip interpret=False (the kernels are written against
+TPU BlockSpec/VMEM semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gp_projection import gp_projection_pallas
+from repro.kernels.momentum import fused_momentum_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.utils.pytree import flatten_to_vector
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
+def gp_projection(grads, direction, *, block_d: int = 2048,
+                  interpret: bool = True):
+    """(K, D) grads × (D,) direction → (K,) GP scores (Eq. 3)."""
+    return gp_projection_pallas(grads, direction, block_d=block_d,
+                                interpret=interpret)
+
+
+def gp_projection_tree(stacked_grads, direction_tree, *, interpret=True):
+    """Pytree adapter: stacked client grads (leading K axis on every leaf) +
+    direction pytree → (K,) scores, via the flat kernel."""
+    K = jax.tree.leaves(stacked_grads)[0].shape[0]
+    gm = jnp.stack([
+        flatten_to_vector(jax.tree.map(lambda a: a[i], stacked_grads))
+        for i in range(K)
+    ])
+    dv = flatten_to_vector(direction_tree)
+    return gp_projection(gm, dv, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "weight_decay", "interpret"))
+def fused_momentum(p, g, m, *, lr, gamma=0.9, weight_decay=0.0,
+                   interpret: bool = True):
+    """Flat fused MGD update (Eq. 1-2)."""
+    return fused_momentum_pallas(p, g, m, lr=lr, gamma=gamma,
+                                 weight_decay=weight_decay,
+                                 interpret=interpret)
+
+
+def fused_momentum_tree(params, grads, momentum, *, lr, gamma=0.9,
+                        weight_decay=0.0, interpret: bool = True):
+    """Leafwise fused MGD over parameter pytrees → (params, momentum)."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(momentum)
+    new_p, new_m = [], []
+    for p, g, m in zip(flat_p, flat_g, flat_m):
+        pn, mn = fused_momentum(p.reshape(-1), g.reshape(-1), m.reshape(-1),
+                                lr=lr, gamma=gamma, weight_decay=weight_decay,
+                                interpret=interpret)
+        new_p.append(pn.reshape(p.shape))
+        new_m.append(mn.reshape(m.shape))
+    return (jax.tree.unflatten(treedef, new_p),
+            jax.tree.unflatten(treedef, new_m))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool = True):
+    return rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret: bool = True):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, valid_len, *, block_s=512,
+                     interpret: bool = True):
+    """One-token decode attention over a KV cache (see decode_attention.py)."""
+    return decode_attention_pallas(q, k, v, valid_len, block_s=block_s,
+                                   interpret=interpret)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth —
+kernel tests sweep shapes/dtypes and assert_allclose against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gp_projection_ref(grads, direction):
+    """grads (K, D), direction (D,) → GP scores (K,) = G·g / |g| (Eq. 3)."""
+    g32 = grads.astype(jnp.float32)
+    d32 = direction.astype(jnp.float32)
+    dots = g32 @ d32
+    return dots / jnp.maximum(jnp.linalg.norm(d32), 1e-12)
+
+
+def momentum_ref(p, g, m, *, lr, gamma, weight_decay=0.0):
+    """Fused MGD update (Eq. 1-2) on flat vectors → (p_new, m_new)."""
+    gf = g.astype(jnp.float32)
+    if weight_decay:
+        gf = gf + weight_decay * p.astype(jnp.float32)
+    m_new = gamma * m.astype(jnp.float32) + gf
+    p_new = p.astype(jnp.float32) - lr * m_new
+    return p_new.astype(p.dtype), m_new
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """x (..., D), scale (D,)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def decode_attention_ref(q, k, v, valid_len):
+    """q (B,H,hd); k,v (B,S,H,hd); valid_len (B,) → (B,H,hd)."""
+    B, S, H, hd = k.shape
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    pos = jnp.arange(S)
+    live = pos[None, :] < valid_len[:, None]
+    s = jnp.where(live[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v (B, S, H, hd) — plain softmax attention oracle."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qp = jnp.arange(S)
+    valid = jnp.ones((S, S), bool)
+    if causal:
+        valid &= qp[None, :] <= qp[:, None]
+    if window > 0:
+        valid &= qp[None, :] > qp[:, None] - window
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

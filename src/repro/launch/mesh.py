@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16×16), 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.  A FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_test_mesh(data: int = 2, model: int = 2, *,
+                       multi_pod: bool = False):
+    """Small mesh over however many (forced-host) devices tests configured."""
+    if multi_pod:
+        return jax.make_mesh((2, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# hardware constants for the roofline model (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

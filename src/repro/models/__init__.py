@@ -1,0 +1,5 @@
+"""Model zoo: generic decoder stack, whisper enc-dec, and the paper's small
+models.  Use ``repro.models.registry.build(cfg)`` for the uniform API."""
+from repro.models.registry import ModelApi, build, input_specs, concrete_inputs
+
+__all__ = ["ModelApi", "build", "input_specs", "concrete_inputs"]

@@ -1,0 +1,157 @@
+"""Schema-driven parameter system.
+
+Every block declares its parameters once as a ``Schema`` — a nested dict of
+``ParamDef(shape, logical_axes, init)``.  From one schema we derive, with no
+possibility of drift:
+
+* ``init_from_schema``   — the actual f32/bf16 parameter pytree,
+* ``specs_from_schema``  — the matching ``PartitionSpec`` pytree (via logical
+  axis rules, MaxText-style),
+* ``abstract_from_schema`` — ShapeDtypeStructs for the dry-run.
+
+Stacked (scanned) layers add a leading ``"layers"`` logical axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | small_normal
+    scale: float = 1.0               # multiplier on the fan-in normal std
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict  # nested dict[str, ParamDef | Schema]
+
+
+def _init_leaf(key, d: ParamDef, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[0] if len(d.shape) >= 1 else 1
+    if len(d.shape) >= 2:
+        fan_in = math.prod(d.shape[:-1])
+    std = d.scale / math.sqrt(max(1, fan_in))
+    if d.init == "small_normal":
+        std = 0.02 * d.scale
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_schema(rng, schema: Schema, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_from_schema(schema: Schema, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def specs_from_schema(schema: Schema, rules: dict):
+    """Map logical axes → mesh axes.  ``rules`` e.g. {"ff": "model", ...};
+    unmapped logical axes are unsharded (None)."""
+
+    def one(d: ParamDef):
+        return P(*[rules.get(a) for a in d.axes])
+
+    return jax.tree.map(one, schema, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def stack_schema(schema: Schema, n: int) -> Schema:
+    """Prepend a scanned ``layers`` axis to every param in the schema."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def schema_param_count(schema: Schema) -> int:
+    return sum(
+        math.prod(d.shape)
+        for d in jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, ParamDef))
+    )
+
+
+# ---------------------------------------------------------------------------
+# logical-axis sharding rules
+# ---------------------------------------------------------------------------
+
+# Default production rules for the (pod, data, model) / (data, model) meshes.
+# Logical names used across the model zoo:
+#   batch   — activation batch dim            → (pod, data)
+#   seq     — activation sequence dim         → None (replicated)
+#   cache_seq — decode KV-cache sequence dim  → None, or "data" for long_500k
+#   embed   — d_model dim                     → None (activations) / None (params)
+#   heads   — attention head dim              → model
+#   kv_heads — kv head dim                    → model when divisible else None
+#   ff      — mlp hidden dim                  → model
+#   vocab   — embedding/vocab dim             → model
+#   experts — MoE expert dim                  → model (+ optionally data)
+#   expert_ff — per-expert hidden             → None or model
+#   lru     — RG-LRU / SSM inner width        → model
+#   layers  — scanned layer stack dim         → None
+
+
+def default_rules(*, multi_pod: bool = False, kv_shardable: bool = True,
+                  shard_cache_seq: bool = False, experts_on_data: bool = False):
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    rules = {
+        "batch": batch_axes if len(batch_axes) > 1 else batch_axes[0],
+        "seq": None,
+        "act_seq": None,  # residual-stream seq dim; "model" = sequence parallelism
+        "cache_seq": "data" if shard_cache_seq else None,
+        "cache_batch": None if shard_cache_seq else (
+            batch_axes if len(batch_axes) > 1 else batch_axes[0]),
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model" if kv_shardable else None,
+        "ff": "model",
+        "vocab": "model",
+        "experts": "data" if experts_on_data else None,
+        "expert_ff": "model",
+        "expert_ff_act": None,
+        "lru": "model",
+        "ssm_heads": "model",
+        "layers": None,
+        "patches": None,
+        "frames": None,
+    }
+    return rules
+
+
+def logical_spec(axes: Tuple[Optional[str], ...], rules: Optional[dict]) -> P:
+    if rules is None:
+        return P()
+    return P(*[rules.get(a) for a in axes])
+
+
+def shard(x, axes: Tuple[Optional[str], ...], rules: Optional[dict]):
+    """with_sharding_constraint by logical axis names.  No-op when rules is
+    None or maps every named axis to None (e.g. CPU tests passing only
+    routing knobs like _moe_groups)."""
+    if rules is None:
+        return x
+    if all(rules.get(a) is None for a in axes if a is not None):
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_spec(axes, rules))

@@ -1,0 +1,489 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full / sliding-window /
+cross), SwiGLU-or-GeLU MLP, and top-k MoE.  Pure JAX, schema-driven params.
+
+Attention comes in two interchangeable implementations:
+
+* ``attend_chunked`` — flash-style online-softmax over KV chunks (lax.scan),
+  O(S·chunk) live memory.  This is the default lowering path (the dry-run /
+  CPU path) and the jnp oracle for the Pallas flash kernel.
+* ``repro.kernels.flash_attention`` — the Pallas TPU kernel (VMEM-tiled),
+  validated against ``attend_chunked`` in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamDef, Schema, shard
+
+NEG_INF = -1e30  # large-but-finite: fully-masked rows stay NaN-free
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_schema(cfg: ArchConfig, d: Optional[int] = None) -> Schema:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDef((d,), ("embed",), "ones"),
+            "bias": ParamDef((d,), ("embed",), "zeros"),
+        }
+    return {"scale": ParamDef((d,), ("embed",), "ones")}
+
+
+def apply_norm(p, x, cfg: ArchConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg: ArchConfig, cross: bool = False) -> Schema:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    s: Schema = {
+        "wq": ParamDef((d, nh, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((nh, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((nh, hd), ("heads", "head_dim"), "zeros")
+        s["bk"] = ParamDef((nkv, hd), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = ParamDef((nkv, hd), ("kv_heads", "head_dim"), "zeros")
+    return s
+
+
+def _qkv(p, x, kv_x, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _expand_kv(k, n_heads: int):
+    """GQA: repeat kv heads to match query heads."""
+    nkv = k.shape[-2]
+    if nkv == n_heads:
+        return k
+    rep = n_heads // nkv
+    return jnp.repeat(k, rep, axis=-2)
+
+
+def attend_chunked(q, k, v, *, causal: bool, window: int = 0,
+                   q_offset: int = 0, chunk: int = 512, rules=None):
+    """Flash-style attention: online softmax over KV chunks.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, Hkv, hd).  window>0 ⇒ sliding-window
+    (each query attends to keys in (pos-window, pos]).  q_offset is the
+    absolute position of q[0] relative to k[0] (decode: Skv-1).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = hd ** -0.5
+    qf = (q * scale).astype(q.dtype)
+
+    chunk = min(chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, cidx = xs
+        kv_pos = cidx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb,
+                       preferred_element_type=jnp.float32)
+        # mask: padding, causality, sliding window
+        valid = (kv_pos < Skv)[None, None, None, :]
+        if causal:
+            valid = valid & (kv_pos[None, None, None, :]
+                             <= q_pos[None, None, :, None])
+        if window > 0:
+            valid = valid & (kv_pos[None, None, None, :]
+                             > q_pos[None, None, :, None] - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, hd)
+
+
+def attend_dense(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0,
+                 kv_valid_len=None):
+    """One-shot attention (decode path: Sq small).  kv_valid_len masks a
+    partially-filled cache."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * hd ** -0.5, k,
+                   preferred_element_type=jnp.float32)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    valid = jnp.ones((Sq, Skv), bool)
+    if causal:
+        valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        valid = valid & (kv_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    if kv_valid_len is not None:
+        live = kv_pos[None, :] < kv_valid_len[:, None]  # (B, Skv)
+        s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)
+
+
+def attention_apply(p, x, cfg: ArchConfig, *, kind: str, positions=None,
+                    kv_x=None, rules=None, chunk: int = 512):
+    """Self-attention over a full sequence (train / prefill), or cross-attn
+    (kind == "cross_attn", kv_x supplies K/V source, no causal mask)."""
+    B, S, _ = x.shape
+    cross = kind == "cross_attn"
+    src = kv_x if cross else x
+    q, k, v = _qkv(p, x, src, cfg)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("batch", "seq", "heads", "head_dim"), rules)
+    k = shard(k, ("batch", "seq", "kv_heads", "head_dim"), rules)
+    v = shard(v, ("batch", "seq", "kv_heads", "head_dim"), rules)
+    window = cfg.sliding_window if kind == "local_attn" else 0
+    causal = not cross and kind != "encoder_attn"
+    out = attend_chunked(q, k, v, causal=causal, window=window, chunk=chunk,
+                         rules=rules)
+    out = shard(out, ("batch", "seq", "heads", "head_dim"), rules)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(y, ("batch", "act_seq", "embed"), rules)
+
+
+# --- decode (KV cache) ------------------------------------------------------
+
+def attn_cache_init(cfg: ArchConfig, kind: str, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16):
+    """Local layers keep a rotating window-sized cache; global layers keep the
+    full sequence."""
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    size = min(cfg.sliding_window, seq_len) if kind == "local_attn" else seq_len
+    return {
+        "k": jnp.zeros((batch, size, nkv, hd), dtype),
+        "v": jnp.zeros((batch, size, nkv, hd), dtype),
+    }
+
+
+def attn_cache_spec(cfg: ArchConfig, kind: str, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16):
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    size = min(cfg.sliding_window, seq_len) if kind == "local_attn" else seq_len
+    shp = (batch, size, nkv, hd)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+def attention_decode(p, x, cache, pos, cfg: ArchConfig, *, kind: str,
+                     rules=None):
+    """One-token decode: x (B, 1, d), pos scalar int32 — returns (y, cache).
+
+    The cache holds RoPE'd keys (rotation applied at write time with absolute
+    positions, the standard TPU serving layout)."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, x, cfg)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    size = cache["k"].shape[1]
+    slot = jnp.mod(pos, size) if kind == "local_attn" else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    ck = shard(ck, ("cache_batch", "cache_seq", "kv_heads", "head_dim"), rules)
+    cv = shard(cv, ("cache_batch", "cache_seq", "kv_heads", "head_dim"), rules)
+    if kind == "local_attn":
+        # slots valid: min(pos+1, size); window masking is implicit in the
+        # rotating buffer (it never holds anything older than `size`).
+        valid = jnp.minimum(pos + 1, size)
+        out = attend_dense(q, ck, cv, causal=False,
+                           kv_valid_len=jnp.full((B,), valid))
+    else:
+        out = attend_dense(q, ck, cv, causal=False,
+                           kv_valid_len=jnp.full((B,), pos + 1))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+def cross_attention_decode(p, x, cache, cfg: ArchConfig, rules=None):
+    """Cross-attn during decode: K/V precomputed from patches at prefill time
+    and stored in the cache."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    out = attend_dense(q, cache["k"], cache["v"], causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y
+
+
+def cross_cache_init(p, patches, cfg: ArchConfig):
+    """Precompute cross-attn K/V from the (stub) modality embeddings."""
+    k = jnp.einsum("bsd,dhk->bshk", patches, p["wk"].astype(patches.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", patches, p["wv"].astype(patches.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg: ArchConfig) -> Schema:
+    d, ff = cfg.d_model, cfg.d_ff
+    s: Schema = {
+        "w_in": ParamDef((d, ff), ("embed", "ff")),
+        "w_out": ParamDef((ff, d), ("ff", "embed")),
+    }
+    if cfg.act == "swiglu":
+        s["w_gate"] = ParamDef((d, ff), ("embed", "ff"))
+    return s
+
+
+def mlp_apply(p, x, cfg: ArchConfig, rules=None):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+    h = shard(h, ("batch", "seq", "ff"), rules)
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(x.dtype))
+    return shard(y, ("batch", "act_seq", "embed"), rules)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity-bounded gather dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_schema(cfg: ArchConfig) -> Schema:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, e), ("embed", None), "small_normal"),
+        "w_in": ParamDef((e, d, ff), ("experts", "embed", "expert_ff")),
+        "w_gate": ParamDef((e, d, ff), ("experts", "embed", "expert_ff")),
+        "w_out": ParamDef((e, ff, d), ("experts", "expert_ff", "embed")),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEMetrics:
+    load_balance_loss: jnp.ndarray
+    router_z_loss: jnp.ndarray
+    drop_fraction: jnp.ndarray
+
+
+def moe_apply(p, x, cfg: ArchConfig, *, capacity_factor: float = 1.25,
+              rules=None, unroll: bool = False):
+    """Top-k MoE: group-local, capacity-bounded, sort-free dispatch.
+
+    Tokens are partitioned into G *groups* aligned with the data mesh axis
+    (rules["_moe_groups"]) so every routing sort/scatter is group-local —
+    GSPMD never sees a cross-shard scatter (which it would realise as a
+    replicated buffer + giant all-reduce; observed 1.7 TB temp on
+    qwen3-moe before this structure).  The dispatch buffer is 2-D sharded
+    (groups → data, experts → model) and each group is processed in M
+    sequential token-chunks (rules["_moe_chunks"]) to bound the transient
+    dispatch buffers.  Dispatch/combine are gathers (zero FLOPs), not the
+    GShard one-hot einsum, which would dominate the compute roofline
+    (DESIGN.md §4).  Returns (y, MoEMetrics).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    capacity_factor = float((rules or {}).get("_moe_cf", capacity_factor))
+    G = int((rules or {}).get("_moe_groups", 1) or 1)
+    if T % G:
+        G = 1
+    M = int((rules or {}).get("_moe_chunks", 1) or 1)
+    Tg = T // G
+    if Tg % M:
+        M = 1
+    Tc = Tg // M  # tokens per (group, chunk)
+    capacity = int(max(k, capacity_factor * Tc * k / E))
+
+    xg = x.reshape(G, M, Tc, d)
+    xg = shard(xg, ("batch", None, None, "embed"), rules)
+
+    # Per-layer weight re-shard INSIDE the (scanned) block: expert weights are
+    # stored ff-sharded over the data axis (so the 235B stack fits), but the
+    # expert einsum needs full ff rows.  Constraining the *sliced* per-layer
+    # weights here forces GSPMD to gather one layer's ff slices transiently
+    # inside the loop — without this it hoists a full-stack f32 all-gather
+    # out of the scan (~300 GB for qwen3).
+    w_in = shard(p["w_in"].astype(x.dtype),
+                 ("experts", "embed", "expert_ff_act"), rules)
+    w_gate = shard(p["w_gate"].astype(x.dtype),
+                   ("experts", "embed", "expert_ff_act"), rules)
+    w_out = shard(p["w_out"].astype(x.dtype),
+                  ("experts", "expert_ff_act", "embed"), rules)
+
+    def _dispatch_local(xc, slot):
+        """Group-LOCAL scatter into capacity buffers.  Runs under shard_map
+        (manual over the batch axes) so GSPMD never sees the data-dependent
+        scatter — it would otherwise replicate the (G, Tc·k, d) updates on
+        every device (observed as 8.6 GB f32 broadcasts)."""
+        upd = jnp.repeat(xc, k, axis=1)                      # (Gl, Tc·k, d)
+        buf = jnp.zeros((xc.shape[0], E * capacity + 1, d), x.dtype)
+        buf = jax.vmap(
+            lambda b, sl, u: b.at[sl].set(u, mode="drop"))(buf, slot, upd)
+        return buf[:, : E * capacity]
+
+    def _combine_local(ybf, slot, w):
+        """Group-LOCAL gather of expert outputs back to token order."""
+        per_slot = jax.vmap(lambda yg, sl: jnp.take(yg, sl, axis=0,
+                                                    mode="clip"))(ybf, slot)
+        Gl, Tck = slot.shape
+        return (per_slot * w[:, :, None]).reshape(Gl, Tck // k, k, d).sum(2)
+
+    def _manual(fn, n_in):
+        """shard_map wrapper over the batch mesh axes (model stays auto)."""
+        mesh = jax.sharding.get_abstract_mesh()
+        baxes = (rules or {}).get("batch") if rules else None
+        if not baxes or mesh is None or mesh.empty or G == 1:
+            return fn
+        baxes = (baxes,) if isinstance(baxes, str) else tuple(baxes)
+        if any(a not in mesh.axis_names for a in baxes):
+            return fn
+        spec = __import__("jax").sharding.PartitionSpec(baxes)
+        return jax.shard_map(fn, mesh=mesh, in_specs=(spec,) * n_in,
+                             out_specs=spec, axis_names=set(baxes),
+                             check_vma=False)
+
+    def one_chunk(xc):
+        """xc: (G, Tc, d) → (y (G, Tc, d), stats)."""
+        logits = jnp.einsum("gtd,de->gte", xc, p["router"].astype(x.dtype))
+        logits = logits.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_idx = jax.lax.top_k(probs, k)          # (G, Tc, k)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+        flat_e = gate_idx.reshape(G, Tc * k)
+        # group-local stable sort → position within expert
+        order = jnp.argsort(flat_e, axis=1, stable=True)
+        sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+        counts = jax.vmap(lambda v: jnp.bincount(v, length=E))(flat_e)
+        offsets = jnp.cumsum(counts, axis=1) - counts       # (G, E)
+        pos_sorted = jnp.arange(Tc * k)[None, :] \
+            - jnp.take_along_axis(offsets, sorted_e, axis=1)
+        inv = jnp.argsort(order, axis=1)                    # inverse perm
+        pos = jnp.take_along_axis(pos_sorted, inv, axis=1).astype(jnp.int32)
+        keep = pos < capacity
+        slot = jnp.where(keep, flat_e * capacity + pos, E * capacity)
+
+        xb = _manual(_dispatch_local, 2)(xc, slot)
+        xb = xb.reshape(G, E, capacity, d)
+        xb = shard(xb, ("batch", "experts", None, "embed"), rules)
+
+        # NB: activations do NOT shard the ff dim — the group dim already
+        # owns the data axis; GSPMD instead gathers the (data-sharded) weight
+        # ff slices transiently inside the layer (≤ w_in bytes per step).
+        h = jnp.einsum("gecd,edf->gecf", xb, w_in)
+        g_ = jnp.einsum("gecd,edf->gecf", xb, w_gate)
+        h = shard(jax.nn.silu(g_) * h,
+                  ("batch", "experts", None, "expert_ff_act"), rules)
+        yb = jnp.einsum("gecf,efd->gecd", h, w_out)
+        yb = shard(yb, ("batch", "experts", None, "embed"), rules)
+
+        ybf = jnp.concatenate(
+            [yb.reshape(G, E * capacity, d),
+             jnp.zeros((G, 1, d), yb.dtype)], axis=1)
+        w = (gate_w.reshape(G, Tc * k) * keep).astype(x.dtype)
+        y = _manual(_combine_local, 3)(ybf, slot, w)
+        y = shard(y, ("batch", None, "embed"), rules)
+
+        me = jnp.mean(probs, axis=(0, 1))
+        ce = jnp.sum(counts.astype(jnp.float32), axis=0) / (G * Tc)
+        lb = E * jnp.sum(me * ce)
+        z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        drop = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        return y, jnp.stack([lb, z, drop])
+
+    if M == 1:
+        y, stats = one_chunk(xg[:, 0])
+        y = y[:, None]
+    elif unroll:
+        ys, ss = [], []
+        for m in range(M):
+            ym, sm = one_chunk(xg[:, m])
+            ys.append(ym)
+            ss.append(sm)
+        y = jnp.stack(ys, axis=1)
+        stats = jnp.mean(jnp.stack(ss), axis=0)
+    else:
+        def body(_, xc):
+            return None, one_chunk(xc)
+        _, (y, stats) = jax.lax.scan(body, None, xg.transpose(1, 0, 2, 3))
+        y = y.transpose(1, 0, 2, 3)
+        stats = jnp.mean(stats, axis=0)
+
+    metrics = MoEMetrics(load_balance_loss=stats[0], router_z_loss=stats[1],
+                         drop_fraction=stats[2])
+    return y.reshape(B, S, d), metrics

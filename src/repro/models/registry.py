@@ -1,0 +1,105 @@
+"""Model API facade: one uniform interface over the whole zoo.
+
+``build(cfg)`` returns a ``ModelApi`` whose members dispatch to the generic
+decoder stack (dense/moe/ssm/hybrid/vlm) or the whisper enc-dec.  The dry-run
+and smoke tests depend only on this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import stack, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable          # (rng, dtype) -> params
+    abstract_params: Callable  # (dtype) -> ShapeDtypeStruct tree
+    param_specs: Callable    # (rules) -> PartitionSpec tree
+    loss_fn: Callable        # (params, batch, rules=, remat=) -> (loss, metrics)
+    forward: Callable        # (params, batch, rules=) -> (logits, aux)
+    init_cache: Callable     # (batch, seq_len, dtype=, abstract=) -> cache
+    decode_step: Callable    # (params, cache, tokens, pos, rules=) -> (logits, cache)
+    cache_specs: Callable    # (rules) -> PartitionSpec tree matching init_cache
+    count_params: Callable   # () -> int
+
+
+def build(cfg: ArchConfig) -> ModelApi:
+    if cfg.is_encoder_decoder:
+        m = whisper
+        fwd = lambda params, batch, **kw: m.forward(params, batch, cfg, **kw)
+    else:
+        m = stack
+        fwd = lambda params, batch, **kw: m.forward(
+            params, batch["tokens"], cfg, patches=batch.get("patches"), **kw)
+    return ModelApi(
+        cfg=cfg,
+        init=lambda rng, dtype=jnp.float32: m.init(rng, cfg, dtype),
+        abstract_params=lambda dtype=jnp.float32: m.abstract_params(cfg, dtype),
+        param_specs=lambda rules: m.param_specs(cfg, rules),
+        loss_fn=lambda params, batch, **kw: m.loss_fn(params, batch, cfg, **kw),
+        forward=fwd,
+        init_cache=lambda batch, seq_len, dtype=jnp.bfloat16, abstract=False:
+            m.init_cache(cfg, batch, seq_len, dtype, abstract=abstract),
+        decode_step=lambda params, cache, tokens, pos, **kw:
+            m.decode_step(params, cache, tokens, pos, cfg, **kw),
+        cache_specs=lambda rules: m.cache_specs(cfg, rules),
+        count_params=lambda: m.count_params(cfg),
+    )
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, act_dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of (cfg, shape).
+
+    train/prefill → the batch dict fed to loss_fn/forward;
+    decode        → {"tokens", "pos"} (the cache is built separately via
+                    init_cache(abstract=True)).
+    Modality frontends are stubs per the assignment: VLM patch embeddings and
+    audio frame embeddings arrive precomputed at d_model width.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), act_dtype)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_frames, cfg.d_model), act_dtype)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def concrete_inputs(cfg: ArchConfig, shape_or_batch, seq_len: Optional[int] = None,
+                    rng: Optional[jax.Array] = None, act_dtype=jnp.float32):
+    """Small concrete batches for smoke tests (reduced configs on CPU)."""
+    if isinstance(shape_or_batch, ShapeConfig):
+        B, S = shape_or_batch.global_batch, shape_or_batch.seq_len
+    else:
+        B, S = shape_or_batch, seq_len
+    rng = rng if rng is not None else jax.random.key(0)
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    batch = {
+        "tokens": jax.random.randint(r1, (B, S), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(r2, (B, S), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            r3, (B, cfg.n_patches, cfg.d_model), act_dtype)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            r4, (B, cfg.n_audio_frames, cfg.d_model), act_dtype)
+    return batch

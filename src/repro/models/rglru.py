@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: two input projections (x-branch, gated y-branch), causal depthwise
+conv on the x-branch, the RG-LRU diagonal recurrence
+    r_t = σ(W_a x_t),   i_t = σ(W_x x_t)
+    log a_t = -c · softplus(Λ) · r_t            (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+then out = W_out (h ⊙ GeLU(y)).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the diagonal affine
+recurrence; decode is the O(1) per-token update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamDef, Schema, shard
+
+CONV_W = 4
+RG_C = 8.0
+
+
+def rglru_width(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def rglru_schema(cfg: ArchConfig) -> Schema:
+    d = cfg.d_model
+    w = rglru_width(cfg)
+    return {
+        "w_x": ParamDef((d, w), ("embed", "lru")),
+        "w_y": ParamDef((d, w), ("embed", "lru")),
+        "conv_w": ParamDef((CONV_W, w), (None, "lru"), "small_normal"),
+        "conv_b": ParamDef((w,), ("lru",), "zeros"),
+        "w_a": ParamDef((w, w), ("lru", None), "small_normal"),
+        "w_i": ParamDef((w, w), ("lru", None), "small_normal"),
+        "lam": ParamDef((w,), ("lru",), "ones"),
+        "w_out": ParamDef((w, d), ("lru", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    pad = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(CONV_W)
+    )
+    return out + b[None, None, :]
+
+
+def _gates(p, x):
+    """x: (..., w) → (log_a, beta·x) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    return a, beta * i * xf
+
+
+def rglru_scan(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan over (a, b) pairs.
+    a, b: (B, S, w)."""
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bb  # h_t (with h_0 = 0)
+
+
+def rglru_reference(a, b, h0=None):
+    """Sequential oracle for tests."""
+    B, S, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, w), a.dtype)
+
+    def step(h, t):
+        h = a[:, t] * h + b[:, t]
+        return h, h
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.transpose(1, 0, 2), h
+
+
+def rglru_apply(p, x, cfg: ArchConfig, rules=None):
+    """Full-sequence RG-LRU block: (B, S, d) → (B, S, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))
+    yb = jnp.einsum("bsd,dw->bsw", x, p["w_y"].astype(x.dtype))
+    xb = shard(xb, ("batch", "seq", "lru"), rules)
+    xb = _causal_conv(xb, p["conv_w"].astype(x.dtype),
+                      p["conv_b"].astype(x.dtype))
+    a, b = _gates(p, xb)
+    h = rglru_scan(a, b).astype(x.dtype)
+    out = h * jax.nn.gelu(yb)
+    out = jnp.einsum("bsw,wd->bsd", out, p["w_out"].astype(x.dtype))
+    return shard(out, ("batch", "act_seq", "embed"), rules)
+
+
+def rglru_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    w = rglru_width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, w), dtype),
+    }
+
+
+def rglru_cache_spec(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    w = rglru_width(cfg)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, CONV_W - 1, w), dtype),
+    }
+
+
+def rglru_decode(p, x, cache, cfg: ArchConfig, rules=None):
+    """One-token update.  x: (B, 1, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))[:, 0]
+    yb = jnp.einsum("bsd,dw->bsw", x, p["w_y"].astype(x.dtype))[:, 0]
+    conv_hist = jnp.concatenate([cache["conv"], xb[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xc = jnp.einsum("bwc,wc->bc", conv_hist, w) + p["conv_b"].astype(x.dtype)
+    a, b = _gates(p, xc)
+    h = a * cache["h"] + b
+    out = (h.astype(x.dtype) * jax.nn.gelu(yb))[:, None, :]
+    out = jnp.einsum("bsw,wd->bsd", out, p["w_out"].astype(x.dtype))
+    return out, {"h": h, "conv": conv_hist[:, 1:, :]}

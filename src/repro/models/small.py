@@ -1,0 +1,101 @@
+"""The paper's own models (GPFL §V-B): FEMNIST MLP (64, 30) and the
+CIFAR-10 CNN conv(32, 64, 64) + fc(64).  Pure JAX, schema-driven params."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import SmallModelConfig
+from repro.models.common import (
+    ParamDef,
+    Schema,
+    init_from_schema,
+    schema_param_count,
+)
+
+
+def model_schema(cfg: SmallModelConfig) -> Schema:
+    if cfg.kind == "mlp":
+        dims = (int(math.prod(cfg.input_shape)),) + tuple(cfg.hidden) \
+            + (cfg.num_classes,)
+        return {
+            f"fc{i}": {
+                "w": ParamDef((dims[i], dims[i + 1]), (None, None)),
+                "b": ParamDef((dims[i + 1],), (None,), "zeros"),
+            }
+            for i in range(len(dims) - 1)
+        }
+    if cfg.kind == "cnn":
+        h, w, c_in = cfg.input_shape
+        schema: Schema = {}
+        ch = (c_in,) + tuple(cfg.conv_channels)
+        for i in range(len(cfg.conv_channels)):
+            schema[f"conv{i}"] = {
+                "w": ParamDef((3, 3, ch[i], ch[i + 1]), (None,) * 4),
+                "b": ParamDef((ch[i + 1],), (None,), "zeros"),
+            }
+        # each conv followed by 2x2 maxpool (stride 2), 'SAME' conv padding
+        hh, ww = h, w
+        for _ in cfg.conv_channels:
+            hh, ww = hh // 2, ww // 2
+        flat = hh * ww * cfg.conv_channels[-1]
+        schema["fc0"] = {
+            "w": ParamDef((flat, cfg.fc_width), (None, None)),
+            "b": ParamDef((cfg.fc_width,), (None,), "zeros"),
+        }
+        schema["head"] = {
+            "w": ParamDef((cfg.fc_width, cfg.num_classes), (None, None)),
+            "b": ParamDef((cfg.num_classes,), (None,), "zeros"),
+        }
+        return schema
+    raise ValueError(cfg.kind)
+
+
+def init(rng, cfg: SmallModelConfig, dtype=jnp.float32):
+    return init_from_schema(rng, model_schema(cfg), dtype)
+
+
+def count_params(cfg: SmallModelConfig) -> int:
+    return schema_param_count(model_schema(cfg))
+
+
+def forward(params, x, cfg: SmallModelConfig):
+    """x: (B, *input_shape) → logits (B, num_classes)."""
+    if cfg.kind == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        n = len(cfg.hidden) + 1
+        for i in range(n):
+            p = params[f"fc{i}"]
+            h = h @ p["w"] + p["b"]
+            if i < n - 1:
+                h = jax.nn.relu(h)
+        return h
+    # CNN
+    h = x
+    for i in range(len(cfg.conv_channels)):
+        p = params[f"conv{i}"]
+        h = jax.lax.conv_general_dilated(
+            h, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + p["b"])
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc0"]["w"] + params["fc0"]["b"])
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(params, batch, cfg: SmallModelConfig):
+    """Mean softmax cross-entropy.  batch: {"x", "y"}."""
+    logits = forward(params, batch["x"], cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def accuracy(params, batch, cfg: SmallModelConfig):
+    logits = forward(params, batch["x"], cfg)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

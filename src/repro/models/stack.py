@@ -1,0 +1,483 @@
+"""Generic decoder stack for all decoder-only assigned archs
+(dense / moe / ssm / hybrid / vlm — whisper's enc-dec lives in whisper.py).
+
+Layers are grouped into repeating *periods* (``cfg.pattern_period``) and the
+periods are scanned (``lax.scan`` over stacked params) with optional remat —
+HLO size and compile time stay O(period), not O(n_layers).  Layers that do not
+fill a whole period form an unrolled *tail*.
+
+Parameter layout::
+
+    params = {
+      "embed":  {"embedding": (V, D)},
+      "stack":  {"pos0": <block schema stacked n_full>, "pos1": ..., ...},
+      "tail":   [block params ...],                  # n_layers % period
+      "final_norm": {...},
+      "lm_head": {"w": (D, V)},                      # absent when tied
+    }
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import rglru as R
+from repro.models import ssd as S
+from repro.models.common import (
+    ParamDef,
+    Schema,
+    init_from_schema,
+    abstract_from_schema,
+    specs_from_schema,
+    stack_schema,
+    schema_param_count,
+    shard,
+)
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# schemas
+# ---------------------------------------------------------------------------
+
+def block_schema(cfg: ArchConfig, kind: str) -> Schema:
+    s: Schema = {"norm1": L.norm_schema(cfg)}
+    if kind in ("global_attn", "local_attn"):
+        s["attn"] = L.attn_schema(cfg)
+    elif kind == "cross_attn":
+        s["xattn"] = L.attn_schema(cfg, cross=True)
+        s["xgate"] = ParamDef((1,), (None,), "zeros")  # tanh-gated (llama-vision)
+    elif kind == "ssd":
+        s["ssd"] = S.ssd_schema(cfg)
+        return s  # mamba block: no separate MLP
+    elif kind == "rglru":
+        s["rglru"] = R.rglru_schema(cfg)
+    else:
+        raise ValueError(kind)
+    s["norm2"] = L.norm_schema(cfg)
+    if cfg.is_moe:
+        s["moe"] = L.moe_schema(cfg)
+    else:
+        s["mlp"] = L.mlp_schema(cfg)
+    return s
+
+
+def model_schema(cfg: ArchConfig) -> Schema:
+    period = cfg.pattern_period
+    n_full = cfg.n_layers // period
+    cycle = [cfg.layer_kind(i) for i in range(period)]
+    schema: Schema = {
+        "embed": {
+            "embedding": ParamDef((cfg.vocab_size, cfg.d_model),
+                                  ("vocab", "embed"), "small_normal")
+        },
+        "stack": {
+            f"pos{j}": stack_schema(block_schema(cfg, cycle[j]), n_full)
+            for j in range(period)
+        },
+        "tail": [
+            block_schema(cfg, cfg.layer_kind(i))
+            for i in range(n_full * period, cfg.n_layers)
+        ],
+        "final_norm": L.norm_schema(cfg),
+    }
+    if not cfg.tie_embeddings:
+        schema["lm_head"] = {
+            "w": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        }
+    return schema
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32):
+    return init_from_schema(rng, model_schema(cfg), dtype)
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.float32):
+    return abstract_from_schema(model_schema(cfg), dtype)
+
+
+def param_specs(cfg: ArchConfig, rules: dict):
+    return specs_from_schema(model_schema(cfg), rules)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    return schema_param_count(model_schema(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_apply(p, x, cfg: ArchConfig, kind: str, *, patches=None,
+                 rules=None, chunk: int = 512, unroll: bool = False):
+    """One residual block.  Returns (x, (lb_loss, z_loss, drop))."""
+    moe_stats = (jnp.zeros((), jnp.float32),) * 3
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if rules and rules.get("_resid_gather"):
+        # §Perf knob: force the sequence-parallel all-gather to happen HERE,
+        # on the bf16 post-norm activations, instead of letting GSPMD place
+        # it on an f32 intermediate inside the norm (2× gather bytes)
+        h = shard(h, ("batch", "seq", "embed"), rules)
+    if kind in ("global_attn", "local_attn"):
+        x = x + L.attention_apply(p["attn"], h, cfg, kind=kind,
+                                  rules=rules, chunk=chunk)
+    elif kind == "cross_attn":
+        y = L.attention_apply(p["xattn"], h, cfg, kind="cross_attn",
+                              kv_x=patches, rules=rules, chunk=chunk)
+        x = x + jnp.tanh(p["xgate"].astype(x.dtype)) * y
+    elif kind == "ssd":
+        x = x + S.ssd_apply(p["ssd"], h, cfg, rules=rules)
+        return x, moe_stats
+    elif kind == "rglru":
+        x = x + R.rglru_apply(p["rglru"], h, cfg, rules=rules)
+    h2 = L.apply_norm(p["norm2"], x, cfg)
+    if rules and rules.get("_resid_gather"):
+        h2 = shard(h2, ("batch", "seq", "embed"), rules)
+    if cfg.is_moe:
+        y, m = L.moe_apply(p["moe"], h2, cfg, rules=rules, unroll=unroll)
+        moe_stats = (m.load_balance_loss, m.router_z_loss, m.drop_fraction)
+        x = x + y
+    else:
+        x = x + L.mlp_apply(p["mlp"], h2, cfg, rules=rules)
+    return x, moe_stats
+
+
+def forward(params, tokens, cfg: ArchConfig, *, patches=None, rules=None,
+            remat: str = "full", chunk: int = 512, unroll: bool = False,
+            return_hidden: bool = False):
+    """tokens (B, S) → logits (B, S, V); also returns moe aux dict.
+
+    unroll=True replaces the period scan with a python loop — used by the
+    roofline cost probes (XLA's HloCostAnalysis counts while bodies once, so
+    scanned models under-report FLOPs/collectives by the trip count)."""
+    period = cfg.pattern_period
+    n_full = cfg.n_layers // period
+    cycle = [cfg.layer_kind(i) for i in range(period)]
+
+    emb = params["embed"]["embedding"]
+    x = jnp.take(emb, tokens, axis=0)
+    x = shard(x, ("batch", "act_seq", "embed"), rules)
+
+    def period_apply(x, pparams):
+        stats = []
+        for j, kind in enumerate(cycle):
+            x, s = _block_apply(pparams[f"pos{j}"], x, cfg, kind,
+                                patches=patches, rules=rules, chunk=chunk,
+                                unroll=unroll)
+            stats.append(s)
+        agg = tuple(sum(s[i] for s in stats) for i in range(3))
+        return x, agg
+
+    body = period_apply
+    if remat == "full":
+        body = jax.checkpoint(
+            period_apply, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            period_apply,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    moe_stats = jnp.zeros((3,), jnp.float32)
+    if n_full > 0 and unroll:
+        for i in range(n_full):
+            sl = jax.tree.map(lambda a: a[i], params["stack"])
+            x, agg = body(x, sl)
+            moe_stats = moe_stats + jnp.stack(agg)
+    elif n_full > 0:
+        def scan_body(x, pparams):
+            x, agg = body(x, pparams)
+            return x, jnp.stack(agg)
+
+        x, stats = jax.lax.scan(scan_body, x, params["stack"])
+        moe_stats = jnp.sum(stats, axis=0)
+
+    for i, p in enumerate(params["tail"]):
+        kind = cfg.layer_kind(n_full * period + i)
+        x, s = _block_apply(p, x, cfg, kind, patches=patches, rules=rules,
+                            chunk=chunk, unroll=unroll)
+        moe_stats = moe_stats + jnp.stack(s)
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    aux = {"moe_lb": moe_stats[0], "moe_z": moe_stats[1],
+           "moe_drop": moe_stats[2]}
+    if return_hidden:
+        return x, aux
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, emb.astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv",
+                            x, params["lm_head"]["w"].astype(x.dtype))
+    logits = shard(logits, ("batch", "seq", "vocab"), rules)
+    return logits, aux
+
+
+def chunked_ce(x, head_w, labels, *, n_chunks: int, rules=None,
+               transpose_head: bool = False):
+    """Per-token CE WITHOUT materialising the full (B, S, V) f32 logits:
+    scan over seq chunks, rematerialising each chunk's logits in backward
+    (§Perf memory-term optimization).  head_w: (D, V), or (V, D) with
+    transpose_head=True (tied embeddings).  Returns (B, S) per-token CE."""
+    B, S, D = x.shape
+    n_chunks = max(1, min(n_chunks, S))
+    while S % n_chunks:
+        n_chunks -= 1
+    xc = x.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(xi, li):
+        if transpose_head:
+            logits = jnp.einsum("bsd,vd->bsv", xi, head_w.astype(xi.dtype))
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", xi, head_w.astype(xi.dtype))
+        logits = shard(logits, ("batch", "seq", "vocab"), rules)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    def body(_, xs):
+        return None, one(*xs)
+
+    _, ce = jax.lax.scan(body, None, (xc, lc))
+    return ce.transpose(1, 0, 2).reshape(B, S)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, rules=None, remat: str = "full",
+            chunk: int = 512, unroll: bool = False, ce_chunks: int = 0):
+    """Mean next-token cross-entropy (+ MoE aux).  batch: {"tokens","labels",
+    optional "patches"}.  ce_chunks>0 → chunked CE."""
+    if ce_chunks:
+        x, aux = forward(params, batch["tokens"], cfg,
+                         patches=batch.get("patches"), rules=rules,
+                         remat=remat, chunk=chunk, unroll=unroll,
+                         return_hidden=True)
+        head = params["embed"]["embedding"] if cfg.tie_embeddings \
+            else params["lm_head"]["w"]
+        ce_tok = chunked_ce(x, head, batch["labels"], n_chunks=ce_chunks,
+                            rules=rules, transpose_head=cfg.tie_embeddings)
+        ce = jnp.mean(ce_tok)
+    else:
+        logits, aux = forward(params, batch["tokens"], cfg,
+                              patches=batch.get("patches"), rules=rules,
+                              remat=remat, chunk=chunk, unroll=unroll)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                                   axis=-1)[..., 0]
+        ce = jnp.mean(lse - gold)
+    loss = ce
+    n_moe = max(1, sum(1 for i in range(cfg.n_layers)
+                       if cfg.layer_kind(i) != "ssd")) if cfg.is_moe else 1
+    if cfg.is_moe:
+        loss = loss + MOE_LB_COEF * aux["moe_lb"] / n_moe \
+            + MOE_Z_COEF * aux["moe_z"] / n_moe
+    metrics = {"ce": ce, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _block_cache_init(cfg, kind, batch, seq_len, dtype, abstract=False):
+    if kind in ("global_attn", "local_attn"):
+        f = L.attn_cache_spec if abstract else L.attn_cache_init
+        return f(cfg, kind, batch, seq_len, dtype)
+    if kind == "cross_attn":
+        # cross K/V over the (stub) patch embeddings
+        shp = (batch, cfg.n_patches, cfg.n_kv_heads, cfg.resolved_head_dim)
+        if abstract:
+            return {"k": jax.ShapeDtypeStruct(shp, dtype),
+                    "v": jax.ShapeDtypeStruct(shp, dtype)}
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if kind == "ssd":
+        f = S.ssd_cache_spec if abstract else S.ssd_cache_init
+        return f(cfg, batch, dtype)
+    if kind == "rglru":
+        f = R.rglru_cache_spec if abstract else R.rglru_cache_init
+        return f(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    """Cache pytree mirroring the stack/tail layout.  Stacked leading dim for
+    the scanned periods."""
+    period = cfg.pattern_period
+    n_full = cfg.n_layers // period
+    cycle = [cfg.layer_kind(i) for i in range(period)]
+
+    def stacked(kind):
+        one = _block_cache_init(cfg, kind, batch, seq_len, dtype, abstract)
+        if abstract:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_full,) + s.shape, s.dtype),
+                one)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_full,) + a.shape), one)
+
+    return {
+        "stack": {f"pos{j}": stacked(cycle[j]) for j in range(period)},
+        "tail": [
+            _block_cache_init(cfg, cfg.layer_kind(n_full * period + i),
+                              batch, seq_len, dtype, abstract)
+            for i in range(cfg.n_layers - n_full * period)
+        ],
+    }
+
+
+def _block_cache_spec_tree(cfg, kind, rules):
+    """PartitionSpec tree mirroring _block_cache_init's structure."""
+    from repro.models.common import logical_spec
+    if kind in ("global_attn", "local_attn"):
+        ax = ("cache_batch", "cache_seq", "kv_heads", "head_dim")
+        return {"k": logical_spec(ax, rules), "v": logical_spec(ax, rules)}
+    if kind == "cross_attn":
+        ax = ("cache_batch", "patches", "kv_heads", "head_dim")
+        return {"k": logical_spec(ax, rules), "v": logical_spec(ax, rules)}
+    if kind == "ssd":
+        return {
+            "h": logical_spec(("cache_batch", "ssm_heads", None, None), rules),
+            "conv": logical_spec(("cache_batch", None, "lru"), rules),
+        }
+    if kind == "rglru":
+        return {
+            "h": logical_spec(("cache_batch", "lru"), rules),
+            "conv": logical_spec(("cache_batch", None, "lru"), rules),
+        }
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ArchConfig, rules):
+    """PartitionSpec pytree matching init_cache's structure (scanned periods
+    get a leading unsharded layers dim)."""
+    from jax.sharding import PartitionSpec as P
+    period = cfg.pattern_period
+    n_full = cfg.n_layers // period
+    cycle = [cfg.layer_kind(i) for i in range(period)]
+
+    def stacked(kind):
+        return jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                            _block_cache_spec_tree(cfg, kind, rules),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return {
+        "stack": {f"pos{j}": stacked(cycle[j]) for j in range(period)},
+        "tail": [
+            _block_cache_spec_tree(cfg, cfg.layer_kind(n_full * period + i),
+                                   rules)
+            for i in range(cfg.n_layers - n_full * period)
+        ],
+    }
+
+
+def _block_decode(p, x, cache, pos, cfg, kind, rules=None):
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if kind in ("global_attn", "local_attn"):
+        y, cache = L.attention_decode(p["attn"], h, cache, pos, cfg,
+                                      kind=kind, rules=rules)
+        x = x + y
+    elif kind == "cross_attn":
+        y = L.cross_attention_decode(p["xattn"], h, cache, cfg, rules=rules)
+        x = x + jnp.tanh(p["xgate"].astype(x.dtype)) * y
+    elif kind == "ssd":
+        y, cache = S.ssd_decode(p["ssd"], h, cache, cfg, rules=rules)
+        return x + y, cache
+    elif kind == "rglru":
+        y, cache = R.rglru_decode(p["rglru"], h, cache, cfg, rules=rules)
+        x = x + y
+    h2 = L.apply_norm(p["norm2"], x, cfg)
+    if cfg.is_moe:
+        y, _ = L.moe_apply(p["moe"], h2, cfg, rules=rules)
+        x = x + y
+    else:
+        x = x + L.mlp_apply(p["mlp"], h2, cfg, rules=rules)
+    return x, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, *, rules=None,
+                unroll: bool = False):
+    """One serve step: tokens (B, 1) int32, pos scalar int32 (next position).
+    Returns (logits (B, 1, V), new_cache)."""
+    period = cfg.pattern_period
+    n_full = cfg.n_layers // period
+    cycle = [cfg.layer_kind(i) for i in range(period)]
+
+    emb = params["embed"]["embedding"]
+    x = jnp.take(emb, tokens, axis=0)
+    x = shard(x, ("cache_batch", "seq", "embed"), rules)
+
+    def scan_body(x, xs):
+        pparams, pcache = xs
+        new_caches = {}
+        for j, kind in enumerate(cycle):
+            x, c = _block_decode(pparams[f"pos{j}"], x,
+                                 pcache[f"pos{j}"], pos, cfg, kind,
+                                 rules=rules)
+            new_caches[f"pos{j}"] = c
+        return x, new_caches
+
+    if n_full > 0 and unroll:
+        outs = []
+        for i in range(n_full):
+            sl = jax.tree.map(lambda a: a[i], (params["stack"], cache["stack"]))
+            x, nc = scan_body(x, sl)
+            outs.append(nc)
+        new_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    elif n_full > 0:
+        x, new_stack = jax.lax.scan(scan_body, x,
+                                    (params["stack"], cache["stack"]))
+    else:
+        new_stack = cache["stack"]
+
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        kind = cfg.layer_kind(n_full * period + i)
+        x, c = _block_decode(p, x, cache["tail"][i], pos, cfg, kind,
+                             rules=rules)
+        new_tail.append(c)
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, emb.astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"]["w"].astype(x.dtype))
+    return logits, {"stack": new_stack, "tail": new_tail}
+
+
+def fill_cross_caches(params, cache, patches, cfg: ArchConfig):
+    """Populate cross-attention K/V caches from patch embeddings (prefill side
+    of VLM serving)."""
+    period = cfg.pattern_period
+    n_full = cfg.n_layers // period
+    cycle = [cfg.layer_kind(i) for i in range(period)]
+    new_cache = dict(cache)
+    new_stack = dict(cache["stack"])
+    for j, kind in enumerate(cycle):
+        if kind != "cross_attn":
+            continue
+        kv = jax.vmap(lambda p: L.cross_cache_init(p, patches, cfg))(
+            params["stack"][f"pos{j}"]["xattn"])
+        new_stack[f"pos{j}"] = jax.tree.map(
+            lambda a, ref: a.astype(ref.dtype), kv, cache["stack"][f"pos{j}"])
+    new_cache["stack"] = new_stack
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        kind = cfg.layer_kind(n_full * period + i)
+        if kind == "cross_attn":
+            kv = L.cross_cache_init(p["xattn"], patches, cfg)
+            new_tail.append(jax.tree.map(
+                lambda a, ref: a.astype(ref.dtype), kv, cache["tail"][i]))
+        else:
+            new_tail.append(cache["tail"][i])
+    new_cache["tail"] = new_tail
+    return new_cache

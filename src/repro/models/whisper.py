@@ -1,0 +1,232 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment carve-out the mel-spectrogram + conv frontend is a STUB:
+``input_specs`` supplies precomputed frame embeddings (B, n_frames, d_model).
+This module implements the transformer backbone that consumes them: a
+bidirectional encoder and a causal decoder with per-layer cross-attention.
+Positional handling is adapted to RoPE (hardware-adaptation note in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.common import (
+    ParamDef,
+    Schema,
+    init_from_schema,
+    abstract_from_schema,
+    specs_from_schema,
+    stack_schema,
+    schema_param_count,
+    shard,
+)
+
+
+def _enc_block_schema(cfg: ArchConfig) -> Schema:
+    return {
+        "norm1": L.norm_schema(cfg),
+        "attn": L.attn_schema(cfg),
+        "norm2": L.norm_schema(cfg),
+        "mlp": L.mlp_schema(cfg),
+    }
+
+
+def _dec_block_schema(cfg: ArchConfig) -> Schema:
+    return {
+        "norm1": L.norm_schema(cfg),
+        "attn": L.attn_schema(cfg),
+        "norm_x": L.norm_schema(cfg),
+        "xattn": L.attn_schema(cfg, cross=True),
+        "norm2": L.norm_schema(cfg),
+        "mlp": L.mlp_schema(cfg),
+    }
+
+
+def model_schema(cfg: ArchConfig) -> Schema:
+    return {
+        "embed": {
+            "embedding": ParamDef((cfg.vocab_size, cfg.d_model),
+                                  ("vocab", "embed"), "small_normal")
+        },
+        "encoder": stack_schema(_enc_block_schema(cfg), cfg.n_encoder_layers),
+        "enc_final_norm": L.norm_schema(cfg),
+        "decoder": stack_schema(_dec_block_schema(cfg), cfg.n_layers),
+        "final_norm": L.norm_schema(cfg),
+        "lm_head": {
+            "w": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        },
+    }
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32):
+    return init_from_schema(rng, model_schema(cfg), dtype)
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.float32):
+    return abstract_from_schema(model_schema(cfg), dtype)
+
+
+def param_specs(cfg: ArchConfig, rules: dict):
+    return specs_from_schema(model_schema(cfg), rules)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    return schema_param_count(model_schema(cfg))
+
+
+def encode(params, frames, cfg: ArchConfig, *, rules=None, remat="full",
+           chunk: int = 512, unroll: bool = False):
+    """frames: (B, n_frames, d_model) stub embeddings → encoder states."""
+    x = shard(frames, ("batch", "frames", "embed"), rules)
+
+    def block(x, p):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        x = x + L.attention_apply(p["attn"], h, cfg, kind="encoder_attn",
+                                  rules=rules, chunk=chunk)
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.mlp_apply(p["mlp"], h2, cfg, rules=rules)
+        return x
+
+    body = jax.checkpoint(block,
+                          policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat == "full" else block
+    if unroll:
+        for i in range(cfg.n_encoder_layers):
+            x = body(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+    else:
+        x, _ = jax.lax.scan(lambda c, p: (body(c, p), None), x,
+                            params["encoder"])
+    return L.apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def forward(params, batch, cfg: ArchConfig, *, rules=None, remat="full",
+            chunk: int = 512, unroll: bool = False):
+    """batch: {"frames", "tokens"} → logits (B, S, V)."""
+    enc = encode(params, batch["frames"], cfg, rules=rules, remat=remat,
+                 chunk=chunk, unroll=unroll)
+    tokens = batch["tokens"]
+    emb = params["embed"]["embedding"]
+    x = jnp.take(emb, tokens, axis=0)
+    x = shard(x, ("batch", "act_seq", "embed"), rules)
+
+    def block(x, p):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        x = x + L.attention_apply(p["attn"], h, cfg, kind="global_attn",
+                                  rules=rules, chunk=chunk)
+        hx = L.apply_norm(p["norm_x"], x, cfg)
+        x = x + L.attention_apply(p["xattn"], hx, cfg, kind="cross_attn",
+                                  kv_x=enc, rules=rules, chunk=chunk)
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.mlp_apply(p["mlp"], h2, cfg, rules=rules)
+        return x
+
+    body = jax.checkpoint(block,
+                          policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat == "full" else block
+    if unroll:
+        for i in range(cfg.n_layers):
+            x = body(x, jax.tree.map(lambda a: a[i], params["decoder"]))
+    else:
+        x, _ = jax.lax.scan(lambda c, p: (body(c, p), None), x,
+                            params["decoder"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype))
+    return shard(logits, ("batch", "seq", "vocab"), rules), {}
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, rules=None, remat="full",
+            chunk: int = 512, unroll: bool = False):
+    logits, _ = forward(params, batch, cfg, rules=rules, remat=remat,
+                        chunk=chunk, unroll=unroll)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    return ce, {"ce": ce}
+
+
+# --- serving ----------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16,
+               abstract: bool = False):
+    n = cfg.n_layers
+    self_one = (L.attn_cache_spec if abstract else L.attn_cache_init)(
+        cfg, "global_attn", batch, seq_len, dtype)
+    xshape = (batch, cfg.n_audio_frames, cfg.n_kv_heads,
+              cfg.resolved_head_dim)
+    if abstract:
+        stackit = lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+        cross = {"k": jax.ShapeDtypeStruct(xshape, dtype),
+                 "v": jax.ShapeDtypeStruct(xshape, dtype)}
+    else:
+        stackit = lambda a: jnp.broadcast_to(a[None], (n,) + a.shape)
+        cross = {"k": jnp.zeros(xshape, dtype), "v": jnp.zeros(xshape, dtype)}
+    return {
+        "self": jax.tree.map(stackit, self_one),
+        "cross": jax.tree.map(stackit, cross),
+    }
+
+
+def cache_specs(cfg: ArchConfig, rules):
+    from jax.sharding import PartitionSpec as P
+    from repro.models.common import logical_spec
+
+    def stacked(ax):
+        return P(*((None,) + tuple(logical_spec(ax, rules))))
+
+    self_ax = ("cache_batch", "cache_seq", "kv_heads", "head_dim")
+    cross_ax = ("cache_batch", "frames", "kv_heads", "head_dim")
+    return {
+        "self": {"k": stacked(self_ax), "v": stacked(self_ax)},
+        "cross": {"k": stacked(cross_ax), "v": stacked(cross_ax)},
+    }
+
+
+def fill_cross_caches(params, cache, frames, cfg: ArchConfig, *, rules=None):
+    """Run the encoder once, precompute every decoder layer's cross K/V."""
+    enc = encode(params, frames, cfg, rules=rules)
+    kv = jax.vmap(lambda p: L.cross_cache_init(p, enc, cfg))(
+        params["decoder"]["xattn"])
+    kv = jax.tree.map(lambda a, ref: a.astype(ref.dtype), kv, cache["cross"])
+    return {"self": cache["self"], "cross": kv}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, *, rules=None,
+                unroll: bool = False):
+    emb = params["embed"]["embedding"]
+    x = jnp.take(emb, tokens, axis=0)
+    x = shard(x, ("cache_batch", "seq", "embed"), rules)
+
+    def scan_body(x, xs):
+        p, self_c, cross_c = xs
+        h = L.apply_norm(p["norm1"], x, cfg)
+        y, self_c = L.attention_decode(p["attn"], h, self_c, pos, cfg,
+                                       kind="global_attn", rules=rules)
+        x = x + y
+        hx = L.apply_norm(p["norm_x"], x, cfg)
+        x = x + L.cross_attention_decode(p["xattn"], hx, cross_c, cfg,
+                                         rules=rules)
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.mlp_apply(p["mlp"], h2, cfg, rules=rules)
+        return x, self_c
+
+    if unroll:
+        outs = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i],
+                              (params["decoder"], cache["self"],
+                               cache["cross"]))
+            x, nc = scan_body(x, sl)
+            outs.append(nc)
+        new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_self = jax.lax.scan(scan_body, x,
+                                   (params["decoder"], cache["self"],
+                                    cache["cross"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype))
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,11 @@
+"""Hand-rolled optimizers (no optax): MGD (heavy-ball SGD — the paper's
+Eq. 1-2), AdamW, and LR schedules."""
+from repro.optim.sgd import MGDState, mgd_init, mgd_update
+from repro.optim.adam import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "MGDState", "mgd_init", "mgd_update",
+    "AdamWState", "adamw_init", "adamw_update",
+    "constant", "cosine_decay", "linear_warmup_cosine",
+]

@@ -1,0 +1,43 @@
+"""AdamW for the datacenter-scale pretraining driver."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, jnp.float32)
+    return AdamWState(
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(z, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.0):
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * gf
+        nu_n = b2 * nu + (1 - b2) * jnp.square(gf)
+        upd = (mu_n / c1) / (jnp.sqrt(nu_n / c2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + weight_decay * pf)
+        return pf.astype(p.dtype), mu_n, nu_n
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdamWState(pick(1), pick(2), step)

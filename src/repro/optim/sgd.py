@@ -1,0 +1,58 @@
+"""Momentum-based gradient descent (MGD) — the paper's Eq. (1)-(2):
+
+    d_t = γ d_{t-1} + ∇F(w_{t-1})
+    w_t = w_{t-1} − η d_t
+
+The momentum buffer ``d`` doubles as GPFL's global descent direction (the
+projection target of Eq. 3).  Weight decay is decoupled-from-momentum
+(classic SGD style: added to the gradient before the momentum update), which
+matches torch.optim.SGD used by the paper's baselines.
+
+The fused Pallas kernel ``repro.kernels.momentum`` implements the same
+update in one HBM pass; ``mgd_update(..., use_kernel=True)`` routes to it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MGDState(NamedTuple):
+    momentum: dict  # pytree matching params ("d" in the paper)
+    step: jnp.ndarray
+
+
+def mgd_init(params) -> MGDState:
+    return MGDState(
+        momentum=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def mgd_update(params, grads, state: MGDState, *, lr, gamma: float = 0.9,
+               weight_decay: float = 0.0, use_kernel: bool = False,
+               interpret: bool = True):
+    """One MGD step → (new_params, new_state)."""
+    if use_kernel:
+        from repro.kernels.ops import fused_momentum_tree
+        new_params, new_m = fused_momentum_tree(
+            params, grads, state.momentum, lr=lr, gamma=gamma,
+            weight_decay=weight_decay, interpret=interpret)
+        return new_params, MGDState(new_m, state.step + 1)
+
+    def upd(p, g, m):
+        gf = g.astype(jnp.float32)
+        if weight_decay:
+            gf = gf + weight_decay * p.astype(jnp.float32)
+        m_new = gamma * m + gf
+        p_new = p.astype(jnp.float32) - lr * m_new
+        return p_new.astype(p.dtype), m_new
+
+    out = jax.tree.map(upd, params, grads, state.momentum)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, MGDState(new_m, state.step + 1)

@@ -1,0 +1,29 @@
+"""Shared utilities: pytree algebra, dtype policy, PRNG helpers, logging."""
+from repro.utils.pytree import (
+    tree_add,
+    tree_axpy,
+    tree_dot,
+    tree_global_norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_size,
+    flatten_to_vector,
+    unflatten_from_vector,
+)
+from repro.utils.dtypes import DTypePolicy, DEFAULT_POLICY
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_dot",
+    "tree_global_norm",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "tree_size",
+    "flatten_to_vector",
+    "unflatten_from_vector",
+    "DTypePolicy",
+    "DEFAULT_POLICY",
+]

@@ -1,0 +1,24 @@
+"""Mixed-precision policy.
+
+TPU target: bf16 params/activations for the large archs, f32 master weights and
+optimizer state.  The CPU-side FL simulation (paper scale) runs pure f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.float32     # storage dtype of params
+    compute_dtype: jnp.dtype = jnp.float32   # matmul dtype
+    accum_dtype: jnp.dtype = jnp.float32     # reductions / optimizer state
+
+    def cast_compute(self, x):
+        return x.astype(self.compute_dtype)
+
+
+DEFAULT_POLICY = DTypePolicy()
+BF16_POLICY = DTypePolicy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)

@@ -1,0 +1,74 @@
+"""Pytree algebra used throughout the framework.
+
+All model parameters, gradients and optimizer states are plain pytrees
+(nested dicts of jnp arrays).  The GPFL core manipulates them as abstract
+vectors: dot products, norms, axpy updates.  Everything here is jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a, b, dtype=jnp.float32):
+    """Global inner product <a, b> across every leaf (accumulated in f32).
+
+    Uses (a*b).sum() — NOT jnp.vdot — because vdot flattens its operands and
+    GSPMD cannot shard a flatten of an arbitrarily-sharded array: it inserts
+    a full all-gather of the operand (observed: 3×12.9 GB f32 gathers of the
+    MoE momentum).  Elementwise multiply + reduce keeps the operand sharding
+    and lowers to local partials + a scalar all-reduce."""
+    leaves_a = jax.tree.leaves(a)
+    leaves_b = jax.tree.leaves(b)
+    acc = jnp.zeros((), dtype=dtype)
+    for la, lb in zip(leaves_a, leaves_b):
+        acc = acc + jnp.sum(la.astype(dtype) * lb.astype(dtype))
+    return acc
+
+
+def tree_global_norm(tree, dtype=jnp.float32):
+    return jnp.sqrt(tree_dot(tree, tree, dtype=dtype))
+
+
+def tree_size(tree) -> int:
+    """Total number of scalars in the tree (static)."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def flatten_to_vector(tree, dtype=jnp.float32):
+    """Concatenate every leaf into one flat vector (for the GP kernel path)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([jnp.ravel(x).astype(dtype) for x in leaves])
+
+
+def unflatten_from_vector(vec, tree):
+    """Inverse of flatten_to_vector given a template tree."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    ofs = 0
+    for leaf in leaves:
+        n = int(leaf.size)
+        out.append(jnp.reshape(vec[ofs : ofs + n], leaf.shape).astype(leaf.dtype))
+        ofs += n
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Smoke tests and benches see 1 device; ONLY the dry-run forces 512
+# (repro.launch.dryrun sets XLA_FLAGS itself, in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,89 @@
+"""Config system: registry completeness, exact assigned dims, skip table."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape, supports_shape
+
+ASSIGNED_DIMS = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+    "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+}
+
+
+def test_all_ten_archs_present():
+    assert set(ARCHS) == set(ASSIGNED_DIMS)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED_DIMS))
+def test_assigned_dims_exact(name):
+    c = get_arch(name)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == ASSIGNED_DIMS[name]
+    assert c.citation  # every config cites its source
+
+
+def test_shapes_exact():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_moe_configs():
+    q = get_arch("qwen3-moe-235b-a22b")
+    assert q.n_experts == 128 and q.experts_per_token == 8
+    g = get_arch("grok-1-314b")
+    assert g.n_experts == 8 and g.experts_per_token == 2
+
+
+def test_skip_table():
+    long = get_shape("long_500k")
+    runs = {a for a in ARCHS if supports_shape(ARCHS[a], long)}
+    assert runs == {"mamba2-370m", "recurrentgemma-9b", "gemma3-4b"}
+    # every arch runs all other shapes
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        for a in ARCHS:
+            assert supports_shape(ARCHS[a], get_shape(s))
+
+
+def test_pattern_periods():
+    assert get_arch("recurrentgemma-9b").pattern_period == 3
+    assert get_arch("gemma3-4b").pattern_period == 6
+    assert get_arch("llama-3.2-vision-90b").pattern_period == 5
+    assert get_arch("qwen2.5-3b").pattern_period == 1
+
+
+def test_layer_kinds_gemma3():
+    c = get_arch("gemma3-4b")
+    kinds = [c.layer_kind(i) for i in range(6)]
+    assert kinds == ["local_attn"] * 5 + ["global_attn"]
+
+
+def test_reduced_variants_are_small():
+    for name, c in ARCHS.items():
+        r = c.reduced()
+        assert r.d_model <= 512 and r.n_layers <= 6 and r.n_experts <= 4
+        assert r.family == c.family
+        # reduced keeps the block pattern family
+        assert {r.layer_kind(i) for i in range(r.n_layers)} \
+            <= {c.layer_kind(i) for i in range(c.n_layers)} | {"global_attn"}
+
+
+def test_param_count_estimate_close():
+    """Analytic ArchConfig.param_count vs exact schema count: within 12%."""
+    from repro.models import build
+    for name, c in ARCHS.items():
+        exact = build(c).count_params()
+        est = c.param_count()
+        assert abs(est - exact) / exact < 0.12, (name, est, exact)

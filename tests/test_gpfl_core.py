@@ -1,0 +1,165 @@
+"""GPFL core: GP metric (Eq. 3/5), GPCB bandit (Eq. 6-8), selectors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gp, gpcb
+from repro.core.selector import (FedCorSelector, GPFLSelector, PowDSelector,
+                                 RandomSelector, RoundFeedback, make_selector)
+
+
+def _rand_tree(rng, k=None):
+    shape = lambda s: (k,) + s if k else s
+    return {
+        "a": jnp.asarray(rng.normal(size=shape((8, 4))), jnp.float32),
+        "b": {"c": jnp.asarray(rng.normal(size=shape((17,))), jnp.float32)},
+    }
+
+
+class TestGP:
+    def test_matches_flat_formula(self):
+        rng = np.random.default_rng(0)
+        g = _rand_tree(rng)
+        d = _rand_tree(rng)
+        got = float(gp.gp_score_tree(g, d))
+        gv = np.concatenate([np.ravel(g["a"]), np.ravel(g["b"]["c"])])
+        dv = np.concatenate([np.ravel(d["a"]), np.ravel(d["b"]["c"])])
+        want = float(gv @ dv / np.linalg.norm(dv))
+        assert abs(got - want) < 1e-4
+
+    def test_stacked_matches_loop(self):
+        rng = np.random.default_rng(1)
+        stacked = _rand_tree(rng, k=5)
+        d = _rand_tree(rng)
+        s1 = gp.gp_scores_stacked(stacked, d)
+        per = [jax.tree.map(lambda a: a[i], stacked) for i in range(5)]
+        s2 = gp.gp_scores_tree(per, d)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+
+    def test_jvp_scores_equal_grad_dots(self):
+        """<∇L_i, m> via jvp == explicit per-client grad dots (the key
+        identity behind the beyond-paper train step)."""
+        rng = np.random.default_rng(2)
+        W = jnp.asarray(rng.normal(size=(6, 3)), jnp.float32)
+        X = jnp.asarray(rng.normal(size=(4, 10, 6)), jnp.float32)  # 4 clients
+
+        def per_client_loss(w):
+            pred = jnp.einsum("ktd,dc->ktc", X, w)
+            return jnp.mean(jnp.square(pred), axis=(1, 2))
+
+        m = jnp.asarray(rng.normal(size=(6, 3)), jnp.float32)
+        s_jvp = gp.gp_scores_jvp(per_client_loss, W, m)
+        grads = [jax.grad(lambda w, i=i: per_client_loss(w)[i])(W)
+                 for i in range(4)]
+        dn = jnp.linalg.norm(m)
+        s_explicit = jnp.stack([jnp.sum(g * m) / dn for g in grads])
+        np.testing.assert_allclose(np.asarray(s_jvp),
+                                   np.asarray(s_explicit), rtol=1e-4)
+
+    def test_normalize_is_softmax(self):
+        s = jnp.asarray([1.0, 2.0, 3.0])
+        np.testing.assert_allclose(np.asarray(gp.normalize_gp(s)),
+                                   np.asarray(jax.nn.softmax(s)), rtol=1e-6)
+
+
+class TestGPCB:
+    def test_alpha_schedule(self):
+        assert float(gpcb.alpha_schedule(jnp.float32(0), 100)) == 0.0
+        assert abs(float(gpcb.alpha_schedule(jnp.float32(50), 100)) - 0.5) \
+            < 1e-6
+        assert abs(float(gpcb.alpha_schedule(jnp.float32(50), 100, rho=2.0))
+                   - 1.0) < 1e-6
+
+    def test_never_selected_is_infinite(self):
+        st = gpcb.init_state(4)
+        st = st._replace(round=jnp.float32(5),
+                         count=jnp.asarray([2., 0., 1., 0.]),
+                         reward_sum=jnp.asarray([1., 0., .5, 0.]))
+        u = np.asarray(gpcb.gpcb_values(st, 100))
+        assert np.isinf(u[1]) and np.isinf(u[3])
+        assert np.isfinite(u[0]) and np.isfinite(u[2])
+
+    def test_exploration_bonus_decays_with_count(self):
+        st = gpcb.init_state(2)
+        st = st._replace(round=jnp.float32(50),
+                         count=jnp.asarray([1., 40.]),
+                         reward_sum=jnp.asarray([0.5, 20.]))
+        u = np.asarray(gpcb.gpcb_values(st, 100))
+        # equal means (0.5) but lower count ⇒ bigger bonus
+        assert u[0] > u[1]
+
+    def test_calibration_eq8(self):
+        mu = jnp.asarray([0.2, 0.4])
+        # accuracy moved up → 2·exp(ΔA) amplification (clipped to [0,1])
+        out = np.asarray(gpcb.calibrate_reward(mu, 0.6, 0.5, 1.0, 1.0))
+        want = np.minimum(np.asarray(mu) * 2 * np.exp(0.1), 1.0)
+        np.testing.assert_allclose(out, want, rtol=1e-5)
+        # accuracy unchanged → exp(ΔF) branch
+        out = np.asarray(gpcb.calibrate_reward(mu, 0.5, 0.5, 0.8, 1.0))
+        want = np.asarray(mu) * np.exp(-0.2)
+        np.testing.assert_allclose(out, want, rtol=1e-5)
+
+    def test_update_state_counts(self):
+        st = gpcb.init_state(3)
+        mask = jnp.asarray([1., 0., 1.])
+        st = gpcb.update_state(st, mask, jnp.asarray([.1, .9, .3]), 0.5, 1.0)
+        np.testing.assert_allclose(np.asarray(st.count), [1, 0, 1])
+        np.testing.assert_allclose(np.asarray(st.reward_sum), [.1, 0, .3],
+                                   rtol=1e-6)
+        assert float(st.round) == 1.0
+
+
+class TestSelectors:
+    def test_random_selects_k_unique(self):
+        s = RandomSelector(20, 5)
+        ids = s.select(np.random.default_rng(0), 0)
+        assert len(ids) == 5 == len(set(ids.tolist()))
+
+    def test_gpfl_seed_and_first_round(self):
+        s = GPFLSelector(10, 3, total_rounds=100)
+        gp_all = np.arange(10, dtype=np.float32)
+        s.seed_gp(gp_all)
+        ids = s.select(np.random.default_rng(0), 0)
+        assert set(ids.tolist()) == {7, 8, 9}
+
+    def test_gpfl_explores_unselected(self):
+        s = GPFLSelector(6, 2, total_rounds=100)
+        s.seed_gp(np.asarray([5, 4, 3, 2, 1, 0], np.float32))
+        rng = np.random.default_rng(0)
+        seen = set()
+        ids = s.select(rng, 0)
+        for t in range(6):
+            seen |= set(ids.tolist())
+            s.observe(RoundFeedback(t, ids, np.ones(len(ids), np.float32),
+                                    0.5 + 0.01 * t, 1.0 - 0.01 * t))
+            ids = s.select(rng, t + 1)
+        assert seen == set(range(6))  # full coverage within N/K + 2 rounds
+
+    def test_powd_picks_highest_loss(self):
+        s = PowDSelector(10, 2, d=6)
+        rng = np.random.default_rng(0)
+        cands = s.propose_candidates(rng)
+        losses = np.arange(6, dtype=np.float32)
+        s.receive_candidate_losses(losses)
+        ids = s.select(rng, 3)
+        assert set(ids.tolist()) == set(cands[np.argsort(-losses)[:2]].tolist())
+
+    def test_fedcor_runs_and_uses_covariance(self):
+        s = FedCorSelector(8, 2, warmup=2)
+        rng = np.random.default_rng(0)
+        for t in range(5):
+            ids = s.select(rng, t)
+            assert len(ids) == 2
+            losses = rng.normal(size=8).astype(np.float32)
+            s.observe(RoundFeedback(t, ids, None, 0.5, 1.0,
+                                    client_losses=losses))
+        ids = s.select(rng, 5)
+        assert len(set(ids.tolist())) == 2
+
+    def test_factory(self):
+        for name in ("random", "gpfl", "powd", "fedcor"):
+            s = make_selector(name, 10, 3, 100)
+            assert s.name == name
+        with pytest.raises(KeyError):
+            make_selector("nope", 10, 3, 100)
