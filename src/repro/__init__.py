@@ -1,0 +1,10 @@
+"""GPFL reproduction: gradient-projection client selection at datacenter scale.
+
+Subpackages: ``core`` (GP + GPCB), ``models`` (the arch zoo), ``dist``
+(jitted GPFL train/serve steps + sharding rules), ``fl`` (host-side FL
+simulation), ``kernels`` (Pallas), ``launch`` (drivers/dry-run),
+``checkpoint``, ``data``, ``optim``, ``configs``, ``utils``.
+"""
+from repro.utils import jax_compat
+
+jax_compat.install()

@@ -15,7 +15,34 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+import zlib
+
+try:
+    import zstandard
+except ImportError:  # container without the zstd binding: fall back to zlib
+    zstandard = None
+
+# Checkpoints are self-describing about their compression so a file written
+# with either codec restores under either environment.
+_MAGIC_ZSTD = b"\x28\xb5\x2f\xfd"  # standard zstd frame magic
+
+
+def _compress(blob: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(blob)
+    # zstd levels span -131072..22; zlib only accepts 0..9
+    return zlib.compress(blob, max(0, min(level, 9)))
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _MAGIC_ZSTD:
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint is zstd-compressed but the 'zstandard' package "
+                "is not installed")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 _SEP = "/"
@@ -44,7 +71,7 @@ def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
             "data": arr.tobytes(),
         }
     blob = msgpack.packb({"step": step, "arrays": payload})
-    blob = zstandard.ZstdCompressor(level=level).compress(blob)
+    blob = _compress(blob, level)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(tmp, "wb") as f:
@@ -58,7 +85,7 @@ def restore_checkpoint(path: str, like, *, shardings=None):
     pytree of jax.sharding.Sharding) is given, each leaf is device_put with
     its target sharding (resharding on restore)."""
     with open(path, "rb") as f:
-        blob = zstandard.ZstdDecompressor().decompress(f.read())
+        blob = _decompress(f.read())
     obj = msgpack.unpackb(blob)
     arrays = obj["arrays"]
 

@@ -1,0 +1,44 @@
+"""``repro.dist`` — the distributed GPFL training/serving layer.
+
+This package ties the paper's core (``repro.core``: GP scoring + the GPCB
+bandit) to the model zoo (``repro.models``) as single-jit step functions fit
+for a sharded mesh:
+
+* :mod:`repro.dist.state`     — :class:`TrainState` pytree + ``init_train_state``.
+* :mod:`repro.dist.gpfl_step` — ``make_gpfl_train_step`` (GP scores as
+  projections onto the momentum buffer, GPCB-gated top-k selection and the
+  gated MGD update, all inside jit), ``make_plain_train_step`` (the ungated
+  baseline it is bit-equal to with ``gate=False``) and
+  ``make_gpfl_apply_step`` (amortised selection).  The jvp-vs-grads score
+  equivalence and the in-jit gating contract are documented there.
+* :mod:`repro.dist.sharding`  — ``arch_rules`` / ``rules_for``: logical-axis
+  → mesh-axis layouts per (arch, shape).
+* :mod:`repro.dist.serve`     — ``make_prefill_step`` / ``make_serve_step``.
+* :mod:`repro.dist.generate`  — ``make_generate``: one-jit greedy decoding.
+
+Everything here is mesh-agnostic: on CPU the rules collapse to no-ops, on a
+pod the same step functions lower against ``rules_for``'s PartitionSpecs
+(see ``repro.launch.dryrun``).
+"""
+from repro.dist.generate import make_generate
+from repro.dist.gpfl_step import (
+    make_gpfl_apply_step,
+    make_gpfl_train_step,
+    make_plain_train_step,
+)
+from repro.dist.serve import make_prefill_step, make_serve_step
+from repro.dist.sharding import arch_rules, rules_for
+from repro.dist.state import TrainState, init_train_state
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_gpfl_train_step",
+    "make_gpfl_apply_step",
+    "make_plain_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_generate",
+    "arch_rules",
+    "rules_for",
+]

@@ -1,0 +1,54 @@
+"""Whole-sequence greedy generation as ONE jitted ``lax.scan``.
+
+The stepwise serving loop (``make_serve_step``) pays a host→device round
+trip per token; :func:`make_generate` fuses prompt ingestion and generation
+into a single compiled program — the scan body is one ``decode_step``, so
+the per-token cost is identical to the serve step minus dispatch overhead.
+Token-for-token equal to the stepwise reference (asserted in
+``tests/test_dist_steps.py::test_generate_matches_stepwise``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_generate(api, *, prompt_len: int, gen_len: int, rules=None):
+    """Build ``(params, cache, prompt, rng) → (tokens (B, gen_len), cache)``.
+
+    ``prompt`` is (B, prompt_len) int32; the cache must hold at least
+    ``prompt_len + gen_len`` positions (``api.init_cache``).  Decoding is
+    greedy (f32 argmax — ``rng`` is accepted for API stability and unused).
+    One scan of ``prompt_len + gen_len - 1`` steps: positions ``t <
+    prompt_len`` teacher-force the prompt token; the first sampled token
+    comes from the logits at the last prompt position.
+    """
+    if prompt_len < 1 or gen_len < 1:
+        raise ValueError("prompt_len and gen_len must be >= 1")
+
+    def generate(params, cache, prompt, rng):
+        del rng  # greedy decoding
+        B = prompt.shape[0]
+        out0 = jnp.zeros((B, gen_len), jnp.int32)
+
+        def body(carry, t):
+            cache, prev, out = carry
+            prompt_tok = jax.lax.dynamic_slice_in_dim(
+                prompt, jnp.minimum(t, prompt_len - 1), 1, axis=1)
+            tok = jnp.where(t < prompt_len, prompt_tok, prev)
+            logits, cache = api.decode_step(params, cache, tok,
+                                            t.astype(jnp.int32), rules=rules)
+            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32),
+                             axis=-1).astype(jnp.int32)[:, None]
+            idx = jnp.clip(t - (prompt_len - 1), 0, gen_len - 1)
+            written = jax.lax.dynamic_update_slice_in_dim(out, nxt, idx,
+                                                          axis=1)
+            out = jnp.where(t >= prompt_len - 1, written, out)
+            return (cache, nxt, out), None
+
+        (cache, _, out), _ = jax.lax.scan(
+            body, (cache, prompt[:, :1], out0),
+            jnp.arange(prompt_len + gen_len - 1, dtype=jnp.int32))
+        return out, cache
+
+    return generate

@@ -1,0 +1,48 @@
+"""Serving steps over the uniform ``ModelApi`` — the functions the
+decode/prefill dry-runs lower and the batched-serving example drives.
+
+Both factories close over static configuration (sharding rules, remat) and
+return pure functions safe to ``jax.jit`` with donated caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(api, *, rules=None, remat: str = "full",
+                      unroll: bool = False):
+    """Prompt-ingestion step: ``(params, batch) → logits (B, S, V)``.
+
+    One full forward over the prompt batch — the compute-bound half of
+    serving (the decode loop is bandwidth-bound; see ``benchmarks/``).
+    ``rules`` pins activation shardings on a mesh.
+    """
+
+    def prefill_step(params, batch):
+        logits, _ = api.forward(params, batch, rules=rules, remat=remat,
+                                unroll=unroll)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(api, *, rules=None, unroll: bool = False):
+    """One greedy decode step against a KV cache:
+    ``(params, cache, tokens, pos) → (next_token, logits, new_cache)``.
+
+    ``tokens`` is (B, 1) int32, ``pos`` a scalar int32 write position;
+    ``next_token`` is the (B, 1) int32 argmax of the final-position logits
+    (computed in f32 so bf16 serving picks the same token as the f32
+    reference).  The cache is functionally updated — jit with
+    ``donate_argnums=1`` to update it in place.
+    """
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = api.decode_step(params, cache, tokens, pos,
+                                            rules=rules, unroll=unroll)
+        next_token = jnp.argmax(
+            logits[:, -1].astype(jnp.float32), axis=-1).astype(jnp.int32)
+        return next_token[:, None], logits, new_cache
+
+    return serve_step

@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules per (arch, shape, mesh).
+
+The model zoo names its parameter/activation axes logically (``heads``,
+``ff``, ``vocab``, ``batch``, ``cache_seq``, ... — see
+``repro.models.common``); this module decides which *mesh* axis each logical
+axis maps to.  Two entry points:
+
+* :func:`arch_rules`  — parameter-side layout for one architecture: what can
+  shard over the ``model`` axis given head/vocab/expert divisibility, and the
+  MoE expert-weight layout.
+* :func:`rules_for`   — the full rule dict for an (arch, shape) pair: adds
+  activation/batch/cache decisions (data parallelism, sequence parallelism,
+  decode cache layout) and the MoE dispatch chunking knobs.
+
+Both are pure functions of their (hashable) config inputs — the same inputs
+always produce the same dict, so a step compiled from the rules is
+reproducible across processes (the dry-run and the launch scripts rely on
+this).
+
+Layout policy, in brief:
+
+* ``heads``/``kv_heads`` shard over ``model`` when divisible; an arch whose
+  head *count* doesn't divide the axis (e.g. phi3-medium's 40 heads on a
+  16-way axis) falls back to sharding ``head_dim`` instead.
+* ``vocab`` shards only when divisible (whisper's 51865 stays replicated).
+* MoE: when the expert count divides the model axis the experts themselves
+  are model-sharded and each expert's ``ff`` rows spread over ``data``
+  (qwen3-moe: 128 experts / 16).  When it does not (grok-1: 8 experts on a
+  16-way axis) the experts replicate and the per-expert ``ff`` dim is
+  2-D-sharded over ``(data, model)``, with the matching *activation* ``ff``
+  dim model-sharded so the expert einsum FLOPs are not replicated
+  ``model_size``×.
+* decode caches: batch-shard when the global batch covers the data axis;
+  otherwise (long_500k's batch-of-1) shard the cache *sequence* dim.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+# Transient MoE dispatch buffer budget (bytes/device) used to pick the
+# token-chunking factor: each (group, chunk) materialises a
+# (tokens_chunk · experts_per_token, d_model) bf16 buffer.
+MOE_DISPATCH_BUDGET = 256 * 2 ** 20
+
+
+def _div(n: int, m: int) -> bool:
+    return n > 0 and n % m == 0
+
+
+def arch_rules(cfg: ArchConfig, *, model_size: int = 16,
+               data_size: int = 16, multi_pod: bool = False) -> dict:
+    """Parameter-layout rules for ``cfg`` on a ``model_size``-way model axis.
+
+    Returns a logical-axis → mesh-axis dict consumed by
+    ``specs_from_schema`` / ``param_specs``.  Activation axes (``batch``,
+    ``act_seq``, caches) are left replicated here — :func:`rules_for` fills
+    them in per input shape.
+    """
+    heads = "model" if _div(cfg.n_heads, model_size) else None
+    kv_heads = "model" if _div(cfg.n_kv_heads, model_size) else None
+    # head-count not divisible → shard inside each head instead
+    head_dim = "model" if (heads is None
+                           and _div(cfg.resolved_head_dim, model_size)) else None
+
+    experts = expert_ff = expert_ff_act = None
+    ff = "model" if _div(cfg.d_ff, model_size) else None
+    if cfg.is_moe:
+        ff = None  # d_ff is per-expert for MoE archs; handled below
+        if _div(cfg.n_experts, model_size):
+            experts = "model"
+            expert_ff = "data" if _div(cfg.d_ff, data_size) else None
+            expert_ff_act = None
+        else:
+            experts = None
+            if _div(cfg.d_ff, data_size * model_size):
+                expert_ff = ("data", "model")
+            elif _div(cfg.d_ff, model_size):
+                expert_ff = "model"
+            expert_ff_act = "model" if _div(cfg.d_ff, model_size) else None
+
+    ssm_width = cfg.ssm_expand * cfg.d_model if cfg.ssm_state else 0
+    ssm_heads = ssm_width // cfg.ssm_head_dim if cfg.ssm_state else 0
+
+    return {
+        # parameters
+        "embed": None,
+        "heads": heads,
+        "kv_heads": kv_heads,
+        "head_dim": head_dim,
+        "ff": ff,
+        "vocab": "model" if _div(cfg.vocab_size, model_size) else None,
+        "experts": experts,
+        "expert_ff": expert_ff,
+        "expert_ff_act": expert_ff_act,
+        "lru": "model" if _div(ssm_width, model_size) else None,
+        "ssm_heads": "model" if _div(ssm_heads, model_size) else None,
+        "layers": None,
+        # activations (shape-independent defaults; rules_for overrides)
+        "batch": None,
+        "seq": None,
+        "act_seq": None,
+        "cache_batch": None,
+        "cache_seq": None,
+        "patches": None,
+        "frames": None,
+    }
+
+
+def rules_for(cfg: ArchConfig, shape: ShapeConfig, *, model_size: int = 16,
+              data_size: int = 16, multi_pod: bool = False) -> dict:
+    """Full sharding rules for running ``cfg`` at ``shape`` on a
+    (``data_size`` × ``model_size``) mesh (× 2 pods when ``multi_pod``).
+
+    Raises ``ValueError`` when ``shape.global_batch`` is larger than one but
+    does not divide the data axis — a silent uneven batch shard would skew
+    the per-group gradient statistics GPFL relies on.
+    """
+    rules = arch_rules(cfg, model_size=model_size, data_size=data_size,
+                       multi_pod=multi_pod)
+    batch_axes = ("pod", "data") if multi_pod else "data"
+    data_total = data_size * (2 if multi_pod else 1)
+    B, S = shape.global_batch, shape.seq_len
+
+    if B == 1:
+        batch = None  # single sequence: replicate batch, shard elsewhere
+    elif B % data_total:
+        raise ValueError(
+            f"global_batch={B} of shape {shape.name!r} does not divide the "
+            f"data axis ({data_total} shards); pick a batch that is a "
+            f"multiple of the data parallelism or reshape the mesh")
+    else:
+        batch = batch_axes
+    rules["batch"] = batch
+
+    if shape.kind == "decode":
+        # one token per step: no sequence parallelism; lay the KV cache out
+        # over data by batch when possible, else by sequence (long_500k).
+        rules["act_seq"] = None
+        if batch is not None:
+            rules["cache_batch"] = batch
+            rules["cache_seq"] = None
+        else:
+            rules["cache_batch"] = None
+            rules["cache_seq"] = "data" if _div(S, data_total) else None
+    else:
+        # sequence parallelism on the residual stream when seq divides the
+        # model axis (the train/prefill activations dominate memory)
+        rules["act_seq"] = "model" if _div(S, model_size) else None
+        rules["cache_batch"] = batch
+        rules["cache_seq"] = None
+
+    if cfg.is_moe and shape.kind in ("train", "prefill"):
+        tokens = B * S
+        groups = data_total if _div(tokens, data_total) else 1
+        per_group = tokens // groups
+        token_budget = max(1, MOE_DISPATCH_BUDGET //
+                           (max(1, cfg.experts_per_token) * cfg.d_model * 2))
+        chunks = max(1, -(-per_group // token_budget))  # ceil division
+        while per_group % chunks:
+            chunks += 1
+        rules["_moe_groups"] = groups
+        rules["_moe_chunks"] = chunks
+
+    return rules

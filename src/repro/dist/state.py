@@ -1,0 +1,51 @@
+"""Datacenter train state: one pytree carried through the jitted GPFL step.
+
+``TrainState`` bundles everything Eq. 1-3 and the GPCB bandit need between
+rounds:
+
+* ``params``    — model parameters (any dtype; updates run in f32),
+* ``momentum``  — the MGD buffer ``d`` (Eq. 1), always f32.  This is ALSO the
+  GP projection direction of Eq. 3 — no separate copy exists,
+* ``bandit``    — :class:`repro.core.gpcb.BanditState` over the ``n_groups``
+  virtual clients (gradient groups),
+* ``step``      — global step counter (int32 scalar),
+* ``prev_loss`` — last round's loss, for the Eq. 8 reward re-calibration and
+  for logging.
+
+A ``NamedTuple`` rather than a dataclass so the dry-run can rebuild the
+matching ``PartitionSpec`` tree with ``type(state)(params=..., ...)`` and
+``jax.eval_shape`` can trace :func:`init_train_state` over abstract params.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gpcb
+
+
+class TrainState(NamedTuple):
+    params: Any
+    momentum: Any
+    bandit: gpcb.BanditState
+    step: jnp.ndarray
+    prev_loss: jnp.ndarray
+
+
+def init_train_state(params, n_groups: int) -> TrainState:
+    """Fresh state: zero momentum (f32, mirroring ``params``' shapes), a
+    zeroed ``n_groups``-arm bandit, step 0.
+
+    Works on concrete arrays and on ``ShapeDtypeStruct`` trees (under
+    ``jax.eval_shape``) alike.
+    """
+    return TrainState(
+        params=params,
+        momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+        bandit=gpcb.init_state(n_groups),
+        step=jnp.zeros((), jnp.int32),
+        prev_loss=jnp.zeros((), jnp.float32),
+    )

@@ -98,11 +98,15 @@ def ssd_chunked(xh, dt, a_log, bmat, cmat, chunk: int, h0=None):
     bc = r(bmat.astype(jnp.float32), (N,))
     cc = r(cmat.astype(jnp.float32), (N,))
 
-    # within-chunk (quadratic, masked decay kernel)
+    # within-chunk (quadratic, masked decay kernel).  Mask BEFORE the exp:
+    # non-causal seg is large *positive* (cum decreases in k), so exp(seg)
+    # overflows to inf there and where(causal, exp(seg), 0) would feed
+    # inf·0 = NaN into the backward pass (bites at chunk ≥ 64 with the
+    # a_log="ones" init); exp(-inf) = 0 keeps both directions finite.
     seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,q,k,H)
     idx = jnp.arange(chunk)
     causal = idx[:, None] >= idx[None, :]
-    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
     qk = jnp.einsum("bcqn,bckn->bcqk", cc, bc)             # (B,nc,q,k)
     y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", qk, L, xc)
 

@@ -1,0 +1,82 @@
+"""Forward-compatibility shims for older jax (this container ships 0.4.37).
+
+The codebase is written against the current jax mesh API (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.get_abstract_mesh``).  On jax < 0.6 those
+names do not exist, but equivalent behaviour does:
+
+* ``jax.set_mesh(mesh)``  → the legacy ``Mesh`` *is* a context manager and
+  entering it enables ``with_sharding_constraint(x, PartitionSpec(...))``,
+  which is all the launch/dry-run paths need from the ambient mesh.
+* ``jax.shard_map``       → ``jax.experimental.shard_map.shard_map`` with the
+  keyword renames ``check_vma → check_rep`` and ``axis_names → auto``
+  (complement over the mesh axes).
+* ``jax.sharding.get_abstract_mesh`` → returns ``None`` (callers treat that
+  as "no ambient mesh" and skip manual-sharding fast paths; GSPMD
+  auto-sharding handles those cases).
+* ``Compiled.cost_analysis`` → normalised to return a dict (old jax returns
+  a one-per-program list).  Best-effort: wrapped in try/except so private
+  API drift can never break ``import repro``.
+
+:func:`install` is idempotent; apart from the cost_analysis normalisation
+(idempotent and value-preserving on current jax) it patches only missing
+attributes.  It runs on ``import repro`` (see ``repro/__init__.py``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax, "set_mesh"):
+        # Mesh objects are context managers on old jax; returning the mesh
+        # makes ``with jax.set_mesh(mesh):`` equivalent to ``with mesh:``.
+        jax.set_mesh = lambda mesh: mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      axis_names=None, check_vma=True, **kw):
+            auto = frozenset()
+            if axis_names is not None and mesh is not None:
+                auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma,
+                              auto=auto, **kw)
+
+        jax.shard_map = shard_map
+
+    # jax < 0.5 returns cost_analysis() as a one-per-program LIST of dicts;
+    # current jax returns the dict itself.  Normalise to the dict so callers
+    # can do ``compiled.cost_analysis().get("flops")``.  Best-effort: the
+    # patch touches a private class, so any API drift must not break
+    # ``import repro`` for code that never calls cost_analysis.
+    try:
+        from jax._src import stages as _stages
+        _orig_cost = _stages.Compiled.cost_analysis
+        if not getattr(_orig_cost, "_repro_normalised", False):
+            def cost_analysis(self):
+                ca = _orig_cost(self)
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0] if ca else {}
+                return ca
+
+            cost_analysis._repro_normalised = True
+            _stages.Compiled.cost_analysis = cost_analysis
+    except Exception:  # noqa: BLE001
+        pass
+
+    try:
+        jax.sharding.get_abstract_mesh
+    except AttributeError:
+        def get_abstract_mesh():
+            try:
+                from jax._src import mesh as _mesh_src
+                am = _mesh_src.get_abstract_mesh()
+            except Exception:  # noqa: BLE001 — private API; any failure → None
+                return None
+            # old AbstractMesh lacks .empty; report "no ambient mesh" so
+            # callers fall back to GSPMD auto-sharding
+            return am if hasattr(am, "empty") else None
+
+        jax.sharding.get_abstract_mesh = get_abstract_mesh

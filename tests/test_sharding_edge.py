@@ -1,0 +1,86 @@
+"""Edge cases for ``repro.dist.sharding`` beyond the seed rules tests:
+MoE expert-axis layouts at small mesh sizes, indivisible-batch errors, and
+determinism of ``rules_for``."""
+import dataclasses
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ShapeConfig
+from repro.dist.sharding import arch_rules, rules_for
+
+
+class TestMoEExpertAxis:
+    def test_reduced_moe_experts_shard_small_mesh(self):
+        """4 reduced experts on a 2-way model axis → experts model-sharded,
+        per-expert ff rows over data (the qwen3 layout at toy scale)."""
+        r = arch_rules(ARCHS["qwen3-moe-235b-a22b"].reduced(), model_size=2,
+                       data_size=2)
+        assert r["experts"] == "model"
+        assert r["expert_ff"] == "data"
+        assert r["expert_ff_act"] is None
+
+    def test_indivisible_experts_fall_back_to_2d_ff(self):
+        """8 experts on a 16-way axis can't shard the expert dim; the
+        per-expert ff must absorb BOTH mesh axes (grok layout)."""
+        r = arch_rules(ARCHS["grok-1-314b"], model_size=16, data_size=16)
+        assert r["experts"] is None
+        assert r["expert_ff"] == ("data", "model")
+        assert r["expert_ff_act"] == "model"
+
+    def test_dense_arch_has_no_expert_rules(self):
+        r = arch_rules(ARCHS["qwen2.5-3b"])
+        assert r["experts"] is None
+        assert r["expert_ff"] is None
+        assert r["expert_ff_act"] is None
+
+    def test_moe_dispatch_knobs_only_for_moe_train(self):
+        r = rules_for(ARCHS["qwen3-moe-235b-a22b"], SHAPES["train_4k"])
+        assert r["_moe_groups"] >= 1 and r["_moe_chunks"] >= 1
+        assert "_moe_groups" not in rules_for(ARCHS["qwen2.5-3b"],
+                                              SHAPES["train_4k"])
+        assert "_moe_groups" not in rules_for(ARCHS["qwen3-moe-235b-a22b"],
+                                              SHAPES["decode_32k"])
+
+
+class TestBatchDivisibility:
+    def test_indivisible_batch_raises_clear_error(self):
+        shape = ShapeConfig("odd_batch", 128, 6, "train")
+        with pytest.raises(ValueError, match="does not divide the data axis"):
+            rules_for(ARCHS["qwen2.5-3b"], shape, data_size=4)
+
+    def test_indivisible_decode_batch_raises_too(self):
+        shape = ShapeConfig("odd_decode", 128, 10, "decode")
+        with pytest.raises(ValueError, match="does not divide"):
+            rules_for(ARCHS["gemma3-4b"], shape, data_size=16)
+
+    def test_batch_of_one_replicates_instead_of_raising(self):
+        shape = ShapeConfig("b1", 128, 1, "train")
+        r = rules_for(ARCHS["qwen2.5-3b"], shape, data_size=16)
+        assert r["batch"] is None
+
+    def test_multi_pod_uses_total_data_shards(self):
+        # 32 divides 16 but not 2×16 — the pod axis must be counted
+        shape = dataclasses.replace(SHAPES["train_4k"], global_batch=16)
+        rules_for(ARCHS["qwen2.5-3b"], shape, data_size=16)  # ok single-pod
+        with pytest.raises(ValueError, match="does not divide"):
+            rules_for(ARCHS["qwen2.5-3b"], shape, data_size=16,
+                      multi_pod=True)
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("arch", ["qwen2.5-3b", "qwen3-moe-235b-a22b",
+                                      "mamba2-370m", "whisper-small"])
+    @pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+    def test_rules_for_is_deterministic(self, arch, shape):
+        """Same (arch, shape, mesh) → same dict, call after call — compiled
+        steps must be reproducible across processes."""
+        a = rules_for(ARCHS[arch], SHAPES[shape])
+        b = rules_for(ARCHS[arch], SHAPES[shape])
+        assert a == b
+        assert list(a) == list(b)  # key order too (spec trees iterate dicts)
+
+    def test_arch_rules_pure_function_of_inputs(self):
+        cfg = ARCHS["gemma3-4b"]
+        assert arch_rules(cfg, model_size=8) == arch_rules(cfg, model_size=8)
+        assert arch_rules(cfg, model_size=8) != arch_rules(cfg, model_size=7)
