@@ -2,16 +2,21 @@
 
 One function per paper table/figure (Table II, Fig. 4-7) on the synthetic
 FEMNIST stand-in (scaled-down rounds — the offline container has no FEMNIST;
-see DESIGN.md), plus micro-benchmarks of the Pallas kernel wrappers.
+see DESIGN.md), micro-benchmarks of the Pallas kernel wrappers, and the
+``engine`` bench comparing the host round loop against the compiled
+``lax.scan`` round engine (rounds/sec).
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks everything
-(CI); ``--full`` runs paper-scale rounds.  The §Roofline analysis is a
-separate entrypoint (``benchmarks.roofline``) because it must own
-XLA_FLAGS=...device_count=512 at process start.
+(CI); ``--full`` runs paper-scale rounds; ``--json PATH`` additionally
+writes the engine + kernel results as machine-readable JSON (CI uploads
+``BENCH_engine.json`` as an artifact — the bench trajectory record).  The
+§Roofline analysis is a separate entrypoint (``benchmarks.roofline``)
+because it must own XLA_FLAGS=...device_count=512 at process start.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -58,6 +63,59 @@ def _kernel_micro():
     return rows
 
 
+def _engine_micro(quick: bool = True):
+    """Host-loop vs scanned rounds/sec — the compiled round engine claim.
+
+    Two configs:
+
+    * ``dispatch_bound`` — small model / small eval, so the per-round cost
+      is dominated by the 5+ host/device crossings of the Python loop;
+      this isolates exactly the overhead the scan engine removes (and is
+      where the ≥3× rounds/sec gate applies).
+    * ``table2_quick`` — the Table II quick config, which is
+      compute-bound (the 1000-sample eval dominates), so the engine gain
+      there is Amdahl-limited; recorded for honesty alongside.
+
+    Host-loop throughput is steady-state (round 0's compile dropped);
+    engine throughput is a warm second run (compile cached in the
+    ``ScanEngine``).
+    """
+    import dataclasses
+    from benchmarks.paper_tables import _scale
+    from repro.configs.paper import femnist_experiment
+    from repro.fl import ScanEngine, run_experiment
+
+    def one(tag, exp):
+        res_py = run_experiment(exp, backend="python")
+        py_round = float(res_py.round_time_s[1:].mean())
+        eng = ScanEngine(exp)
+        eng.run()                       # compile + warm
+        res_sc = eng.run()              # steady-state
+        sc_round = float(res_sc.round_time_s.mean())
+        return {
+            "name": f"engine_{tag}",
+            "rounds": int(exp.rounds),
+            "n_clients": int(exp.n_clients),
+            "clients_per_round": int(exp.clients_per_round),
+            "python_s_per_round": py_round,
+            "scan_s_per_round": sc_round,
+            "python_rounds_per_s": 1.0 / py_round,
+            "scan_rounds_per_s": 1.0 / sc_round,
+            "speedup": py_round / sc_round,
+            "selections_match": bool(np.array_equal(res_py.selections,
+                                                    res_sc.selections)),
+        }
+
+    rounds = 24 if quick else 60
+    dispatch = dataclasses.replace(
+        femnist_experiment("2spc", "gpfl"), rounds=rounds, n_clients=64,
+        clients_per_round=4, samples_per_client_mean=40,
+        samples_per_client_std=10, local_iters=3, local_batch_size=16,
+        eval_size=256)
+    table2 = _scale(femnist_experiment("2spc", "gpfl"), rounds)
+    return [one("dispatch_bound", dispatch), one("table2_quick", table2)]
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -65,14 +123,19 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale rounds (hours)")
     ap.add_argument("--only", default=None,
-                    help="comma-list: table2,fig4,fig5,fig6,fig7,kernels")
+                    help="comma-list: table2,fig4,fig5,fig6,fig7,kernels,"
+                         "engine")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write engine+kernel results as JSON "
+                         "(e.g. BENCH_engine.json)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables as pt
 
     rounds = 12 if args.quick else 60
     only = set(args.only.split(",")) if args.only else \
-        {"table2", "fig4", "fig5", "fig6", "fig7", "kernels"}
+        {"table2", "fig4", "fig5", "fig6", "fig7", "kernels", "engine"}
+    bench_data = {}
 
     print("name,us_per_call,derived")
     t_all = time.time()
@@ -109,9 +172,38 @@ def main(argv=None) -> None:
             print(f"fig7_{r['variant']},0,final_acc={r['final_acc']:.4f}",
                   flush=True)
 
+    if "engine" in only:
+        engine_rows = _engine_micro(quick=args.quick)
+        bench_data["engine"] = engine_rows
+        for r in engine_rows:
+            print(f"{r['name']},{r['scan_s_per_round'] * 1e6:.0f},"
+                  f"python_rps={r['python_rounds_per_s']:.2f};"
+                  f"scan_rps={r['scan_rounds_per_s']:.2f};"
+                  f"speedup={r['speedup']:.2f};"
+                  f"selections_match={int(r['selections_match'])}",
+                  flush=True)
+
     if "kernels" in only:
-        for name, us, derived in _kernel_micro():
+        kernel_rows = _kernel_micro()
+        bench_data["kernels"] = [
+            {"name": name, "us_per_call": us, "elems": derived}
+            for name, us, derived in kernel_rows
+        ]
+        for name, us, derived in kernel_rows:
             print(f"{name},{us:.0f},elems={derived}", flush=True)
+
+    if args.json:
+        import jax
+        bench_data["meta"] = {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "mode": "full" if args.full else
+                    ("quick" if args.quick else "default"),
+            "total_s": round(time.time() - t_all, 1),
+        }
+        with open(args.json, "w") as f:
+            json.dump(bench_data, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
     print(f"# total {time.time() - t_all:.1f}s", file=sys.stderr)
 

@@ -1,11 +1,20 @@
 """Quickstart: GPFL vs Random client selection on Non-IID synthetic FEMNIST.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --backend scan
 
 ~2 minutes on CPU.  Reproduces the paper's core claim in miniature: under
 label-skewed (2-shards-per-client) data, gradient-projection selection beats
 random selection, and covers every client sooner.
+
+``--backend scan`` runs the same experiments through the compiled round
+engine (all rounds inside one jitted ``lax.scan`` — see
+``src/repro/fl/engine.py``); for GPFL it replays the host loop's
+selection decisions (observed to match round-for-round on configs like
+this one; exact equality on long runs is not guaranteed — the engine
+ranks in float32).
 """
+import argparse
 import dataclasses
 import sys
 
@@ -16,6 +25,13 @@ from repro.fl import run_experiment
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("python", "scan"),
+                    default="python",
+                    help="host round loop (reference) or compiled "
+                         "lax.scan round engine")
+    args = ap.parse_args()
+
     results = {}
     for selector in ("random", "gpfl"):
         exp = femnist_experiment("2spc", selector, rounds=40, seed=0)
@@ -23,8 +39,10 @@ def main():
                                   samples_per_client_mean=80,
                                   local_iters=10, eval_size=1000)
         print(f"== running {selector} ({exp.rounds} rounds, "
-              f"{exp.n_clients} clients, K={exp.clients_per_round}) ==")
-        results[selector] = run_experiment(exp, log_every=10)
+              f"{exp.n_clients} clients, K={exp.clients_per_round}, "
+              f"backend={args.backend}) ==")
+        results[selector] = run_experiment(exp, log_every=10,
+                                           backend=args.backend)
 
     print("\nselector  final_acc  acc@50%  rounds_to_full_coverage")
     for name, res in results.items():

@@ -15,6 +15,8 @@ from repro.core.gpcb import (
     gpcb_values,
     calibrate_reward,
     select_topk,
+    selection_scores,
+    observe,
     update_state,
 )
 from repro.core.selector import (
@@ -24,6 +26,7 @@ from repro.core.selector import (
     PowDSelector,
     FedCorSelector,
     make_selector,
+    gpfl_jitter_stream,
     SELECTORS,
 )
 
@@ -31,7 +34,8 @@ __all__ = [
     "gp_score_tree", "gp_scores_tree", "gp_scores_stacked",
     "gp_scores_matrix", "gp_scores_jvp", "normalize_gp",
     "BanditState", "init_state", "alpha_schedule", "gpcb_values",
-    "calibrate_reward", "select_topk", "update_state",
+    "calibrate_reward", "select_topk", "selection_scores", "observe",
+    "update_state",
     "RoundFeedback", "RandomSelector", "PowDSelector", "GPFLSelector",
-    "FedCorSelector", "make_selector", "SELECTORS",
+    "FedCorSelector", "make_selector", "gpfl_jitter_stream", "SELECTORS",
 ]

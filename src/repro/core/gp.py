@@ -54,11 +54,12 @@ def gp_scores_stacked(stacked_grads, direction):
 
 
 def gp_scores_matrix(grad_matrix, direction_vec, *, use_kernel: bool = False,
-                     interpret: bool = True):
+                     interpret=None):
     """GP from a (K, D) gradient matrix and a (D,) direction.
 
     ``use_kernel=True`` routes through the Pallas ``gp_projection`` kernel
-    (interpret mode on CPU)."""
+    (``interpret=None`` → interpret mode resolved from the backend:
+    compiled on TPU, interpreted on CPU/GPU)."""
     if use_kernel:
         from repro.kernels.ops import gp_projection
         return gp_projection(grad_matrix, direction_vec, interpret=interpret)

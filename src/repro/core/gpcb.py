@@ -14,6 +14,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.gp import normalize_gp
+
 
 class BanditState(NamedTuple):
     reward_sum: jnp.ndarray   # (N,) Σ μ_i over rounds where i was selected
@@ -69,6 +71,58 @@ def calibrate_reward(mu, acc, prev_acc, loss, prev_loss):
 def select_topk(u, k: int):
     """Top-K clients by GPCB value → (values, indices)."""
     return jax.lax.top_k(u, k)
+
+
+def selection_scores(state: BanditState, latest_gp, jitter, t,
+                     total_rounds: int, rho: float = 1.0,
+                     use_ee: bool = True):
+    """Pure-jnp mirror of ``GPFLSelector.select`` — fixed-shape, scan-safe.
+
+    Returns per-client scores whose descending argsort gives the round's
+    cohort (``jnp.argsort(-scores)[:k]``):
+
+    * ``t == 0`` — Algorithm 1's init round: rank by the seed GP of every
+      client (``latest_gp``), no randomness consumed.
+    * later rounds — GPCB values (Eq. 6); never-selected arms (+inf) are
+      lifted onto a large finite plateau ordered by the host-supplied
+      tie-break ``jitter`` (the raw ``rng.random(n)`` draw the host
+      selector consumes, precomputed into a scan input by
+      ``repro.core.selector.gpfl_jitter_stream``).
+
+    The host selector scales the draw by 1e-9: for finite arms that is an
+    exact-tie breaker only (sub-ulp at float32 — mirrored here for shape,
+    decisions ride on the u values), and for the +inf plateau any
+    *monotone* map of the draw reproduces its ordering, so the plateau
+    uses the raw draw at a float32-safe spread.
+
+    ``use_ee=False`` is the paper's Fig. 7 ablation: α = 0, pure
+    exploitation by mean reward.
+    """
+    if use_ee:
+        u = gpcb_values(state, total_rounds, rho)
+    else:
+        mean = state.reward_sum / jnp.maximum(state.count, 1.0)
+        u = jnp.where(state.count > 0, mean, jnp.inf)
+    finite = jnp.where(jnp.isinf(u), 1e9 + jitter * 1e12, u)
+    return jnp.where(jnp.asarray(t) == 0, latest_gp, finite + jitter * 1e-9)
+
+
+def observe(state: BanditState, latest_gp, selected_ids, gp_scores, acc,
+            loss):
+    """Pure-jnp mirror of ``GPFLSelector.observe``: fold one round's
+    feedback into the bandit → ``(new_state, new_latest_gp)``.
+
+    Keeps the persistent per-client C vector (``latest_gp``, Algorithm 1),
+    softmax-normalises over all N (Eq. 5), re-calibrates by global
+    progress (Eq. 8) and updates reward sums / counts (selection counts
+    ride as carried state inside the compiled engine's scan)."""
+    n = latest_gp.shape[0]
+    mask = jnp.zeros((n,), jnp.float32).at[selected_ids].set(1.0)
+    latest_gp = latest_gp.at[selected_ids].set(
+        jnp.asarray(gp_scores, jnp.float32))
+    mu = normalize_gp(latest_gp) * mask
+    mu_cal = calibrate_reward(mu, acc, state.prev_acc, loss, state.prev_loss)
+    return update_state(state, mask, mu_cal, acc, loss), latest_gp
 
 
 def update_state(state: BanditState, selected_mask, rewards, acc, loss

@@ -68,6 +68,10 @@ class GPFLSelector:
         self.latest_gp = np.zeros(n_clients, np.float32)
 
     def select(self, rng: np.random.Generator, round_idx: int):
+        # NB: the compiled engine (repro.fl.engine) re-implements this exact
+        # decision rule in pure jnp (repro.core.gpcb.selection_scores); its
+        # rng consumption is documented by gpfl_jitter_stream below.  Keep
+        # the three in sync — tests/test_engine.py pins them to each other.
         if round_idx == 0:
             # Algorithm 1 init: every client computed c_i^0; top-K by GP
             order = np.argsort(-self.latest_gp)
@@ -108,6 +112,22 @@ class GPFLSelector:
         self.state = gpcb.update_state(
             self.state, jnp.asarray(mask), jnp.asarray(mu_cal),
             fb.global_acc, fb.global_loss)
+
+
+def gpfl_jitter_stream(rng: np.random.Generator, rounds: int,
+                       n_clients: int) -> np.ndarray:
+    """The exact tie-break randomness ``GPFLSelector.select`` consumes from
+    the host rng: nothing on round 0 (pure top-K by the seed GP), one raw
+    ``rng.random(n)`` draw per later round (``select`` scales it by 1e-9).
+
+    The compiled engine precomputes this (rounds, n) matrix and feeds it as
+    a ``lax.scan`` input so device-resident selection replays the host
+    loop's tie-breaking decisions (see ``repro.core.gpcb.selection_scores``
+    for how the raw draw is applied in float32)."""
+    out = np.zeros((rounds, n_clients))
+    for t in range(1, rounds):
+        out[t] = rng.random(n_clients)
+    return out
 
 
 class PowDSelector:

@@ -4,6 +4,12 @@ loops — the FL round is a single compiled computation).
 
 Clients are padded to the max client size; per-client ``sizes`` drive
 replacement-sampling of local batches, so padding never leaks into training.
+
+The store is a **device-resident fixed-shape table**: ``x``/``y``/``sizes``
+live on device, every client row has the same shape, and ``gather`` accepts
+traced index arrays — so a cohort gather is legal inside ``jit`` and inside
+a ``lax.scan`` body (the compiled round engine closes over ``tables()`` and
+gathers by the round's selected ids entirely on device).
 """
 from __future__ import annotations
 
@@ -46,7 +52,22 @@ class ClientStore:
             out[c] = np.bincount(y[c, : sizes[c]], minlength=self.num_classes)
         return out
 
+    def tables(self):
+        """The device-resident fixed-shape tables ``(x, y, sizes)``.
+
+        Close over these inside a jitted/scanned computation and index with
+        ``gather_tables`` — they are ordinary device arrays, so XLA keeps
+        them resident instead of re-transferring per round."""
+        return self.x, self.y, self.sizes
+
+    @staticmethod
+    def gather_tables(x, y, sizes, client_ids):
+        """Scan-safe cohort gather: ``client_ids`` may be a traced (K,)
+        array; output shapes depend only on K, never on the ids' values."""
+        ids = jnp.asarray(client_ids)
+        return (jnp.take(x, ids, axis=0), jnp.take(y, ids, axis=0),
+                jnp.take(sizes, ids, axis=0))
+
     def gather(self, client_ids):
         """Select a cohort: returns (x, y, sizes) with leading cohort dim."""
-        ids = jnp.asarray(client_ids)
-        return self.x[ids], self.y[ids], self.sizes[ids]
+        return self.gather_tables(self.x, self.y, self.sizes, client_ids)

@@ -1,10 +1,17 @@
-"""FL runtime: client engine, FedAvg server, full simulation driver."""
+"""FL runtime: client engine, FedAvg server, full simulation driver.
+
+Two execution backends share one implementation of the paper's math:
+``run_experiment(..., backend="python")`` is the reference host loop,
+``backend="scan"`` the compiled round engine (``repro.fl.engine``) that
+runs all T rounds device-resident inside one jitted ``lax.scan``."""
 from repro.fl.client import make_cohort_trainer, make_cohort_loss_eval
 from repro.fl.server import fedavg, make_evaluator, update_global_direction
-from repro.fl.simulation import RunResult, run_experiment
+from repro.fl.simulation import RunResult, init_gp_phase, run_experiment
+from repro.fl.engine import ScanEngine, run_experiment_scan
 
 __all__ = [
     "make_cohort_trainer", "make_cohort_loss_eval",
     "fedavg", "make_evaluator", "update_global_direction",
-    "RunResult", "run_experiment",
+    "RunResult", "init_gp_phase", "run_experiment",
+    "ScanEngine", "run_experiment_scan",
 ]

@@ -26,7 +26,12 @@ def make_cohort_trainer(exp: FLExperimentConfig) -> Callable:
     """Compile once per experiment; reused every round.
 
     signature: (params, x, y, sizes, rng) -> (w_i, d_i, loss_i) with leading
-    cohort dimension on x/y/sizes and on every output."""
+    cohort dimension on x/y/sizes and on every output.
+
+    Scan-safety contract: the returned function is also traced INSIDE the
+    compiled round engine's ``lax.scan`` body (``repro.fl.engine``), where
+    the jit wrapper inlines — keep it free of host callbacks and of shapes
+    that depend on data values."""
     cfg = exp.model
 
     def one_client(params0, x, y, size, rng):

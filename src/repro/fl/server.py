@@ -1,5 +1,10 @@
 """Server side: FedAvg aggregation, the global momentum direction GPFL
-projects onto, and global-model evaluation."""
+projects onto, and global-model evaluation.
+
+Everything here is trace-safe and is reused verbatim inside the compiled
+round engine's ``lax.scan`` body (``repro.fl.engine``) — the evaluator's
+internal batching loop is a static Python loop over a fixed eval set, so
+it unrolls at trace time rather than syncing with the host."""
 from __future__ import annotations
 
 from typing import Callable, Optional

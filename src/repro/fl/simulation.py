@@ -55,8 +55,50 @@ def _build_data(exp: FLExperimentConfig, seed: int):
     return store, jnp.asarray(eval_x), jnp.asarray(eval_y)
 
 
+def init_gp_phase(trainer, store, params, kinit, *, chunk: int = 25):
+    """Algorithm 1's initialization phase: every client trains once from
+    w^0 (in chunks, bounding peak memory) → the seed global direction and
+    the seed GP score of every client.
+
+    Shared verbatim by the host loop and the compiled engine
+    (``repro.fl.engine``) so both backends start from bit-identical seed
+    GPs — round-0 selection is a deterministic top-K of these."""
+    N = store.n_clients
+    all_momenta = []
+    for ofs in range(0, N, chunk):
+        ids = np.arange(ofs, min(ofs + chunk, N))
+        x, y, sizes = store.gather(ids)
+        rngs = jax.random.split(jax.random.fold_in(kinit, ofs), len(ids))
+        _, d_i, _ = trainer(params, x, y, sizes, rngs)
+        all_momenta.append(d_i)
+    momenta = jax.tree.map(lambda *xs: jnp.concatenate(xs), *all_momenta)
+    direction = jax.tree.map(lambda m: jnp.mean(m, axis=0), momenta)
+    gp_all = gp_mod.gp_scores_stacked(momenta, direction)
+    return direction, gp_all
+
+
 def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
-                   use_gp_kernel: bool = False) -> RunResult:
+                   use_gp_kernel: bool = False,
+                   backend: str = "python") -> RunResult:
+    """Run one FL experiment.
+
+    ``backend`` selects the execution engine:
+
+    * ``"python"`` (default) — the reference host loop below: one round at
+      a time, numpy selectors, host-synced eval.  Supports every selector
+      (incl. the host-interactive Pow-d / FedCor probes).
+    * ``"scan"`` — the compiled round engine (``repro.fl.engine``): all T
+      rounds inside one jitted ``lax.scan``, state device-resident.
+      Supports ``gpfl`` (bit-matching selection history) and ``random``.
+    """
+    if backend == "scan":
+        from repro.fl.engine import run_experiment_scan
+        return run_experiment_scan(exp, log_every=log_every,
+                                   use_gp_kernel=use_gp_kernel)
+    if backend != "python":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'python' or 'scan'")
+
     rng_np = np.random.default_rng(exp.seed)
     key = jax.random.key(exp.seed)
 
@@ -75,20 +117,9 @@ def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
 
     # ---- initialization phase (Algorithm 1): every client trains once ----
     if hasattr(selector, "seed_gp"):
-        all_momenta = []
-        chunk = 25
         key, kinit = jax.random.split(key)
-        for ofs in range(0, N, chunk):
-            ids = np.arange(ofs, min(ofs + chunk, N))
-            x, y, sizes = store.gather(ids)
-            rngs = jax.random.split(jax.random.fold_in(kinit, ofs), len(ids))
-            _, d_i, _ = trainer(params, x, y, sizes, rngs)
-            all_momenta.append(d_i)
-        momenta = jax.tree.map(lambda *xs: jnp.concatenate(xs), *all_momenta)
-        direction = jax.tree.map(lambda m: jnp.mean(m, axis=0), momenta)
-        gp_all = gp_mod.gp_scores_stacked(momenta, direction)
+        direction, gp_all = init_gp_phase(trainer, store, params, kinit)
         selector.seed_gp(np.asarray(gp_all))
-        del momenta, all_momenta
 
     acc_hist, loss_hist, sel_hist, time_hist = [], [], [], []
     counts = np.zeros(N, np.int64)

@@ -14,10 +14,13 @@ GQA: expand kv heads before the call (same convention as flash_attention).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -58,9 +61,11 @@ def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def decode_attention_pallas(q, k, v, valid_len, *, block_s: int = 512,
-                            interpret: bool = True):
+                            interpret: Optional[bool] = None):
     """q: (B, H, hd); k, v: (B, S, H, hd); valid_len: (B,) int32 — number of
-    live cache positions per sequence.  Returns (B, H, hd)."""
+    live cache positions per sequence.  Returns (B, H, hd).
+    ``interpret=None`` resolves from the active backend."""
+    interpret = resolve_interpret(interpret)
     B, H, hd = q.shape
     S = k.shape[1]
     block_s = min(block_s, S)

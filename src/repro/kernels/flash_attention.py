@@ -13,10 +13,13 @@ to 128 (MXU-aligned).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -67,8 +70,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True):
-    """q,k,v: (B, S, H, hd) with H == Hkv (expand GQA beforehand)."""
+                           interpret: Optional[bool] = None):
+    """q,k,v: (B, S, H, hd) with H == Hkv (expand GQA beforehand).
+    ``interpret=None`` resolves from the active backend."""
+    interpret = resolve_interpret(interpret)
     B, S, H, hd = q.shape
     block_q = min(block_q, S)
     block_k = min(block_k, S)

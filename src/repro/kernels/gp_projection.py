@@ -13,10 +13,13 @@ both mapped to the same block every step (revisiting accumulation).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import resolve_interpret
 
 
 DEFAULT_BLOCK_D = 2048
@@ -37,8 +40,12 @@ def _kernel(g_ref, d_ref, dots_ref, nsq_ref):
 
 
 def gp_projection_pallas(grads, direction, *, block_d: int = DEFAULT_BLOCK_D,
-                         interpret: bool = True):
-    """grads (K, D), direction (D,) → (K,) GP scores."""
+                         interpret: Optional[bool] = None):
+    """grads (K, D), direction (D,) → (K,) GP scores.
+
+    ``interpret=None`` resolves from the active backend (compiled on TPU,
+    interpreted elsewhere)."""
+    interpret = resolve_interpret(interpret)
     K, D = grads.shape
     block_d = min(block_d, D)
     pad = (-D) % block_d

@@ -1,0 +1,22 @@
+"""Backend-aware interpret-mode resolution for the Pallas kernels.
+
+The kernels are written against TPU BlockSpec/VMEM semantics; everywhere
+else (CPU CI, GPU dev boxes) they must run in Pallas interpret mode.  The
+old hard-coded ``interpret=True`` default meant TPU deployments silently
+ran the slow interpreter unless every call site remembered to flip it —
+``resolve_interpret(None)`` picks the right mode from the active backend
+so TPU runs compile for real by default, while an explicit ``True`` /
+``False`` still wins.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """None → interpret everywhere except on a real TPU backend."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -10,10 +10,13 @@ intermediate traffic; fused it is exactly 3 reads + 2 writes per element.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import resolve_interpret
 
 DEFAULT_BLOCK = 64 * 1024
 
@@ -35,8 +38,12 @@ def _kernel(lr_ref, p_ref, g_ref, m_ref, pout_ref, mout_ref, *, gamma,
 def fused_momentum_pallas(p, g, m, *, lr, gamma: float = 0.9,
                           weight_decay: float = 0.0,
                           block: int = DEFAULT_BLOCK,
-                          interpret: bool = True):
-    """Flat vectors p (any float dtype), g, m (f32) → (p_new, m_new)."""
+                          interpret: Optional[bool] = None):
+    """Flat vectors p (any float dtype), g, m (f32) → (p_new, m_new).
+
+    ``interpret=None`` resolves from the active backend (compiled on TPU,
+    interpreted elsewhere)."""
+    interpret = resolve_interpret(interpret)
     (n,) = p.shape
     block = min(block, n)
     pad = (-n) % block

@@ -1,12 +1,16 @@
 """jit'd public wrappers around the Pallas kernels (+ pytree adapters).
 
-``interpret=True`` everywhere by default: this container is CPU-only; on a
-real TPU deployment flip interpret=False (the kernels are written against
-TPU BlockSpec/VMEM semantics).
+``interpret=None`` everywhere by default: each ``*_pallas`` entry point
+resolves the mode from the active JAX backend
+(``repro.kernels.interpret.resolve_interpret``) —
+interpret mode on CPU/GPU where the TPU BlockSpec semantics cannot
+compile, real Mosaic compilation on TPU.  Pass ``interpret=True/False``
+explicitly to override.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,13 +25,14 @@ from repro.utils.pytree import flatten_to_vector
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
 def gp_projection(grads, direction, *, block_d: int = 2048,
-                  interpret: bool = True):
+                  interpret: Optional[bool] = None):
     """(K, D) grads × (D,) direction → (K,) GP scores (Eq. 3)."""
     return gp_projection_pallas(grads, direction, block_d=block_d,
                                 interpret=interpret)
 
 
-def gp_projection_tree(stacked_grads, direction_tree, *, interpret=True):
+def gp_projection_tree(stacked_grads, direction_tree, *,
+                       interpret: Optional[bool] = None):
     """Pytree adapter: stacked client grads (leading K axis on every leaf) +
     direction pytree → (K,) scores, via the flat kernel."""
     K = jax.tree.leaves(stacked_grads)[0].shape[0]
@@ -42,7 +47,7 @@ def gp_projection_tree(stacked_grads, direction_tree, *, interpret=True):
 @functools.partial(jax.jit,
                    static_argnames=("gamma", "weight_decay", "interpret"))
 def fused_momentum(p, g, m, *, lr, gamma=0.9, weight_decay=0.0,
-                   interpret: bool = True):
+                   interpret: Optional[bool] = None):
     """Flat fused MGD update (Eq. 1-2)."""
     return fused_momentum_pallas(p, g, m, lr=lr, gamma=gamma,
                                  weight_decay=weight_decay,
@@ -50,7 +55,7 @@ def fused_momentum(p, g, m, *, lr, gamma=0.9, weight_decay=0.0,
 
 
 def fused_momentum_tree(params, grads, momentum, *, lr, gamma=0.9,
-                        weight_decay=0.0, interpret: bool = True):
+                        weight_decay=0.0, interpret: Optional[bool] = None):
     """Leafwise fused MGD over parameter pytrees → (params, momentum)."""
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = jax.tree.leaves(grads)
@@ -67,14 +72,16 @@ def fused_momentum_tree(params, grads, momentum, *, lr, gamma=0.9,
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool = True):
-    return rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)
+def rmsnorm(x, scale, *, eps: float = 1e-6,
+            interpret: Optional[bool] = None):
+    return rmsnorm_pallas(x, scale, eps=eps,
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
-                    block_k=128, interpret: bool = True):
+                    block_k=128, interpret: Optional[bool] = None):
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   block_q=block_q, block_k=block_k,
                                   interpret=interpret)
@@ -82,7 +89,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attention(q, k, v, valid_len, *, block_s=512,
-                     interpret: bool = True):
+                     interpret: Optional[bool] = None):
     """One-token decode attention over a KV cache (see decode_attention.py)."""
     return decode_attention_pallas(q, k, v, valid_len, block_s=block_s,
                                    interpret=interpret)

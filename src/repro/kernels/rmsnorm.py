@@ -7,10 +7,13 @@ VMEM budget with BLOCK_ROWS=256).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import resolve_interpret
 
 DEFAULT_BLOCK_ROWS = 256
 
@@ -24,8 +27,10 @@ def _kernel(x_ref, s_ref, o_ref, *, eps):
 
 def rmsnorm_pallas(x, scale, *, eps: float = 1e-6,
                    block_rows: int = DEFAULT_BLOCK_ROWS,
-                   interpret: bool = True):
-    """x (..., D), scale (D,) → same shape/dtype as x."""
+                   interpret: Optional[bool] = None):
+    """x (..., D), scale (D,) → same shape/dtype as x.  ``interpret=None``
+    resolves from the active backend (compiled on TPU only)."""
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     D = x.shape[-1]
     xf = x.reshape(-1, D)

@@ -33,7 +33,7 @@ def mgd_init(params) -> MGDState:
 
 def mgd_update(params, grads, state: MGDState, *, lr, gamma: float = 0.9,
                weight_decay: float = 0.0, use_kernel: bool = False,
-               interpret: bool = True):
+               interpret=None):
     """One MGD step → (new_params, new_state)."""
     if use_kernel:
         from repro.kernels.ops import fused_momentum_tree
