@@ -1,5 +1,15 @@
 """GPFL core: gradient projection (Eq. 3/5), GPCB bandit (Eq. 6-7), reward
-calibration (Eq. 8), and the selector zoo (GPFL + Random/Pow-d/FedCor)."""
+calibration (Eq. 8), the selector zoo (GPFL + Random/Pow-d/FedCor), and the
+flat-parameter workspace (``repro.core.flat``) the compiled engine and the
+dist layer share."""
+from repro.core.flat import (
+    FlatSpec,
+    make_flat_spec,
+    pack,
+    pack_stacked,
+    unpack,
+    unpack_stacked,
+)
 from repro.core.gp import (
     gp_score_tree,
     gp_scores_tree,
@@ -31,6 +41,8 @@ from repro.core.selector import (
 )
 
 __all__ = [
+    "FlatSpec", "make_flat_spec", "pack", "pack_stacked", "unpack",
+    "unpack_stacked",
     "gp_score_tree", "gp_scores_tree", "gp_scores_stacked",
     "gp_scores_matrix", "gp_scores_jvp", "normalize_gp",
     "BanditState", "init_state", "alpha_schedule", "gpcb_values",

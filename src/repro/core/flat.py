@@ -1,0 +1,139 @@
+"""Flat-parameter workspace: the model pytree as ONE contiguous buffer.
+
+GPFL's per-round server work — Eq. 3's projection ``<∇F(w_i), g>/|g|``,
+the Eq. 1-2 momentum-direction update and the FedAvg average — is pure
+vector algebra over the parameter space.  Walking the pytree leaf-by-leaf
+issues dozens of small HBM-bound ops per scanned round; packing once into
+a single padded ``(D,)`` float32 buffer turns the whole server side into
+a handful of contiguous passes (and feeds the Pallas ``gp_projection`` /
+``fedavg_momentum`` kernels their native ``(K, D)`` layout with no
+per-round re-flatten).
+
+A :class:`FlatSpec` is the static recipe for bit-exact round-trips:
+per-leaf offsets, shapes and dtypes, plus the padded total size.  It is
+built once at engine-build time (shapes are static under jit) and shared
+by the scan engine, ``repro.optim.sgd`` and ``repro.dist.gpfl_step`` —
+one layout for the compiled round, the optimizer state and the
+all-reduce wire format.
+
+Bit-exactness contract: the workspace dtype (float32 by default) must be
+able to represent every leaf dtype exactly — float32/bfloat16/float16
+leaves round-trip bit-identically (f32 is a superset of both 16-bit
+formats); float64 leaves would not and are rejected.  The padded tail is
+always zero, so dot products and norms over the padded buffer equal
+those over the unpadded one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: pad D up to a multiple of this so every kernel block divides evenly and
+#: TPU lane tiling (last dim 128) is respected without per-call re-padding.
+DEFAULT_PAD_TO = 128
+
+#: leaf dtypes float32 can hold exactly (the bit-exact round-trip set).
+_EXACT_IN_F32 = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static pack/unpack recipe for one parameter pytree layout."""
+    treedef: Any                            # jax treedef of the pytree
+    shapes: Tuple[Tuple[int, ...], ...]     # per-leaf shapes
+    dtypes: Tuple[Any, ...]                 # per-leaf dtypes
+    offsets: Tuple[int, ...]                # per-leaf start offset in the buffer
+    size: int                               # D — total scalars
+    padded_size: int                        # Dp — D padded to pad_to multiple
+    dtype: Any = jnp.float32                # workspace dtype
+
+    def __post_init__(self):
+        for dt in self.dtypes:
+            exact = (dt == self.dtype or
+                     (self.dtype == jnp.float32 and dt in _EXACT_IN_F32))
+            if not exact:
+                raise TypeError(
+                    f"leaf dtype {dt} does not round-trip exactly through a "
+                    f"{jnp.dtype(self.dtype)} workspace (a float32 workspace "
+                    f"holds {[str(jnp.dtype(d)) for d in _EXACT_IN_F32]} "
+                    "exactly; any other workspace dtype only its own)")
+
+    @property
+    def pad(self) -> int:
+        return self.padded_size - self.size
+
+
+def make_flat_spec(tree, *, pad_to: int = DEFAULT_PAD_TO,
+                   dtype=jnp.float32) -> FlatSpec:
+    """Build the static layout from a pytree of arrays (or ShapeDtypeStructs).
+
+    Leaves are laid out in ``jax.tree.flatten`` order; offsets are exact
+    prefix sums, so ``pack``/``unpack`` are pure reshape+concat/slice ops.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes, dtypes, offsets = [], [], []
+    ofs = 0
+    for leaf in leaves:
+        shapes.append(tuple(int(s) for s in leaf.shape))
+        dtypes.append(jnp.dtype(leaf.dtype))
+        offsets.append(ofs)
+        ofs += int(leaf.size)
+    padded = ofs + ((-ofs) % max(pad_to, 1))
+    return FlatSpec(treedef=treedef, shapes=tuple(shapes),
+                    dtypes=tuple(dtypes), offsets=tuple(offsets),
+                    size=ofs, padded_size=padded, dtype=jnp.dtype(dtype))
+
+
+def pack(spec: FlatSpec, tree) -> jnp.ndarray:
+    """Pytree → one ``(Dp,)`` workspace vector (zero-padded tail)."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate(
+        [jnp.ravel(x).astype(spec.dtype) for x in leaves])
+    if spec.pad:
+        flat = jnp.pad(flat, (0, spec.pad))
+    return flat
+
+
+def unpack(spec: FlatSpec, vec: jnp.ndarray):
+    """``(Dp,)`` workspace vector → pytree (bit-exact inverse of ``pack``)."""
+    leaves = [
+        jnp.reshape(vec[ofs: ofs + _prod(shape)], shape).astype(dt)
+        for ofs, shape, dt in zip(spec.offsets, spec.shapes, spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def pack_stacked(spec: FlatSpec, stacked_tree) -> jnp.ndarray:
+    """Stacked pytree (leading cohort axis K on every leaf) → ``(K, Dp)``.
+
+    This is the matrix the ``gp_projection`` / ``fedavg_momentum`` kernels
+    stream: row i is exactly ``pack(spec, tree_i)``.
+    """
+    leaves = jax.tree.leaves(stacked_tree)
+    K = leaves[0].shape[0]
+    mat = jnp.concatenate(
+        [jnp.reshape(x, (K, -1)).astype(spec.dtype) for x in leaves], axis=1)
+    if spec.pad:
+        mat = jnp.pad(mat, ((0, 0), (0, spec.pad)))
+    return mat
+
+
+def unpack_stacked(spec: FlatSpec, mat: jnp.ndarray):
+    """``(K, Dp)`` → stacked pytree (leading K axis restored on every leaf)."""
+    K = mat.shape[0]
+    leaves = [
+        jnp.reshape(mat[:, ofs: ofs + _prod(shape)],
+                    (K,) + shape).astype(dt)
+        for ofs, shape, dt in zip(spec.offsets, spec.shapes, spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def _prod(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n

@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import flat as flat_mod
 from repro.core import gp, gpcb
 from repro.dist.state import TrainState
 from repro.optim.sgd import MGDState, mgd_update
@@ -126,9 +127,16 @@ def _select(bandit: gpcb.BanditState, scores, k_select: int,
     return jax.lax.stop_gradient(mask), u
 
 
-def _observe(bandit: gpcb.BanditState, mask, scores, loss_scalar):
-    """One bandit round: Eq. 5 softmax rewards, Eq. 8 loss re-calibration."""
-    mu = gp.normalize_gp(scores) * mask
+def _observe(bandit: gpcb.BanditState, mask, scores, loss_scalar,
+             rewards=None):
+    """One bandit round: Eq. 5 softmax rewards, Eq. 8 loss re-calibration.
+
+    ``rewards`` lets the fused ``gp_projection_softmax`` kernel hand its
+    already-normalised c̃ straight to the GPCB update (flat layout +
+    ``score_kernel``); ``None`` computes the softmax here."""
+    if rewards is None:
+        rewards = gp.normalize_gp(scores)
+    mu = rewards * mask
     mu_cal = gpcb.calibrate_reward(mu, bandit.prev_acc, bandit.prev_acc,
                                    loss_scalar, bandit.prev_loss)
     new_bandit = gpcb.update_state(bandit, mask, mu_cal, bandit.prev_acc,
@@ -178,7 +186,8 @@ def make_gpfl_train_step(api, *, n_groups: int, k_select: int,
                          impl: str = "jvp", gate: bool = True, rules=None,
                          remat: str = "full", grad_specs=None,
                          unroll: bool = False, ce_chunks: int = 0,
-                         score_kernel: bool = False):
+                         score_kernel: bool = False,
+                         param_layout: str = "tree"):
     """Build the jit-friendly GPFL round: ``(state, batch) → (state, metrics)``.
 
     Args:
@@ -197,7 +206,17 @@ def make_gpfl_train_step(api, *, n_groups: int, k_select: int,
       rules / remat / unroll / ce_chunks: forwarded to the model's loss.
       grad_specs: PartitionSpec tree to pin gradient sharding on a mesh.
       score_kernel: route the grads-impl projection through the Pallas
-        ``gp_projection`` kernel (interpret-mode on CPU).
+        kernels (interpret-mode on CPU) — in the flat layout this is the
+        fused ``gp_projection_softmax``, whose Eq. 5 rewards feed the
+        GPCB update directly.
+      param_layout: gradient-workspace layout for the grads impl.
+        ``"flat"`` packs the per-group gradients through one
+        ``repro.core.flat.FlatSpec`` into a contiguous (K, D) matrix —
+        the projection is one matvec, the gated aggregate is one
+        weighted row-combine, and the layout is the same contiguous
+        wire format a cross-host all-reduce would ship (one vector op
+        instead of a per-leaf walk).  The jvp impl never materialises
+        gradients, so the switch is a no-op there.
 
     Returned metrics: ``loss``, ``ce`` (+ model aux), ``gp_scores`` (K,),
     ``selected_mask`` (K, float 0/1), ``reward`` (K, calibrated μ) and
@@ -205,8 +224,12 @@ def make_gpfl_train_step(api, *, n_groups: int, k_select: int,
     """
     if impl not in ("jvp", "grads"):
         raise ValueError(f"impl must be 'jvp' or 'grads', got {impl!r}")
+    if param_layout not in ("tree", "flat"):
+        raise ValueError(f"param_layout must be 'tree' or 'flat'; "
+                         f"got {param_layout!r}")
     if not 1 <= k_select <= n_groups:
         raise ValueError(f"k_select={k_select} outside [1, {n_groups}]")
+    is_flat = param_layout == "flat"
     lkw = _loss_kwargs(rules, remat, unroll, ce_chunks)
 
     def loss(p, b):
@@ -225,22 +248,38 @@ def make_gpfl_train_step(api, *, n_groups: int, k_select: int,
                                               (tangent,))
         dn = tree_global_norm(momentum)
         scores = l_tan / jnp.maximum(dn, 1e-12)
-        return scores, losses, auxes, None
+        return scores, losses, auxes, None, None
 
     def scores_and_losses_grads(params, momentum, gbs):
-        """All K scores from K materialised per-group gradients."""
+        """All K scores from K materialised per-group gradients.
+
+        Flat layout: the gradients land in one contiguous (K, D)
+        ``FlatSpec`` workspace — the projection is a single matvec (or
+        the fused softmax kernel) and the matrix doubles as the gated
+        update's aggregation (and all-reduce) buffer."""
         results = [jax.value_and_grad(loss, has_aux=True)(params, b)
                    for b in gbs]
         losses = jnp.stack([r[0][0] for r in results])
         auxes = [r[0][1] for r in results]
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *[r[1] for r in results])
+        rewards = None
+        if is_flat:
+            spec = flat_mod.make_flat_spec(params)
+            gmat = flat_mod.pack_stacked(spec, stacked)
+            dvec = flat_mod.pack(spec, momentum)
+            if score_kernel:
+                from repro.kernels.ops import gp_projection_softmax
+                scores, rewards = gp_projection_softmax(gmat, dvec)
+            else:
+                scores = gp.gp_scores_matrix(gmat, dvec)
+            return scores, losses, auxes, (spec, gmat), rewards
         if score_kernel:
             from repro.kernels.ops import gp_projection_tree
             scores = gp_projection_tree(stacked, momentum)
         else:
             scores = gp.gp_scores_stacked(stacked, momentum)
-        return scores, losses, auxes, stacked
+        return scores, losses, auxes, stacked, rewards
 
     score_fn = scores_and_losses_jvp if impl == "jvp" \
         else scores_and_losses_grads
@@ -248,7 +287,8 @@ def make_gpfl_train_step(api, *, n_groups: int, k_select: int,
     def step(state: TrainState, batch):
         params, momentum = state.params, state.momentum
         gbs = _group_batches(batch, n_groups)
-        scores, losses, auxes, stacked = score_fn(params, momentum, gbs)
+        scores, losses, auxes, stacked, rewards = score_fn(params, momentum,
+                                                           gbs)
         scores = jax.lax.stop_gradient(scores)
 
         if gate:
@@ -256,7 +296,11 @@ def make_gpfl_train_step(api, *, n_groups: int, k_select: int,
                               rho)
             loss_scalar = jnp.mean(losses)
             aux = _aux_mean(auxes)
-            if stacked is not None:  # grads impl: mask-average the grads
+            if isinstance(stacked, tuple):  # flat workspace: one row-combine
+                spec, gmat = stacked
+                w = mask / jnp.maximum(mask.sum(), 1.0)
+                grads = flat_mod.unpack(spec, jnp.tensordot(w, gmat, axes=1))
+            elif stacked is not None:  # tree grads impl: mask-average leaves
                 w = mask / jnp.maximum(mask.sum(), 1.0)
                 grads = jax.tree.map(
                     lambda s: jnp.tensordot(
@@ -279,7 +323,7 @@ def make_gpfl_train_step(api, *, n_groups: int, k_select: int,
 
         grads = _constrain(grads, grad_specs)
         new_bandit, mu_cal = _observe(state.bandit, mask, scores,
-                                      jnp.mean(losses))
+                                      jnp.mean(losses), rewards)
         new_params, mstate = mgd_update(
             params, grads, MGDState(momentum, state.step),
             lr=lr, gamma=gamma, weight_decay=weight_decay)

@@ -17,6 +17,27 @@ fuses the full round:
       → evaluation
       → bandit update (reward sums / selection counts in the carry).
 
+Parameter layouts (``param_layout``):
+
+* ``"tree"`` (default, the parity oracle) — the carry holds parameter
+  pytrees and the server side walks the leaves: FedAvg mean, direction
+  axpy and GP einsum per leaf, dozens of small ops per scanned round.
+* ``"flat"`` — the engine builds a ``repro.core.flat.FlatSpec`` once at
+  construction and the carry holds ONE padded ``(Dp,)`` float32 vector
+  for params and one for the direction.  The cohort's trained params /
+  momenta are packed into ``(K, Dp)`` matrices right out of the trainer,
+  the whole server update is ``server_update_flat`` (two contiguous
+  vector passes, or the fused Pallas ``fedavg_momentum`` kernel when the
+  kernels compile for real), and GP scores feed ``gp_projection`` /
+  ``gp_scores_matrix`` directly — no per-round re-flatten.  The local
+  trainer and evaluator still see pytrees via ``unpack`` (slices +
+  reshapes, fused by XLA).  Selection history is pinned bit-identical to
+  the tree layout by ``tests/test_engine.py`` on the jnp path (the
+  layouts share scalar algebra and reduction shapes); where the fused
+  Pallas server kernel engages instead (TPU), the update agrees to float
+  tolerance and near-tie selections could in principle order
+  differently.
+
 Parity contract (pinned by ``tests/test_engine.py``): with
 ``exp.selector == "gpfl"`` the engine replays the host loop's selection
 history — both backends share the initialization phase
@@ -33,27 +54,37 @@ scans); the engine supports ``gpfl`` (bit-matching) and ``random``
 (jax-PRNG permutations — statistically, not bitwise, equivalent to the
 host loop's numpy draws).
 
-GP score path: ``gp_impl="auto"`` routes through the Pallas
-``gp_projection`` kernel wherever it compiles for real (TPU) and through
-the stacked-pytree einsum elsewhere — interpret mode is resolved
-per-backend by ``repro.kernels.interpret``, never hard-coded.
+GP score path: ``gp_impl="auto"`` routes through the Pallas kernels
+wherever they compile for real (TPU) and through jnp elsewhere —
+interpret mode is resolved per-backend by ``repro.kernels.interpret``,
+never hard-coded.  In flat layout the kernel route also engages the
+fused ``fedavg_momentum`` server kernel.
+
+The jitted scan donates the params/direction carry buffers
+(``donate_argnums``): XLA aliases them into the scan's carry in place of
+keeping a second resident copy alive for the caller.  ``run()`` hands the
+scan fresh ``jnp.copy`` buffers so the engine stays re-runnable (and the
+cached initial state stays pristine); on backends without donation
+support (CPU) XLA silently falls back to a copy.
 """
 from __future__ import annotations
 
 import time
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.configs.paper import FLExperimentConfig
+from repro.core import flat as flat_mod
 from repro.core import gp as gp_mod
 from repro.core import gpcb
 from repro.core.selector import gpfl_jitter_stream
 from repro.data import ClientStore
 from repro.fl.client import make_cohort_trainer
-from repro.fl.server import fedavg, make_evaluator, update_global_direction
+from repro.fl.server import (fedavg, make_evaluator, server_update_flat,
+                             update_global_direction)
 from repro.fl.simulation import RunResult, _build_data, init_gp_phase
 from repro.models import small
 from repro.utils.pytree import tree_zeros_like
@@ -62,11 +93,17 @@ from repro.utils.pytree import tree_zeros_like
 #: mid-round (candidate losses / full loss scans) and stay on the host loop.
 ENGINE_SELECTORS = ("gpfl", "random")
 
+#: carry layouts the engine supports (see the module doc).
+PARAM_LAYOUTS = ("tree", "flat")
+
 
 class RoundCarry(NamedTuple):
-    """Device-resident state carried across scanned rounds."""
-    params: dict              # global model w^t
-    direction: dict           # global momentum direction g (Eq. 1-2)
+    """Device-resident state carried across scanned rounds.
+
+    ``params`` / ``direction`` are parameter pytrees in the tree layout
+    and padded ``(Dp,)`` workspace vectors in the flat layout."""
+    params: Any               # global model w^t
+    direction: Any            # global momentum direction g (Eq. 1-2)
     bandit: gpcb.BanditState  # reward sums / selection counts / round
     latest_gp: jnp.ndarray    # (N,) persistent C vector (Algorithm 1)
     seen: jnp.ndarray         # (N,) bool — coverage tracking
@@ -93,21 +130,29 @@ class ScanEngine:
 
     def __init__(self, exp: FLExperimentConfig, *,
                  use_gp_kernel: bool = False, gp_impl: str = "auto",
-                 use_ee: bool = True, log_every: int = 0):
+                 param_layout: str = "tree", use_ee: bool = True,
+                 log_every: int = 0):
         if exp.selector not in ENGINE_SELECTORS:
             raise ValueError(
                 f"backend='scan' supports selectors {ENGINE_SELECTORS}; got "
                 f"{exp.selector!r} (Pow-d/FedCor probe the host every round "
                 "— run them with backend='python')")
+        if param_layout not in PARAM_LAYOUTS:
+            raise ValueError(f"param_layout must be one of {PARAM_LAYOUTS}; "
+                             f"got {param_layout!r}")
         self.exp = exp
         self.gp_impl = _resolve_gp_impl(gp_impl, use_gp_kernel)
+        self.param_layout = param_layout
         self.use_ee = use_ee
         self.log_every = log_every
         self.store, self.eval_x, self.eval_y = _build_data(exp, exp.seed)
         self.trainer = make_cohort_trainer(exp)
         self.evaluate = make_evaluator(exp, self.eval_x, self.eval_y)
-        self._scan = jax.jit(self._build_scan())
+        self.spec = None  # FlatSpec, set by _build_initial_state (flat only)
         self._inputs = self._build_initial_state()
+        # donate the params/direction carries: XLA aliases them into the
+        # scan instead of holding a live caller copy (run() passes copies)
+        self._scan = jax.jit(self._build_scan(), donate_argnums=(0, 1))
 
     # ---- the scan body: one complete federated round, fully on device ----
     def _build_scan(self):
@@ -117,8 +162,17 @@ class ScanEngine:
         trainer, evaluate = self.trainer, self.evaluate
         use_ee, log_every = self.use_ee, self.log_every
         is_gpfl = exp.selector == "gpfl"
+        is_flat = self.param_layout == "flat"
+        use_kernel = self.gp_impl == "kernel"
+        spec = self.spec
 
-        if self.gp_impl == "kernel":
+        if is_flat:
+            if use_kernel:
+                from repro.kernels.ops import gp_projection
+                score_fn = gp_projection
+            else:
+                score_fn = gp_mod.gp_scores_matrix
+        elif use_kernel:
             from repro.kernels.ops import gp_projection_tree
             score_fn = gp_projection_tree
         else:
@@ -138,15 +192,29 @@ class ScanEngine:
 
             x, y, sizes = ClientStore.gather_tables(x_tab, y_tab, sz_tab, ids)
             rngs = jax.random.split(kt, K)
-            w_i, d_i, _ = trainer(carry.params, x, y, sizes, rngs)
+            params_in = flat_mod.unpack(spec, carry.params) if is_flat \
+                else carry.params
+            w_i, d_i, _ = trainer(params_in, x, y, sizes, rngs)
 
-            params = fedavg(w_i)
-            direction = update_global_direction(
-                carry.direction, carry.params, params, exp.lr, exp.momentum)
-            acc, gl_loss = evaluate(params)
+            if is_flat:
+                # server side entirely on the flat workspace: one (K, Dp)
+                # pack out of the trainer, then contiguous vector passes
+                w_mat = flat_mod.pack_stacked(spec, w_i)
+                params, direction = server_update_flat(
+                    w_mat, carry.params, carry.direction,
+                    lr=exp.lr, gamma=exp.momentum, use_kernel=use_kernel)
+                acc, gl_loss = evaluate(flat_mod.unpack(spec, params))
+            else:
+                params = fedavg(w_i)
+                direction = update_global_direction(
+                    carry.direction, carry.params, params, exp.lr,
+                    exp.momentum)
+                acc, gl_loss = evaluate(params)
 
             if is_gpfl:
-                gp_scores = score_fn(d_i, carry.direction)
+                grads_in = flat_mod.pack_stacked(spec, d_i) if is_flat \
+                    else d_i
+                gp_scores = score_fn(grads_in, carry.direction)
                 bandit, latest_gp = gpcb.observe(
                     carry.bandit, carry.latest_gp, ids, gp_scores, acc,
                     gl_loss)
@@ -181,7 +249,9 @@ class ScanEngine:
     def _build_initial_state(self):
         """The pre-scan state: params at w^0, Algorithm 1's init phase and
         the host jitter stream.  Deterministic in ``exp.seed``, so it is
-        computed once here and reused by every ``run()``."""
+        computed once here and reused by every ``run()``.  In the flat
+        layout this is also where the static ``FlatSpec`` is derived and
+        the initial params/direction are packed."""
         exp = self.exp
         N, T = self.store.n_clients, exp.rounds
         rng_np = np.random.default_rng(exp.seed)
@@ -203,14 +273,24 @@ class ScanEngine:
             latest_gp = jnp.zeros((N,), jnp.float32)
             jitter = jnp.zeros((T, N), jnp.float32)
         bandit = gpcb.init_state(N)
+
+        if self.param_layout == "flat":
+            self.spec = flat_mod.make_flat_spec(params)
+            params = flat_mod.pack(self.spec, params)
+            direction = flat_mod.pack(self.spec, direction)
         return params, direction, bandit, latest_gp, key, jitter
 
     def run(self) -> RunResult:
         exp = self.exp
         N, T = self.store.n_clients, exp.rounds
+        params, direction, bandit, latest_gp, key, jitter = self._inputs
 
         t0 = time.perf_counter()
-        _, out = jax.block_until_ready(self._scan(*self._inputs))
+        # params/direction are donated to the scan — pass fresh copies so
+        # the cached initial state survives for the next run()
+        _, out = jax.block_until_ready(self._scan(
+            jax.tree.map(jnp.copy, params), jax.tree.map(jnp.copy, direction),
+            bandit, latest_gp, key, jitter))
         scan_wall = time.perf_counter() - t0
 
         selections = np.asarray(out["ids"])
@@ -231,8 +311,10 @@ class ScanEngine:
 
 def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                         use_gp_kernel: bool = False, gp_impl: str = "auto",
+                        param_layout: str = "tree",
                         use_ee: bool = True) -> RunResult:
     """One-shot convenience over ``ScanEngine`` — the ``backend="scan"``
     entry point of ``repro.fl.run_experiment``."""
     return ScanEngine(exp, use_gp_kernel=use_gp_kernel, gp_impl=gp_impl,
-                      use_ee=use_ee, log_every=log_every).run()
+                      param_layout=param_layout, use_ee=use_ee,
+                      log_every=log_every).run()

@@ -4,7 +4,17 @@ projects onto, and global-model evaluation.
 Everything here is trace-safe and is reused verbatim inside the compiled
 round engine's ``lax.scan`` body (``repro.fl.engine``) — the evaluator's
 internal batching loop is a static Python loop over a fixed eval set, so
-it unrolls at trace time rather than syncing with the host."""
+it unrolls at trace time rather than syncing with the host.
+
+Two parameter layouts (``param_layout`` on the engine):
+
+* **tree** — params as pytrees; ``fedavg`` + ``update_global_direction``
+  walk the leaves (the reference oracle).
+* **flat** — params as one contiguous ``repro.core.flat`` workspace
+  vector; ``server_update_flat`` does the whole round-end update
+  (weighted average + Eq. 1-2 direction) in a couple of contiguous
+  vector ops, or — ``use_kernel=True`` — in ONE tiled HBM pass via the
+  Pallas ``fedavg_momentum`` kernel."""
 from __future__ import annotations
 
 from typing import Callable, Optional
@@ -34,6 +44,49 @@ def update_global_direction(direction, w_prev, w_new, lr: float,
     if direction is None:
         return g_eff
     return jax.tree.map(lambda d, g: gamma * d + g, direction, g_eff)
+
+
+def fedavg_flat(w_matrix, weights=None):
+    """Flat-layout FedAvg: cohort matrix (K, D) → (D,) global params.
+
+    ``weights=None`` is the uniform mean (bitwise the same reduction as the
+    leafwise ``fedavg``); a (K,) weights vector (summing to 1) gives the
+    size-weighted variant."""
+    if weights is None:
+        return jnp.mean(w_matrix, axis=0)
+    return jnp.tensordot(weights.astype(jnp.float32),
+                         w_matrix.astype(jnp.float32), axes=1)
+
+
+def update_global_direction_flat(direction, w_prev, w_new, lr: float,
+                                 gamma: float):
+    """Flat twin of :func:`update_global_direction` — same scalar algebra
+    (multiply by the precomputed 1/η, not a divide) so the two layouts
+    produce bit-comparable direction trajectories."""
+    g_eff = (w_prev - w_new) * (1.0 / max(lr, 1e-12))
+    if direction is None:
+        return g_eff
+    return gamma * direction + g_eff
+
+
+def server_update_flat(w_matrix, w_prev, direction, *, lr: float,
+                       gamma: float, weights=None, use_kernel: bool = False,
+                       interpret: Optional[bool] = None):
+    """The whole server side of one round on the flat workspace:
+
+        w'  = Σ_i λ_i W_i          (FedAvg over the cohort matrix)
+        d'  = γ·d + (w − w')/η     (Eq. 1-2 momentum direction)
+
+    → ``(new_params (D,), new_direction (D,))``.  ``use_kernel=True``
+    routes through the fused Pallas ``fedavg_momentum`` kernel (one tiled
+    HBM pass); otherwise a handful of contiguous jnp vector ops."""
+    if use_kernel:
+        from repro.kernels.ops import fedavg_momentum
+        return fedavg_momentum(w_matrix, w_prev, direction, weights,
+                               lr=lr, gamma=gamma, interpret=interpret)
+    w_new = fedavg_flat(w_matrix, weights)
+    return w_new, update_global_direction_flat(direction, w_prev, w_new,
+                                               lr, gamma)
 
 
 def make_evaluator(exp: FLExperimentConfig, eval_x, eval_y,

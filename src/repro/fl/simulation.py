@@ -78,8 +78,8 @@ def init_gp_phase(trainer, store, params, kinit, *, chunk: int = 25):
 
 
 def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
-                   use_gp_kernel: bool = False,
-                   backend: str = "python") -> RunResult:
+                   use_gp_kernel: bool = False, backend: str = "python",
+                   param_layout: str = "tree") -> RunResult:
     """Run one FL experiment.
 
     ``backend`` selects the execution engine:
@@ -90,14 +90,24 @@ def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
     * ``"scan"`` — the compiled round engine (``repro.fl.engine``): all T
       rounds inside one jitted ``lax.scan``, state device-resident.
       Supports ``gpfl`` (bit-matching selection history) and ``random``.
+
+    ``param_layout`` (scan backend only) selects the carry layout:
+    ``"tree"`` walks parameter pytrees (the parity oracle), ``"flat"``
+    runs the server side on one contiguous ``repro.core.flat`` workspace
+    vector (same selection history, fewer HBM-bound ops per round).
     """
     if backend == "scan":
         from repro.fl.engine import run_experiment_scan
         return run_experiment_scan(exp, log_every=log_every,
-                                   use_gp_kernel=use_gp_kernel)
+                                   use_gp_kernel=use_gp_kernel,
+                                   param_layout=param_layout)
     if backend != "python":
         raise ValueError(f"unknown backend {backend!r}; "
                          "expected 'python' or 'scan'")
+    if param_layout != "tree":
+        raise ValueError(
+            f"param_layout={param_layout!r} requires backend='scan'; the "
+            "python host loop always runs the tree layout")
 
     rng_np = np.random.default_rng(exp.seed)
     key = jax.random.key(exp.seed)

@@ -1,7 +1,10 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles.
 
-Kernels: gp_projection (GPFL Eq. 3 scores, one HBM pass), momentum (fused
-MGD Eq. 1-2), rmsnorm, flash_attention (causal/sliding-window)."""
+Kernels: gp_projection (GPFL Eq. 3 scores, one HBM pass; a fused variant
+also emits the Eq. 5 softmax rewards), fedavg_momentum (weighted cohort
+average + Eq. 1-2 momentum-direction update, one tiled pass over the flat
+(K, D) workspace), momentum (fused MGD Eq. 1-2), rmsnorm, flash_attention
+(causal/sliding-window), decode_attention."""
 from repro.kernels import ops, ref
 
 __all__ = ["ops", "ref"]

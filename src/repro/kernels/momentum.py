@@ -58,7 +58,6 @@ def fused_momentum_pallas(p, g, m, *, lr, gamma: float = 0.9,
         functools.partial(_kernel, gamma=gamma, weight_decay=weight_decay),
         grid=(np_ // block,),
         in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY) if False else
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),

@@ -15,12 +15,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gp_projection import gp_projection_pallas
+from repro.kernels.fedavg_momentum import fedavg_momentum_pallas
+from repro.kernels.gp_projection import (gp_projection_pallas,
+                                         gp_projection_softmax_pallas)
 from repro.kernels.momentum import fused_momentum_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
-from repro.utils.pytree import flatten_to_vector
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
@@ -31,16 +32,44 @@ def gp_projection(grads, direction, *, block_d: int = 2048,
                                 interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
+def gp_projection_softmax(grads, direction, *, block_d: int = 2048,
+                          interpret: Optional[bool] = None):
+    """(K, D) grads × (D,) direction → ``(scores, c̃)`` — Eq. 3 scores plus
+    their Eq. 5 softmax rewards, fused into the same HBM pass."""
+    return gp_projection_softmax_pallas(grads, direction, block_d=block_d,
+                                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret", "block_d"))
+def fedavg_momentum(w_matrix, w_prev, direction, weights=None, *, lr,
+                    gamma: float = 0.9, block_d: int = 2048,
+                    interpret: Optional[bool] = None):
+    """Fused server round on the flat workspace: weighted FedAvg of the
+    cohort matrix (K, D) + Eq. 1-2 momentum-direction update in one tiled
+    pass → ``(new_params (D,), new_direction (D,))``.
+
+    ``weights=None`` → uniform 1/K (plain FedAvg)."""
+    if weights is None:
+        K = w_matrix.shape[0]
+        weights = jnp.full((K,), 1.0 / K, jnp.float32)
+    return fedavg_momentum_pallas(w_matrix, w_prev, direction, weights,
+                                  lr=lr, gamma=gamma, block_d=block_d,
+                                  interpret=interpret)
+
+
 def gp_projection_tree(stacked_grads, direction_tree, *,
                        interpret: Optional[bool] = None):
     """Pytree adapter: stacked client grads (leading K axis on every leaf) +
-    direction pytree → (K,) scores, via the flat kernel."""
-    K = jax.tree.leaves(stacked_grads)[0].shape[0]
-    gm = jnp.stack([
-        flatten_to_vector(jax.tree.map(lambda a: a[i], stacked_grads))
-        for i in range(K)
-    ])
-    dv = flatten_to_vector(direction_tree)
+    direction pytree → (K,) scores, via the flat kernel.
+
+    Packing goes through :mod:`repro.core.flat` — one reshape+concat per
+    leaf into the padded workspace layout, not a per-client re-flatten
+    (the flat-layout engine skips even this by carrying packed vectors)."""
+    from repro.core import flat as flat_mod
+    spec = flat_mod.make_flat_spec(direction_tree)
+    gm = flat_mod.pack_stacked(spec, stacked_grads)
+    dv = flat_mod.pack(spec, direction_tree)
     return gp_projection(gm, dv, interpret=interpret)
 
 

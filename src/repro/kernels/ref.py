@@ -14,6 +14,28 @@ def gp_projection_ref(grads, direction):
     return dots / jnp.maximum(jnp.linalg.norm(d32), 1e-12)
 
 
+def gp_projection_softmax_ref(grads, direction):
+    """Fused variant oracle → (scores (K,), softmax c̃ (K,)) (Eq. 3 + 5)."""
+    scores = gp_projection_ref(grads, direction)
+    return scores, jax.nn.softmax(scores)
+
+
+def fedavg_momentum_ref(w_matrix, w_prev, direction, weights=None, *, lr,
+                        gamma):
+    """Fused server update oracle: weighted FedAvg + Eq. 1-2 direction.
+
+    W (K, D), w_prev (D,), direction (D,), weights (K,) summing to 1 →
+    (new_params, new_direction)."""
+    w32 = w_matrix.astype(jnp.float32)
+    if weights is None:
+        avg = jnp.mean(w32, axis=0)
+    else:
+        avg = jnp.tensordot(weights.astype(jnp.float32), w32, axes=1)
+    g_eff = (w_prev.astype(jnp.float32) - avg) / max(lr, 1e-12)
+    d_new = gamma * direction.astype(jnp.float32) + g_eff
+    return avg.astype(w_prev.dtype), d_new
+
+
 def momentum_ref(p, g, m, *, lr, gamma, weight_decay=0.0):
     """Fused MGD update (Eq. 1-2) on flat vectors → (p_new, m_new)."""
     gf = g.astype(jnp.float32)

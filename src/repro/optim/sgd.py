@@ -10,6 +10,16 @@ matches torch.optim.SGD used by the paper's baselines.
 
 The fused Pallas kernel ``repro.kernels.momentum`` implements the same
 update in one HBM pass; ``mgd_update(..., use_kernel=True)`` routes to it.
+
+``param_layout="flat"`` runs the identical update on the contiguous
+``repro.core.flat`` workspace: params/grads/momentum are single ``(D,)``
+vectors (``MGDState.momentum`` holds the flat vector), so the update is
+one fused vector pass instead of a leafwise walk.  Today's dist
+``TrainState`` still carries tree-layout momentum (its checkpoint and
+serving formats depend on it); the flat branch is the optimizer API for
+fully-flat train states (sharded / bf16 / multi-host buffers on the
+ROADMAP) and is contract-tested against the tree path in
+``tests/test_flat.py``.
 """
 from __future__ import annotations
 
@@ -20,7 +30,7 @@ import jax.numpy as jnp
 
 
 class MGDState(NamedTuple):
-    momentum: dict  # pytree matching params ("d" in the paper)
+    momentum: dict  # pytree matching params — or a (D,) flat workspace vector
     step: jnp.ndarray
 
 
@@ -33,8 +43,28 @@ def mgd_init(params) -> MGDState:
 
 def mgd_update(params, grads, state: MGDState, *, lr, gamma: float = 0.9,
                weight_decay: float = 0.0, use_kernel: bool = False,
-               interpret=None):
-    """One MGD step → (new_params, new_state)."""
+               interpret=None, param_layout: str = "tree"):
+    """One MGD step → (new_params, new_state).
+
+    ``param_layout="flat"``: params/grads/momentum are (D,) workspace
+    vectors; the update is one contiguous pass (the Pallas ``momentum``
+    kernel when ``use_kernel``, jnp otherwise)."""
+    if param_layout == "flat":
+        if use_kernel:
+            from repro.kernels.ops import fused_momentum
+            new_p, new_m = fused_momentum(
+                params, grads, state.momentum, lr=lr, gamma=gamma,
+                weight_decay=weight_decay, interpret=interpret)
+            return new_p, MGDState(new_m, state.step + 1)
+        gf = grads.astype(jnp.float32)
+        if weight_decay:
+            gf = gf + weight_decay * params.astype(jnp.float32)
+        new_m = gamma * state.momentum + gf
+        new_p = (params.astype(jnp.float32) - lr * new_m).astype(params.dtype)
+        return new_p, MGDState(new_m, state.step + 1)
+    if param_layout != "tree":
+        raise ValueError(f"param_layout must be 'tree' or 'flat'; "
+                         f"got {param_layout!r}")
     if use_kernel:
         from repro.kernels.ops import fused_momentum_tree
         new_params, new_m = fused_momentum_tree(

@@ -66,13 +66,49 @@ def test_scan_rejects_host_interactive_selectors():
                        backend="nope")
 
 
-def test_scan_engine_rerun_is_deterministic():
-    """ScanEngine caches the compiled scan; repeated runs are identical."""
+@pytest.mark.parametrize("param_layout", ["tree", "flat"])
+def test_scan_engine_rerun_is_deterministic(param_layout):
+    """ScanEngine caches the compiled scan; repeated runs are identical —
+    in both layouts, and despite the donated params/direction carries
+    (run() hands the scan copies, keeping the cached state pristine)."""
     exp = _tiny(femnist_experiment("2spc", "gpfl", seed=5), rounds=5)
-    eng = ScanEngine(exp)
+    eng = ScanEngine(exp, param_layout=param_layout)
     r1, r2 = eng.run(), eng.run()
     np.testing.assert_array_equal(r1.selections, r2.selections)
     np.testing.assert_array_equal(r1.accuracy, r2.accuracy)
+
+
+# ------------------------------------------------- flat-layout parity pins
+
+def test_flat_layout_bit_identical_selection_history():
+    """param_layout='flat' replays the tree layout's ENTIRE selection
+    history bit-identically for selector='gpfl' (the flat-workspace
+    acceptance pin) — and the metric trajectories match exactly, since
+    FedAvg/direction algebra is performed with identical reductions."""
+    exp = _tiny(femnist_experiment("2spc", "gpfl", seed=3))
+    r_tree = run_experiment(exp, backend="scan", param_layout="tree")
+    r_flat = run_experiment(exp, backend="scan", param_layout="flat")
+    np.testing.assert_array_equal(r_tree.selections, r_flat.selections)
+    np.testing.assert_array_equal(r_tree.selection_counts,
+                                  r_flat.selection_counts)
+    np.testing.assert_allclose(r_tree.accuracy, r_flat.accuracy, atol=1e-6)
+    np.testing.assert_allclose(r_tree.loss, r_flat.loss, atol=1e-5)
+    np.testing.assert_array_equal(r_tree.coverage, r_flat.coverage)
+
+
+def test_flat_layout_random_selector():
+    exp = _tiny(femnist_experiment("2spc", "random", seed=6), rounds=5)
+    r_tree = run_experiment(exp, backend="scan", param_layout="tree")
+    r_flat = run_experiment(exp, backend="scan", param_layout="flat")
+    # same jax PRNG stream → identical permutation draws in both layouts
+    np.testing.assert_array_equal(r_tree.selections, r_flat.selections)
+    np.testing.assert_allclose(r_tree.accuracy, r_flat.accuracy, atol=1e-6)
+
+
+def test_engine_rejects_unknown_param_layout():
+    exp = _tiny(femnist_experiment("2spc", "gpfl", seed=0), rounds=2)
+    with pytest.raises(ValueError, match="param_layout"):
+        ScanEngine(exp, param_layout="packed")
 
 
 # ------------------------------------------------- selector property test

@@ -22,6 +22,63 @@ def test_gp_projection_sweep(K, D, dtype):
                                atol=tol * 10)
 
 
+@pytest.mark.parametrize("K,D", [(1, 128), (5, 1000), (16, 4096), (7, 2049)])
+def test_gp_projection_softmax_sweep(K, D):
+    """Fused scores+softmax variant == plain kernel scores + Eq. 5 oracle."""
+    rng = np.random.default_rng(K * 77 + D)
+    G = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+    d = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    scores, rewards = ops.gp_projection_softmax(G, d, block_d=1024)
+    want_s, want_r = ref.gp_projection_softmax_ref(G, d)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want_s),
+                               rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(rewards), np.asarray(want_r),
+                               rtol=2e-5, atol=2e-6)
+    assert abs(float(rewards.sum()) - 1.0) < 1e-5
+    plain = ops.gp_projection(G, d, block_d=1024)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(plain),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("K,D", [(1, 256), (4, 3001), (10, 54_112)])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_fedavg_momentum_sweep(K, D, weighted):
+    """Fused server-update kernel vs the jnp oracle (uniform + weighted)."""
+    rng = np.random.default_rng(K + D)
+    W = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+    prev = jnp.asarray(rng.normal(size=D), jnp.float32)
+    direction = jnp.asarray(rng.normal(size=D), jnp.float32)
+    wts = None
+    if weighted:
+        wts = jnp.asarray(rng.random(K) + 0.1, jnp.float32)
+        wts = wts / wts.sum()
+    got_p, got_d = ops.fedavg_momentum(W, prev, direction, wts, lr=0.005,
+                                       gamma=0.1, block_d=2048)
+    want_p, want_d = ref.fedavg_momentum_ref(W, prev, direction, wts,
+                                             lr=0.005, gamma=0.1)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fedavg_momentum_matches_flat_server_update():
+    """Kernel path == repro.fl.server.server_update_flat jnp path."""
+    from repro.fl.server import server_update_flat
+    rng = np.random.default_rng(11)
+    K, D = 6, 4097
+    W = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+    prev = jnp.asarray(rng.normal(size=D), jnp.float32)
+    direction = jnp.asarray(rng.normal(size=D), jnp.float32)
+    p1, d1 = server_update_flat(W, prev, direction, lr=0.01, gamma=0.9)
+    p2, d2 = server_update_flat(W, prev, direction, lr=0.01, gamma=0.9,
+                                use_kernel=True)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4,
+                               atol=1e-4)
+
+
 @pytest.mark.parametrize("n", [64, 1000, 65_536, 100_001])
 @pytest.mark.parametrize("wd", [0.0, 1e-4])
 def test_momentum_sweep(n, wd):

@@ -10,12 +10,61 @@ pytest.importorskip(
            "(pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import gp, gpcb
+from repro.core import flat, gp, gpcb
 from repro.data.partition import partition
 from repro.kernels import ops, ref
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
+
+_FLAT_DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16])
+_FLAT_SHAPES = st.lists(
+    st.lists(st.integers(1, 7), min_size=0, max_size=3).map(tuple),
+    min_size=1, max_size=5)
+
+
+@given(_FLAT_SHAPES, st.lists(st.integers(0, 2), min_size=1, max_size=5),
+       st.integers(0, 10 ** 6))
+def test_flat_pack_unpack_bit_exact(shapes, dtype_picks, seed):
+    """unpack(pack(tree)) == tree BIT-exactly across mixed dtypes/shapes
+    (incl. 0-d leaves), and the padded tail is exactly zero."""
+    rng = np.random.default_rng(seed)
+    dts = [jnp.float32, jnp.bfloat16, jnp.float16]
+    tree = {
+        f"leaf{i}": jnp.asarray(rng.normal(size=shp) * 10 ** rng.integers(
+            -3, 4), dts[dtype_picks[i % len(dtype_picks)]])
+        for i, shp in enumerate(shapes)
+    }
+    spec = flat.make_flat_spec(tree)
+    vec = flat.pack(spec, tree)
+    assert vec.shape == (spec.padded_size,)
+    assert spec.padded_size % flat.DEFAULT_PAD_TO == 0
+    np.testing.assert_array_equal(np.asarray(vec[spec.size:]), 0.0)
+    back = flat.unpack(spec, vec)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        # bitwise comparison: compare the raw bytes (works for 0-d too)
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+@given(st.integers(1, 5), _FLAT_SHAPES, st.integers(0, 10 ** 6))
+def test_flat_gp_matrix_matches_tree_scores(k, shapes, seed):
+    """gp_scores_matrix on the packed (K, Dp) workspace == gp_scores_tree
+    on the pytrees (float32 tolerance) — the padded tail must not leak
+    into dots or the direction norm."""
+    rng = np.random.default_rng(seed)
+    direction = {f"l{i}": jnp.asarray(rng.normal(size=shp) + 0.05,
+                                      jnp.float32)
+                 for i, shp in enumerate(shapes)}
+    grads = [jax.tree.map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape), jnp.float32),
+        direction) for _ in range(k)]
+    spec = flat.make_flat_spec(direction)
+    gm = jnp.stack([flat.pack(spec, g) for g in grads])
+    want = gp.gp_scores_tree(grads, direction)
+    got = gp.gp_scores_matrix(gm, flat.pack(spec, direction))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
 
 
 @given(st.integers(2, 40), st.integers(1, 5), st.integers(0, 2 ** 31 - 1),
