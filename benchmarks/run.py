@@ -5,15 +5,17 @@ FEMNIST stand-in (scaled-down rounds — the offline container has no FEMNIST;
 see DESIGN.md), micro-benchmarks of the Pallas kernel wrappers (honest
 about interpret mode — see ``_kernel_micro``), the ``engine`` bench
 comparing the host round loop against the compiled ``lax.scan`` round
-engine (rounds/sec), and the ``flat`` bench comparing the engine's tree
+engine (rounds/sec), the ``flat`` bench comparing the engine's tree
 vs flat parameter layouts (server-round scans + full engine; see
-``_flat_micro``).
+``_flat_micro``), and the ``selectors`` bench comparing all four
+selectors across {python, scan} × {1, n_devices} with per-row selection
+parity flags (see ``_selector_micro``).
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks everything
 (CI); ``--full`` runs paper-scale rounds; ``--json PATH`` additionally
-writes the engine/flat/kernel results as machine-readable JSON (CI uploads
-``BENCH_engine.json`` / ``BENCH_flat.json`` as artifacts — the bench
-trajectory record).  The
+writes the engine/flat/selector/kernel results as machine-readable JSON
+(CI uploads ``BENCH_engine.json`` / ``BENCH_flat.json`` /
+``BENCH_selectors.json`` as artifacts — the bench trajectory record).  The
 §Roofline analysis is a separate entrypoint (``benchmarks.roofline``)
 because it must own XLA_FLAGS=...device_count=512 at process start.
 """
@@ -312,6 +314,73 @@ def _flat_micro(quick: bool = True):
     return rows
 
 
+def _selector_micro(quick: bool = True):
+    """Selector-comparison bench: all four selectors × {python, scan} ×
+    {1, n_devices} on the dispatch-bound config.
+
+    One row per (selector, backend, device count) with rounds/sec and a
+    ``selections_match`` parity flag against that selector's python
+    host-loop run — the acceptance gate of the selector-agnostic engine
+    (every selector's scan history must replay the host loop
+    bit-identically; CI fails on any mismatched row).
+
+    Scan rows run the tree layout on 1 device (the parity oracle) and,
+    when ≥2 jax devices are visible (CI forces 2 host CPU devices via
+    XLA_FLAGS), the flat layout with the cohort sharded over a
+    ``("clients",)`` mesh of the largest device count ≤ n_devices that
+    divides K.  Python rows carry the reference throughput; their parity
+    flag is trivially true.
+    """
+    import dataclasses
+    import jax
+    from repro.configs.paper import femnist_experiment
+    from repro.fl import ScanEngine, run_experiment
+
+    rounds = 24 if quick else 60
+    ndev = jax.device_count()
+    base = dataclasses.replace(
+        femnist_experiment("2spc", "gpfl"), rounds=rounds, n_clients=64,
+        clients_per_round=4, samples_per_client_mean=40,
+        samples_per_client_std=10, local_iters=3, local_batch_size=16,
+        eval_size=256)
+
+    rows = []
+    for sel in ("random", "gpfl", "powd", "fedcor"):
+        exp = dataclasses.replace(base, selector=sel,
+                                  name=f"bench-{sel}")
+        res_py = run_experiment(exp, backend="python")
+        py_round = float(res_py.round_time_s[1:].mean())
+        rows.append({
+            "name": f"selector_{sel}_python_dev1", "selector": sel,
+            "backend": "python", "devices": 1, "param_layout": "tree",
+            "rounds": rounds, "s_per_round": py_round,
+            "rounds_per_s": 1.0 / py_round, "speedup_vs_python": 1.0,
+            "selections_match": True,
+        })
+        scan_cfgs = [(1, "tree")]
+        if ndev >= 2:
+            shards = min(ndev, exp.clients_per_round)
+            while exp.clients_per_round % shards:
+                shards -= 1
+            if shards >= 2:
+                scan_cfgs.append((shards, "flat"))
+        for devs, layout in scan_cfgs:
+            eng = ScanEngine(exp, param_layout=layout, shard_clients=devs)
+            eng.run()                       # compile + warm
+            res_sc = eng.run()              # steady-state
+            sc_round = float(res_sc.round_time_s.mean())
+            rows.append({
+                "name": f"selector_{sel}_scan_dev{devs}", "selector": sel,
+                "backend": "scan", "devices": devs, "param_layout": layout,
+                "rounds": rounds, "s_per_round": sc_round,
+                "rounds_per_s": 1.0 / sc_round,
+                "speedup_vs_python": py_round / sc_round,
+                "selections_match": bool(np.array_equal(
+                    res_py.selections, res_sc.selections)),
+            })
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -320,7 +389,7 @@ def main(argv=None) -> None:
                     help="paper-scale rounds (hours)")
     ap.add_argument("--only", default=None,
                     help="comma-list: table2,fig4,fig5,fig6,fig7,kernels,"
-                         "engine,flat")
+                         "engine,flat,selectors")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write engine/flat/kernel results as JSON "
                          "(e.g. BENCH_engine.json, BENCH_flat.json)")
@@ -331,7 +400,7 @@ def main(argv=None) -> None:
     rounds = 12 if args.quick else 60
     only = set(args.only.split(",")) if args.only else \
         {"table2", "fig4", "fig5", "fig6", "fig7", "kernels", "engine",
-         "flat"}
+         "flat", "selectors"}
     bench_data = {}
 
     print("name,us_per_call,derived")
@@ -391,6 +460,16 @@ def main(argv=None) -> None:
                   f"selections_match={int(r['selections_match'])}",
                   flush=True)
 
+    if "selectors" in only:
+        sel_rows = _selector_micro(quick=args.quick)
+        bench_data["selectors"] = sel_rows
+        for r in sel_rows:
+            print(f"{r['name']},{r['s_per_round'] * 1e6:.0f},"
+                  f"rps={r['rounds_per_s']:.2f};"
+                  f"speedup={r['speedup_vs_python']:.2f};"
+                  f"selections_match={int(r['selections_match'])}",
+                  flush=True)
+
     if "kernels" in only:
         kernel_rows = _kernel_micro()
         bench_data["kernels"] = kernel_rows
@@ -403,6 +482,7 @@ def main(argv=None) -> None:
         import jax
         bench_data["meta"] = {
             "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
             "jax": jax.__version__,
             "mode": "full" if args.full else
                     ("quick" if args.quick else "default"),

@@ -8,7 +8,7 @@ weight decay 3e-4.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +38,10 @@ class FLExperimentConfig:
     momentum: float = 0.1         # γ in Eq. (1)
     rho: float = 1.0              # ρ in Eq. (7)
     selector: str = "gpfl"        # gpfl | random | powd | fedcor
+    # baseline-selector knobs (shared by the host loop and the scan
+    # engine so both backends build identical selectors)
+    powd_d: Optional[int] = None  # Pow-d candidate pool; None → min(N, max(2K, K+5))
+    fedcor_warmup: int = 15       # FedCor warm-up rounds before GP ranking
     seed: int = 0
     # synthetic-data stand-in knobs (offline container; see DESIGN.md)
     samples_per_client_mean: int = 226

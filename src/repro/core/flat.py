@@ -63,6 +63,7 @@ class FlatSpec:
 
     @property
     def pad(self) -> int:
+        """Zero-padding tail length: ``padded_size − size`` scalars."""
         return self.padded_size - self.size
 
 

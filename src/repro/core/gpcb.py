@@ -18,6 +18,8 @@ from repro.core.gp import normalize_gp
 
 
 class BanditState(NamedTuple):
+    """GPCB's per-arm statistics, as a jit-friendly pytree (carried
+    through both the FL scan engine and the datacenter train step)."""
     reward_sum: jnp.ndarray   # (N,) Σ μ_i over rounds where i was selected
     count: jnp.ndarray        # (N,) n_i — times selected
     round: jnp.ndarray        # () current round t
@@ -26,6 +28,7 @@ class BanditState(NamedTuple):
 
 
 def init_state(n_clients: int) -> BanditState:
+    """Fresh bandit state for N arms (zero rewards/counts, round 0)."""
     return BanditState(
         reward_sum=jnp.zeros((n_clients,), jnp.float32),
         count=jnp.zeros((n_clients,), jnp.float32),
@@ -75,28 +78,38 @@ def select_topk(u, k: int):
 
 def selection_scores(state: BanditState, latest_gp, jitter, t,
                      total_rounds: int, rho: float = 1.0,
-                     use_ee: bool = True):
+                     use_ee: bool = True, avail=None):
     """Pure-jnp mirror of ``GPFLSelector.select`` — fixed-shape, scan-safe.
 
-    Returns per-client scores whose descending argsort gives the round's
-    cohort (``jnp.argsort(-scores)[:k]``):
+    Args:
+        state: the bandit statistics carried across rounds.
+        latest_gp: (N,) persistent C vector of each client's latest GP.
+        jitter: (N,) this round's host tie-break draw (see below).
+        t: current round (traced scalar is fine).
+        total_rounds: horizon T for the Eq. 7 α-schedule.
+        rho: exploration scale ρ (Eq. 7).
+        use_ee: ``False`` is the paper's Fig. 7 ablation — α = 0, pure
+            exploitation by mean reward.
+        avail: optional (N,) bool availability mask (scenario runs);
+            unavailable clients score −inf and never enter the top-K.
 
-    * ``t == 0`` — Algorithm 1's init round: rank by the seed GP of every
-      client (``latest_gp``), no randomness consumed.
-    * later rounds — GPCB values (Eq. 6); never-selected arms (+inf) are
-      lifted onto a large finite plateau ordered by the host-supplied
-      tie-break ``jitter`` (the raw ``rng.random(n)`` draw the host
-      selector consumes, precomputed into a scan input by
-      ``repro.core.selector.gpfl_jitter_stream``).
+    Returns:
+        (N,) per-client scores whose descending argsort gives the round's
+        cohort (``jnp.argsort(-scores)[:k]``):
+
+        * ``t == 0`` — Algorithm 1's init round: rank by the seed GP of
+          every client (``latest_gp``), no randomness consumed.
+        * later rounds — GPCB values (Eq. 6); never-selected arms (+inf)
+          are lifted onto a large finite plateau ordered by the
+          host-supplied tie-break ``jitter`` (the raw ``rng.random(n)``
+          draw the host selector consumes, precomputed into a scan input
+          by ``repro.core.selector.gpfl_jitter_stream``).
 
     The host selector scales the draw by 1e-9: for finite arms that is an
     exact-tie breaker only (sub-ulp at float32 — mirrored here for shape,
     decisions ride on the u values), and for the +inf plateau any
     *monotone* map of the draw reproduces its ordering, so the plateau
     uses the raw draw at a float32-safe spread.
-
-    ``use_ee=False`` is the paper's Fig. 7 ablation: α = 0, pure
-    exploitation by mean reward.
     """
     if use_ee:
         u = gpcb_values(state, total_rounds, rho)
@@ -104,22 +117,49 @@ def selection_scores(state: BanditState, latest_gp, jitter, t,
         mean = state.reward_sum / jnp.maximum(state.count, 1.0)
         u = jnp.where(state.count > 0, mean, jnp.inf)
     finite = jnp.where(jnp.isinf(u), 1e9 + jitter * 1e12, u)
-    return jnp.where(jnp.asarray(t) == 0, latest_gp, finite + jitter * 1e-9)
+    scores = jnp.where(jnp.asarray(t) == 0, latest_gp,
+                       finite + jitter * 1e-9)
+    if avail is not None:
+        scores = jnp.where(avail, scores, -jnp.inf)
+    return scores
 
 
 def observe(state: BanditState, latest_gp, selected_ids, gp_scores, acc,
-            loss):
+            loss, valid_mask=None):
     """Pure-jnp mirror of ``GPFLSelector.observe``: fold one round's
-    feedback into the bandit → ``(new_state, new_latest_gp)``.
+    feedback into the bandit.
 
     Keeps the persistent per-client C vector (``latest_gp``, Algorithm 1),
     softmax-normalises over all N (Eq. 5), re-calibrates by global
     progress (Eq. 8) and updates reward sums / counts (selection counts
-    ride as carried state inside the compiled engine's scan)."""
+    ride as carried state inside the compiled engine's scan).
+
+    Args:
+        state: bandit statistics before this round's feedback.
+        latest_gp: (N,) persistent C vector.
+        selected_ids: (K,) this round's cohort (distinct ids).
+        gp_scores: (K,) raw GP scores of the cohort (Eq. 3).
+        acc: global accuracy A^t after the round (Eq. 8 input).
+        loss: global loss F(w^t) after the round (Eq. 8 input).
+        valid_mask: optional (K,) bool — clients whose update actually
+            landed (straggler scenario); dropped clients keep their old
+            C entry and their arm's count/reward are not advanced.
+
+    Returns:
+        ``(new_state, new_latest_gp)``.
+    """
     n = latest_gp.shape[0]
-    mask = jnp.zeros((n,), jnp.float32).at[selected_ids].set(1.0)
-    latest_gp = latest_gp.at[selected_ids].set(
-        jnp.asarray(gp_scores, jnp.float32))
+    if valid_mask is None:
+        mask = jnp.zeros((n,), jnp.float32).at[selected_ids].set(1.0)
+        latest_gp = latest_gp.at[selected_ids].set(
+            jnp.asarray(gp_scores, jnp.float32))
+    else:
+        valid = jnp.asarray(valid_mask)
+        mask = jnp.zeros((n,), jnp.float32).at[selected_ids].set(
+            valid.astype(jnp.float32))
+        latest_gp = latest_gp.at[selected_ids].set(
+            jnp.where(valid, jnp.asarray(gp_scores, jnp.float32),
+                      latest_gp[selected_ids]))
     mu = normalize_gp(latest_gp) * mask
     mu_cal = calibrate_reward(mu, acc, state.prev_acc, loss, state.prev_loss)
     return update_state(state, mask, mu_cal, acc, loss), latest_gp

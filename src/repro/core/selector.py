@@ -10,6 +10,20 @@ The FL simulation drives selectors through a small host-side interface:
 
 GPFL's bandit statistics live in ``repro.core.gpcb.BanditState`` (jit-friendly;
 the datacenter train step carries the same state inside jit).
+
+**Host-parity streams.**  The compiled round engine (``repro.fl.engine``)
+replays every selector inside one jitted ``lax.scan``.  Selection decisions
+that depend only on the host RNG — Random's cohort draw, GPFL's tie-break
+jitter, Pow-d's candidate pool, FedCor's warm-up cohorts — are precomputed
+here into (T, ...) matrices (:func:`random_id_stream`,
+:func:`gpfl_jitter_stream`, :func:`powd_candidate_stream`,
+:func:`fedcor_warmup_stream`) that consume the host RNG in EXACTLY the
+order the host-loop selectors do, then ride into the scan as inputs.
+Decisions that depend on training state (Pow-d's loss ranking, FedCor's
+GP posterior) are re-derived in-scan from pure-jnp twins
+(:func:`fedcor_greedy`, :func:`fedcor_cov_update`) that the host selectors
+themselves call — one implementation, two drivers, bit-identical
+selection histories (pinned by ``tests/test_selectors_scan.py``).
 """
 from __future__ import annotations
 
@@ -26,6 +40,7 @@ from repro.core.gp import normalize_gp
 
 @dataclasses.dataclass
 class RoundFeedback:
+    """One round's outcome, as handed to ``selector.observe``."""
     round_idx: int
     selected: np.ndarray                 # (K,) indices
     gp_scores: Optional[np.ndarray]      # (K,) raw GP of selected clients
@@ -35,20 +50,74 @@ class RoundFeedback:
 
 
 class RandomSelector:
-    """Uniform K-of-N without replacement."""
+    """Uniform K-of-N without replacement (FedAvg's default sampling).
+
+    The compiled engine replays this selector from
+    :func:`random_id_stream` — same rng, same draws, bit-identical
+    cohorts."""
 
     name = "random"
     needs_candidate_losses = 0
     needs_all_losses = False
 
     def __init__(self, n_clients: int, k: int, **_):
+        """N clients, cohorts of K; extra selector knobs are ignored."""
         self.n, self.k = n_clients, k
 
     def select(self, rng: np.random.Generator, round_idx: int):
+        """Draw this round's cohort.
+
+        Args:
+            rng: host RNG (one ``choice`` consumed per round).
+            round_idx: unused (kept for the selector interface).
+
+        Returns:
+            (K,) client indices, distinct.
+        """
         return rng.choice(self.n, size=self.k, replace=False)
 
     def observe(self, fb: RoundFeedback):
-        pass
+        """No state — random selection ignores feedback."""
+
+
+def _choice_stream(rng: np.random.Generator, rounds: int, n_clients: int,
+                   size: int, avail=None, upto=None) -> np.ndarray:
+    """Shared body of the ``*_stream`` precomputers: one
+    ``rng.choice(pool, size, replace=False)`` draw per round for rounds
+    ``t < upto`` (remaining rows stay zero), with the pool restricted to
+    the round's available clients when ``avail`` is given.  Each wrapper
+    documents which host selector consumes the draws — keep the call
+    here bit-for-bit what that selector executes."""
+    out = np.zeros((rounds, size), np.int64)
+    for t in range(rounds if upto is None else min(upto, rounds)):
+        if avail is None:
+            out[t] = rng.choice(n_clients, size=size, replace=False)
+        else:
+            out[t] = rng.choice(np.flatnonzero(avail[t]), size=size,
+                                replace=False)
+    return out
+
+
+def random_id_stream(rng: np.random.Generator, rounds: int, n_clients: int,
+                     k: int, avail=None) -> np.ndarray:
+    """Precompute ``RandomSelector``'s per-round cohort draws.
+
+    Consumes ``rng`` exactly as T calls of ``RandomSelector.select`` do
+    (one ``rng.choice(n, k, replace=False)`` per round), so feeding row t
+    to the scan engine replays the host loop's cohorts bit-identically.
+
+    Args:
+        rng: host RNG — pass a generator seeded like the host loop's.
+        rounds: number of FL rounds T.
+        n_clients: number of clients N.
+        k: cohort size K.
+        avail: optional (T, N) bool availability mask (scenario runs);
+            draws are then restricted to the round's available clients.
+
+    Returns:
+        (T, K) int64 client-id matrix.
+    """
+    return _choice_stream(rng, rounds, n_clients, k, avail=avail)
 
 
 class GPFLSelector:
@@ -60,6 +129,8 @@ class GPFLSelector:
 
     def __init__(self, n_clients: int, k: int, total_rounds: int,
                  rho: float = 1.0, use_ee: bool = True, **_):
+        """N arms, top-K cohorts, horizon T; ρ scales Eq. 7's α-ramp and
+        ``use_ee=False`` is the Fig. 7 pure-exploitation ablation."""
         self.n, self.k = n_clients, k
         self.total_rounds = total_rounds
         self.rho = rho
@@ -68,6 +139,16 @@ class GPFLSelector:
         self.latest_gp = np.zeros(n_clients, np.float32)
 
     def select(self, rng: np.random.Generator, round_idx: int):
+        """Top-K clients by GPCB value (Eq. 6), jitter-broken ties.
+
+        Args:
+            rng: host RNG — one raw ``rng.random(n)`` tie-break draw
+                consumed per round after round 0.
+            round_idx: current round t (round 0 ranks by the seed GP).
+
+        Returns:
+            (K,) client indices.
+        """
         # NB: the compiled engine (repro.fl.engine) re-implements this exact
         # decision rule in pure jnp (repro.core.gpcb.selection_scores); its
         # rng consumption is documented by gpfl_jitter_stream below.  Keep
@@ -93,6 +174,8 @@ class GPFLSelector:
         self.latest_gp = np.array(gp_all, np.float32)  # writable copy
 
     def observe(self, fb: RoundFeedback):
+        """Fold round feedback into the bandit (Eq. 5 rewards + Eq. 8
+        re-calibration; mirrored in-jit by ``repro.core.gpcb.observe``)."""
         mask = np.zeros(self.n, np.float32)
         mask[fb.selected] = 1.0
         mu = np.zeros(self.n, np.float32)
@@ -130,91 +213,250 @@ def gpfl_jitter_stream(rng: np.random.Generator, rounds: int,
     return out
 
 
+def powd_default_d(n_clients: int, k: int) -> int:
+    """Pow-d's default candidate-pool size d = min(N, max(2K, K+5)).
+
+    Shared by :class:`PowDSelector` and the scan engine so both paths
+    probe the same pool."""
+    return min(n_clients, max(2 * k, k + 5))
+
+
 class PowDSelector:
     """Power-of-choice (Cho et al., 2022): probe d random candidates' local
-    losses, pick the K with the highest loss (post-selection)."""
+    losses, pick the K with the highest loss (post-selection).
+
+    The compiled engine replays the candidate draws from
+    :func:`powd_candidate_stream` and re-ranks the probed losses in-scan;
+    both paths rank by a descending argsort over the same float32 loss
+    values, so histories agree bit-for-bit whenever candidate losses are
+    distinct.  Only the scan side's ordering is stable (``jnp.argsort``;
+    the host's ``np.argsort`` default is an unstable introsort), so an
+    exact float tie — vanishingly rare — could order differently."""
 
     name = "powd"
     needs_all_losses = False
 
     def __init__(self, n_clients: int, k: int, d: Optional[int] = None, **_):
+        """N clients, top-K of a d-candidate probe pool
+        (``d=None`` → :func:`powd_default_d`)."""
         self.n, self.k = n_clients, k
-        self.d = d or min(n_clients, max(2 * k, k + 5))
+        self.d = d or powd_default_d(n_clients, k)
         self.needs_candidate_losses = self.d
         self.candidates: Optional[np.ndarray] = None
         self.candidate_losses: Optional[np.ndarray] = None
 
     def propose_candidates(self, rng: np.random.Generator):
+        """Draw the round's d-candidate probe pool.
+
+        Args:
+            rng: host RNG (one ``choice`` consumed per round).
+
+        Returns:
+            (d,) distinct client indices to probe.
+        """
         self.candidates = rng.choice(self.n, size=self.d, replace=False)
         return self.candidates
 
     def receive_candidate_losses(self, losses: np.ndarray):
+        """Record the probed candidates' local losses ((d,) array)."""
         self.candidate_losses = np.asarray(losses)
 
     def select(self, rng: np.random.Generator, round_idx: int):
+        """Top-K candidates by probed loss (uniform fallback unprobed).
+
+        Args:
+            rng: host RNG — consumed only on the unprobed fallback path.
+            round_idx: unused (selector interface).
+
+        Returns:
+            (K,) client indices.
+        """
         if self.candidate_losses is None:
             return rng.choice(self.n, size=self.k, replace=False)
         order = np.argsort(-self.candidate_losses)
         return self.candidates[order[: self.k]]
 
     def observe(self, fb: RoundFeedback):
+        """Reset the probe buffer — next round draws a fresh pool."""
         self.candidate_losses = None
+
+
+def powd_candidate_stream(rng: np.random.Generator, rounds: int,
+                          n_clients: int, d: int, avail=None) -> np.ndarray:
+    """Precompute ``PowDSelector``'s per-round candidate pools.
+
+    Consumes ``rng`` exactly as T calls of
+    ``PowDSelector.propose_candidates`` do (one
+    ``rng.choice(n, d, replace=False)`` per round); the in-scan loss
+    probe + top-K ranking then replays the host decision.
+
+    Args:
+        rng: host RNG — seeded like the host loop's.
+        rounds: number of FL rounds T.
+        n_clients: number of clients N.
+        d: candidate-pool size (see :func:`powd_default_d`).
+        avail: optional (T, N) bool availability mask (scenario runs).
+
+    Returns:
+        (T, d) int64 candidate-id matrix.
+    """
+    return _choice_stream(rng, rounds, n_clients, d, avail=avail)
+
+
+def fedcor_cov_update(cov, prev_losses, losses, beta: float = 0.95):
+    """FedCor's client-covariance EMA, pure jnp (one loss delta folded in).
+
+    Args:
+        cov: (N, N) float32 running covariance estimate.
+        prev_losses: (N,) previous round's per-client losses.
+        losses: (N,) this round's per-client losses.
+        beta: EMA discount on the old covariance.
+
+    Returns:
+        (N, N) updated covariance: ``β·cov + (1−β)·outer(d̃, d̃)`` with
+        ``d̃`` the mean-centred loss delta.
+
+    Shared bit-for-bit by the host :class:`FedCorSelector` and the scan
+    engine's in-scan FedCor replay — the parity contract depends on both
+    drivers calling this one implementation (in float32).
+    """
+    delta = losses.astype(jnp.float32) - prev_losses.astype(jnp.float32)
+    d = delta - jnp.mean(delta)
+    return beta * cov + (1.0 - beta) * jnp.outer(d, d)
+
+
+def fedcor_greedy(cov, k: int, avail=None):
+    """FedCor Alg. 2's greedy GP-posterior selection, pure jnp/scan-safe.
+
+    Repeatedly takes the client whose selection most reduces total
+    predictive variance (gain ``Σ_j |Σ_ij| / sqrt(Σ_ii)``), rank-1
+    downdating the posterior after each pick.
+
+    Args:
+        cov: (N, N) float32 client covariance (EMA from
+            :func:`fedcor_cov_update`).
+        k: cohort size (static — unrolled as a length-K ``lax.scan``).
+        avail: optional (N,) bool availability mask; unavailable clients
+            never enter the cohort (scenario runs).
+
+    Returns:
+        (K,) int32 client indices in pick order.
+    """
+    n = cov.shape[0]
+    sigma = cov + 1e-6 * jnp.eye(n, dtype=cov.dtype)
+
+    def pick(carry, _):
+        sigma, taken = carry
+        diag = jnp.clip(jnp.diagonal(sigma), 1e-12, None)
+        gain = jnp.abs(sigma).sum(axis=1) / jnp.sqrt(diag)
+        gain = jnp.where(taken, -jnp.inf, gain)
+        if avail is not None:
+            gain = jnp.where(avail, gain, -jnp.inf)
+        i = jnp.argmax(gain)
+        si = sigma[:, i]
+        sigma = sigma - jnp.outer(si, si) / jnp.maximum(sigma[i, i], 1e-12)
+        return (sigma, taken.at[i].set(True)), i.astype(jnp.int32)
+
+    (_, _), chosen = jax.lax.scan(pick, (sigma, jnp.zeros((n,), bool)),
+                                  None, length=k)
+    return chosen
+
+
+_fedcor_greedy_host = jax.jit(fedcor_greedy, static_argnames=("k",))
+_fedcor_cov_update_host = jax.jit(fedcor_cov_update,
+                                  static_argnames=("beta",))
 
 
 class FedCorSelector:
     """FedCor (Tang et al., CVPR 2022): Gaussian-Process client-correlation
     model.  Warm-up rounds observe every client's loss change to estimate a
     client covariance; afterwards clients are picked greedily to maximise
-    expected global loss reduction under the GP posterior."""
+    expected global loss reduction under the GP posterior.
+
+    The covariance EMA and the greedy pick delegate to the jnp twins
+    (:func:`fedcor_cov_update` / :func:`fedcor_greedy`, float32) that the
+    compiled engine runs inside its scan — host and scan share one
+    implementation, so their selection histories match bit-for-bit."""
 
     name = "fedcor"
 
     def __init__(self, n_clients: int, k: int, warmup: int = 15,
                  beta: float = 0.95, **_):
+        """N clients, cohorts of K; ``warmup`` uniform rounds feed the
+        covariance EMA (discount ``beta``) before greedy ranking."""
         self.n, self.k = n_clients, k
         self.warmup = warmup
         self.beta = beta                  # covariance EMA discount
-        self.cov = np.eye(n_clients, dtype=np.float64)
+        self.cov = np.eye(n_clients, dtype=np.float32)
         self.loss_history: list[np.ndarray] = []
         self.needs_candidate_losses = 0
         self.round = 0
 
     @property
     def needs_all_losses(self) -> bool:
-        # the GP model consumes the full per-client loss vector each round —
-        # this is exactly the overhead Fig. 6 of the paper attributes to it
+        """FedCor consumes the full per-client loss vector each round —
+        exactly the overhead Fig. 6 of the paper attributes to it."""
         return True
 
     def receive_all_losses(self, losses: np.ndarray):
-        losses = np.asarray(losses, np.float64)
+        """Fold one round's (N,) loss vector into the covariance EMA."""
+        losses = np.asarray(losses, np.float32)
         if self.loss_history:
-            delta = losses - self.loss_history[-1]
-            d = delta - delta.mean()
-            upd = np.outer(d, d)
-            self.cov = self.beta * self.cov + (1 - self.beta) * upd
+            self.cov = np.asarray(_fedcor_cov_update_host(
+                jnp.asarray(self.cov), jnp.asarray(self.loss_history[-1]),
+                jnp.asarray(losses), beta=self.beta))
         self.loss_history.append(losses)
 
     def select(self, rng: np.random.Generator, round_idx: int):
+        """Warm-up: uniform K-of-N.  After: greedy GP-posterior cohort.
+
+        Args:
+            rng: host RNG — consumed only during warm-up (one ``choice``
+                per warm-up round; see :func:`fedcor_warmup_stream`).
+            round_idx: current round t.
+
+        Returns:
+            (K,) client indices.
+        """
         self.round = round_idx
         if round_idx < self.warmup or len(self.loss_history) < 2:
             return rng.choice(self.n, size=self.k, replace=False)
-        # greedy GP posterior selection (FedCor Alg. 2): repeatedly take the
-        # client whose selection most reduces total predictive variance
-        sigma = self.cov + 1e-6 * np.eye(self.n)
-        chosen: list[int] = []
-        for _ in range(self.k):
-            diag = np.clip(np.diag(sigma), 1e-12, None)
-            gain = np.abs(sigma).sum(axis=1) / np.sqrt(diag)
-            gain[chosen] = -np.inf
-            i = int(np.argmax(gain))
-            chosen.append(i)
-            si = sigma[:, i : i + 1]
-            sigma = sigma - (si @ si.T) / max(float(sigma[i, i]), 1e-12)
-        return np.asarray(chosen)
+        # greedy GP posterior selection (FedCor Alg. 2) — the shared jnp
+        # implementation the scan engine also runs inside its scan body
+        return np.asarray(_fedcor_greedy_host(jnp.asarray(self.cov),
+                                              k=self.k), np.int64)
 
     def observe(self, fb: RoundFeedback):
+        """Feed the round's all-client loss probe into the GP model."""
         if fb.client_losses is not None:
             self.receive_all_losses(fb.client_losses)
+
+
+def fedcor_warmup_stream(rng: np.random.Generator, rounds: int,
+                         n_clients: int, k: int, warmup: int,
+                         avail=None) -> np.ndarray:
+    """Precompute ``FedCorSelector``'s warm-up cohort draws.
+
+    FedCor consumes the host RNG only while warming up — round t draws
+    ``rng.choice(n, k, replace=False)`` iff ``t < max(warmup, 2)`` (the
+    covariance needs two loss vectors before the GP posterior can rank) —
+    and never afterwards.  This mirrors that consumption exactly; rows
+    ``t >= max(warmup, 2)`` are zeros (the scan's greedy branch ignores
+    them).
+
+    Args:
+        rng: host RNG — seeded like the host loop's.
+        rounds: number of FL rounds T.
+        n_clients: number of clients N.
+        k: cohort size K.
+        warmup: FedCor's warm-up length.
+        avail: optional (T, N) bool availability mask (scenario runs).
+
+    Returns:
+        (T, K) int64 warm-up cohort matrix (zeros past warm-up).
+    """
+    return _choice_stream(rng, rounds, n_clients, k, avail=avail,
+                          upto=max(warmup, 2))
 
 
 SELECTORS = {
@@ -227,7 +469,29 @@ SELECTORS = {
 
 def make_selector(name: str, n_clients: int, k: int, total_rounds: int,
                   **kw):
+    """Build a host-side selector by name.
+
+    Args:
+        name: one of ``random``/``gpfl``/``powd``/``fedcor``.
+        n_clients: number of clients N.
+        k: cohort size K.
+        total_rounds: horizon T (GPFL's Eq. 7 α-schedule needs it).
+        **kw: selector-specific knobs (``rho``, ``warmup``, ``d``, ...);
+            unknown knobs are ignored by selectors that don't take them.
+
+    Returns:
+        A selector instance implementing ``select``/``observe``.
+
+    Raises:
+        KeyError: unknown name — the message lists every selector and
+            which backend runs it (both, since the scan engine replays
+            all four; see ``repro.fl.run_experiment``).
+    """
     if name not in SELECTORS:
-        raise KeyError(f"unknown selector {name!r}; have {sorted(SELECTORS)}")
+        raise KeyError(
+            f"unknown selector {name!r}. Supported selectors (all run under "
+            f"backend='python' AND backend='scan'): {sorted(SELECTORS)}. "
+            "See repro.fl.simulation.SUPPORT_MATRIX for the full "
+            "backend/selector/scenario compatibility matrix.")
     return SELECTORS[name](n_clients=n_clients, k=k, total_rounds=total_rounds,
                            **kw)

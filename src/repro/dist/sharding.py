@@ -47,6 +47,50 @@ def _div(n: int, m: int) -> bool:
     return n > 0 and n % m == 0
 
 
+def cohort_axis_rules(clients_per_round: int, n_shards: int) -> dict:
+    """Logical-axis → mesh-axis rules for the FL scan engine's cohort.
+
+    The compiled round engine (``repro.fl.engine``) carries the selected
+    cohort as a flat ``(K, Dp)`` matrix (``repro.core.flat``); on a
+    multi-device ``("clients",)`` mesh the K axis shards client-parallel
+    — same convention as :func:`arch_rules` (logical axis name → mesh
+    axis name or ``None`` for replicated), so the engine consumes the
+    dict through the same ``specs`` plumbing.
+
+    Args:
+        clients_per_round: cohort size K.
+        n_shards: devices on the ``clients`` mesh axis (1 → no mesh).
+
+    Returns:
+        ``{"clients": "clients" | None}``.
+
+    Raises:
+        ValueError: K does not divide evenly over the shards — an uneven
+            cohort shard would give devices different trip counts inside
+            the scanned round (and silently skew FedAvg partials).
+    """
+    if n_shards <= 1:
+        return {"clients": None}
+    if clients_per_round % n_shards:
+        raise ValueError(
+            f"clients_per_round={clients_per_round} does not divide across "
+            f"{n_shards} client shards; pick K a multiple of the clients "
+            "mesh axis (or shard_clients=1)")
+    return {"clients": "clients"}
+
+
+def cohort_specs(rules: dict):
+    """PartitionSpecs for the cohort rules: ``(cohort_spec, replicated)``.
+
+    ``cohort_spec`` shards the leading K axis of per-client arrays
+    (data, rngs, packed update rows) over the ``clients`` mesh axis;
+    the second spec is the fully-replicated companion for globals
+    (params/direction vectors).
+    """
+    from jax.sharding import PartitionSpec as P
+    return P(rules["clients"]), P()
+
+
 def arch_rules(cfg: ArchConfig, *, model_size: int = 16,
                data_size: int = 16, multi_pod: bool = False) -> dict:
     """Parameter-layout rules for ``cfg`` on a ``model_size``-way model axis.

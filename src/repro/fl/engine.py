@@ -9,13 +9,41 @@ the per-round burden GPFL's pre-selection is supposed to remove.
 This module keeps the whole simulation device-resident.  Each scan step
 fuses the full round:
 
-    GPCB selection (pure-jnp Eq. 6-8, fixed-shape ranking)
+    selection (any of the paper's four selectors, pure-jnp)
       → cohort gather from the ClientStore's device tables
-      → vmapped local training (Eq. 1-2)
+      → vmapped local training (Eq. 1-2), optionally client-sharded
       → GP scoring against the global direction (Eq. 3)
       → FedAvg + momentum-direction update
       → evaluation
-      → bandit update (reward sums / selection counts in the carry).
+      → bandit / GP-posterior update (carried state).
+
+Selectors (the engine is selector-agnostic; ``ENGINE_SELECTORS`` lists
+all four of the paper's policies):
+
+* ``gpfl`` — pure-jnp GPCB ranking (``repro.core.gpcb.selection_scores``)
+  with the host RNG's tie-break jitter precomputed into a (T, N) scan
+  input (``repro.core.selector.gpfl_jitter_stream``).
+* ``random`` — the host RNG's K-of-N draws precomputed into a (T, K)
+  scan input (``random_id_stream``), so the scan replays the host loop's
+  cohorts bit-identically (PR 2's jax-PRNG permutation is gone).
+* ``powd`` — candidate pools precomputed from the host RNG
+  (``powd_candidate_stream``); the d-candidate loss probe and the
+  highest-loss top-K ranking run in-scan against the current params.
+* ``fedcor`` — warm-up cohorts precomputed (``fedcor_warmup_stream``);
+  the all-client loss probe, the covariance EMA and the greedy
+  GP-posterior pick (``fedcor_cov_update`` / ``fedcor_greedy``) run
+  in-scan, carried as (N, N) / (N,) scan state.  The host selector calls
+  the SAME jnp functions, so the two backends share one implementation.
+
+Parity contract (pinned by ``tests/test_engine.py`` and
+``tests/test_selectors_scan.py``): for every selector the engine replays
+the host loop's selection history — both backends share the
+initialization phase (``simulation.init_gp_phase``), the identical
+per-round key-split sequence, and per-selector host-RNG streams
+precomputed into scan inputs.  (The engine ranks in float32 where parts
+of the host path rank through numpy; jitter-scale near-ties can in
+principle order differently, but the score gaps between distinct clients
+are far wider than the tie-break noise.)
 
 Parameter layouts (``param_layout``):
 
@@ -29,36 +57,36 @@ Parameter layouts (``param_layout``):
   the whole server update is ``server_update_flat`` (two contiguous
   vector passes, or the fused Pallas ``fedavg_momentum`` kernel when the
   kernels compile for real), and GP scores feed ``gp_projection`` /
-  ``gp_scores_matrix`` directly — no per-round re-flatten.  The local
-  trainer and evaluator still see pytrees via ``unpack`` (slices +
-  reshapes, fused by XLA).  Selection history is pinned bit-identical to
-  the tree layout by ``tests/test_engine.py`` on the jnp path (the
-  layouts share scalar algebra and reduction shapes); where the fused
-  Pallas server kernel engages instead (TPU), the update agrees to float
-  tolerance and near-tie selections could in principle order
-  differently.
+  ``gp_scores_matrix`` directly — no per-round re-flatten.
 
-Parity contract (pinned by ``tests/test_engine.py``): with
-``exp.selector == "gpfl"`` the engine replays the host loop's selection
-history — both backends share the initialization phase
-(``simulation.init_gp_phase``), the identical per-round key-split
-sequence, and the host RNG's tie-break jitter, precomputed into a (T, N)
-scan input by ``repro.core.selector.gpfl_jitter_stream``.  (The engine
-ranks in float32 where the host loop ranks in float64; jitter-scale
-near-ties can in principle order differently, but the GPCB values of
-distinct clients are separated by far more than the 1e-9 jitter.)
+Client-sharded cohorts (``shard_clients > 1``, flat layout only): the
+engine builds a 1-D ``("clients",)`` mesh (layout rules from
+``repro.dist.sharding.cohort_axis_rules`` — same logical-axis→mesh-axis
+convention as ``arch_rules``) and wraps the cohort step in
+``jax.shard_map``: each device trains K/n of the round's clients, packs
+its own ``(K/n, Dp)`` slab and computes its clients' GP projections
+locally.  The slabs and scores are then ``all_gather``-ed (tiled, so row
+order matches the single-device layout exactly) and the O(K·Dp) server
+reduction runs on the gathered replicas — the bit-parity contract pins
+the FedAvg reduction order, so the reduction is NOT re-sharded (it is
+negligible next to local training, which is where the devices pay).
+``tests/test_shard_cohort.py`` pins 2-device selections bit-identical to
+the single-device scan.
 
-The host loop stays as the reference oracle and still runs the
-host-interactive baselines (Pow-d candidate probes, FedCor's full loss
-scans); the engine supports ``gpfl`` (bit-matching) and ``random``
-(jax-PRNG permutations — statistically, not bitwise, equivalent to the
-host loop's numpy draws).
+Heterogeneity scenarios (``scenario=``, see
+``repro.fl.latency.ScenarioConfig``): per-round client availability
+masks restrict every selector to the round's reachable clients;
+straggler deadlines drop late clients from FedAvg and from GPFL's bandit
+feedback (their completion times come from ``fl.latency.LatencyModel``).
+Both ride into the scan as precomputed (T, N) inputs — no host round
+trips.
 
 GP score path: ``gp_impl="auto"`` routes through the Pallas kernels
 wherever they compile for real (TPU) and through jnp elsewhere —
 interpret mode is resolved per-backend by ``repro.kernels.interpret``,
 never hard-coded.  In flat layout the kernel route also engages the
-fused ``fedavg_momentum`` server kernel.
+fused ``fedavg_momentum`` server kernel.  (Client-sharded runs score GP
+with the jnp matrix path inside ``shard_map``.)
 
 The jitted scan donates the params/direction carry buffers
 (``donate_argnums``): XLA aliases them into the scan's carry in place of
@@ -69,8 +97,9 @@ support (CPU) XLA silently falls back to a copy.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Union
 
 import numpy as np
 import jax
@@ -80,34 +109,49 @@ from repro.configs.paper import FLExperimentConfig
 from repro.core import flat as flat_mod
 from repro.core import gp as gp_mod
 from repro.core import gpcb
-from repro.core.selector import gpfl_jitter_stream
+from repro.core.selector import (fedcor_cov_update, fedcor_greedy,
+                                 fedcor_warmup_stream, gpfl_jitter_stream,
+                                 powd_candidate_stream, powd_default_d,
+                                 random_id_stream)
 from repro.data import ClientStore
-from repro.fl.client import make_cohort_trainer
+from repro.dist.sharding import cohort_axis_rules, cohort_specs
+from repro.fl.client import make_cohort_loss_eval, make_cohort_trainer
+from repro.fl.latency import (ScenarioConfig, availability_stream,
+                              completion_time_stream, make_scenario)
 from repro.fl.server import (fedavg, make_evaluator, server_update_flat,
                              update_global_direction)
 from repro.fl.simulation import RunResult, _build_data, init_gp_phase
 from repro.models import small
 from repro.utils.pytree import tree_zeros_like
 
-#: selectors the compiled engine supports; Pow-d and FedCor probe the host
-#: mid-round (candidate losses / full loss scans) and stay on the host loop.
-ENGINE_SELECTORS = ("gpfl", "random")
+#: selectors the compiled engine supports — all four of the paper's
+#: policies (host-RNG streams precomputed, state-dependent decisions
+#: re-derived in-scan; see the module doc).
+ENGINE_SELECTORS = ("gpfl", "random", "powd", "fedcor")
 
 #: carry layouts the engine supports (see the module doc).
 PARAM_LAYOUTS = ("tree", "flat")
+
+#: FedCor's covariance EMA discount (matches FedCorSelector's default).
+_FEDCOR_BETA = 0.95
 
 
 class RoundCarry(NamedTuple):
     """Device-resident state carried across scanned rounds.
 
     ``params`` / ``direction`` are parameter pytrees in the tree layout
-    and padded ``(Dp,)`` workspace vectors in the flat layout."""
+    and padded ``(Dp,)`` workspace vectors in the flat layout.
+    ``fc_cov`` / ``fc_prev`` hold FedCor's (N, N) client covariance and
+    previous all-client loss vector ((1, 1)/(1,) placeholders for the
+    other selectors, so the carry stays cheap)."""
     params: Any               # global model w^t
     direction: Any            # global momentum direction g (Eq. 1-2)
     bandit: gpcb.BanditState  # reward sums / selection counts / round
     latest_gp: jnp.ndarray    # (N,) persistent C vector (Algorithm 1)
     seen: jnp.ndarray         # (N,) bool — coverage tracking
     key: jnp.ndarray          # PRNG key, split once per round
+    fc_cov: jnp.ndarray       # (N, N) FedCor covariance EMA
+    fc_prev: jnp.ndarray      # (N,) FedCor previous loss probe
 
 
 def _resolve_gp_impl(gp_impl: str, use_gp_kernel: bool) -> str:
@@ -123,23 +167,59 @@ def _resolve_gp_impl(gp_impl: str, use_gp_kernel: bool) -> str:
 
 class ScanEngine:
     """Builds the dataset, trainer, evaluator, the jitted scan AND the
-    deterministic pre-scan state (w^0, Algorithm 1 init phase, jitter
-    stream) once; ``run()`` only dispatches the scan, so repeated runs
-    amortise both compile and initialization (the benchmark times a warm
-    second run to separate compile from round throughput)."""
+    deterministic pre-scan state (w^0, Algorithm 1 init phase, the
+    per-selector host-RNG streams, the scenario streams) once; ``run()``
+    only dispatches the scan, so repeated runs amortise both compile and
+    initialization (the benchmark times a warm second run to separate
+    compile from round throughput).
+
+    Args:
+        exp: the experiment config (selector, partition, rounds, ...).
+        use_gp_kernel: force the Pallas GP kernel path (legacy knob;
+            prefer ``gp_impl``).
+        gp_impl: ``"auto"`` (kernel on TPU, jnp elsewhere), ``"kernel"``
+            or ``"stacked"``.
+        param_layout: ``"tree"`` (pytree carry, parity oracle) or
+            ``"flat"`` (one contiguous ``(Dp,)`` workspace vector).
+        use_ee: ``False`` → the Fig. 7 ablation (α = 0, no exploration).
+        log_every: 0 silences in-scan progress prints.
+        scenario: ``"full"`` / ``"availability"`` / ``"stragglers"`` or a
+            ``repro.fl.latency.ScenarioConfig``.
+        shard_clients: devices on the ``("clients",)`` mesh axis; > 1
+            requires ``param_layout="flat"`` and K divisible by it.
+    """
 
     def __init__(self, exp: FLExperimentConfig, *,
                  use_gp_kernel: bool = False, gp_impl: str = "auto",
                  param_layout: str = "tree", use_ee: bool = True,
-                 log_every: int = 0):
+                 log_every: int = 0,
+                 scenario: Union[str, ScenarioConfig, None] = "full",
+                 shard_clients: int = 1):
+        """Validate the combination, build data/trainer/streams, jit the
+        scan (see the class docstring for every knob)."""
+        from repro.fl.simulation import SUPPORT_MATRIX
         if exp.selector not in ENGINE_SELECTORS:
             raise ValueError(
-                f"backend='scan' supports selectors {ENGINE_SELECTORS}; got "
-                f"{exp.selector!r} (Pow-d/FedCor probe the host every round "
-                "— run them with backend='python')")
+                f"unknown selector {exp.selector!r}; backend='scan' runs "
+                f"{ENGINE_SELECTORS}.\n{SUPPORT_MATRIX}")
         if param_layout not in PARAM_LAYOUTS:
             raise ValueError(f"param_layout must be one of {PARAM_LAYOUTS}; "
-                             f"got {param_layout!r}")
+                             f"got {param_layout!r}\n{SUPPORT_MATRIX}")
+        self.scenario = make_scenario(scenario)
+        self.shard_clients = int(shard_clients)
+        if self.shard_clients > 1:
+            if param_layout != "flat":
+                raise ValueError(
+                    f"shard_clients={shard_clients} requires "
+                    f"param_layout='flat' (the sharded cohort is the flat "
+                    f"(K, Dp) matrix); got {param_layout!r}\n{SUPPORT_MATRIX}")
+            # validates K % shard_clients before anything compiles
+            self._cohort_rules = cohort_axis_rules(exp.clients_per_round,
+                                                   self.shard_clients)
+            if jax.device_count() < self.shard_clients:
+                raise ValueError(
+                    f"shard_clients={shard_clients} but only "
+                    f"{jax.device_count()} jax device(s) are visible")
         self.exp = exp
         self.gp_impl = _resolve_gp_impl(gp_impl, use_gp_kernel)
         self.param_layout = param_layout
@@ -148,7 +228,17 @@ class ScanEngine:
         self.store, self.eval_x, self.eval_y = _build_data(exp, exp.seed)
         self.trainer = make_cohort_trainer(exp)
         self.evaluate = make_evaluator(exp, self.eval_x, self.eval_y)
+        self.loss_eval = make_cohort_loss_eval(exp) \
+            if exp.selector in ("powd", "fedcor") else None
+        self.powd_d = exp.powd_d or powd_default_d(self.store.n_clients,
+                                                   exp.clients_per_round)
         self.spec = None  # FlatSpec, set by _build_initial_state (flat only)
+        self._mesh = None
+        if self.shard_clients > 1:
+            from jax.sharding import Mesh
+            self._mesh = Mesh(
+                np.asarray(jax.devices()[: self.shard_clients]),
+                ("clients",))
         self._inputs = self._build_initial_state()
         # donate the params/direction carries: XLA aliases them into the
         # scan instead of holding a live caller copy (run() passes copies)
@@ -156,15 +246,23 @@ class ScanEngine:
 
     # ---- the scan body: one complete federated round, fully on device ----
     def _build_scan(self):
-        exp = self.exp
+        exp, scn = self.exp, self.scenario
         N, K, T = self.store.n_clients, exp.clients_per_round, exp.rounds
+        W = max(exp.fedcor_warmup, 2)   # FedCor needs 2 loss probes to rank
         x_tab, y_tab, sz_tab = self.store.tables()
-        trainer, evaluate = self.trainer, self.evaluate
+        trainer, evaluate, loss_eval = self.trainer, self.evaluate, \
+            self.loss_eval
         use_ee, log_every = self.use_ee, self.log_every
-        is_gpfl = exp.selector == "gpfl"
+        sel = exp.selector
+        is_gpfl, is_random = sel == "gpfl", sel == "random"
+        is_powd, is_fedcor = sel == "powd", sel == "fedcor"
         is_flat = self.param_layout == "flat"
         use_kernel = self.gp_impl == "kernel"
+        has_avail = scn.kind == "availability"
+        has_lat = scn.kind == "stragglers"
+        deadline = scn.resolved_deadline() if has_lat else 0.0
         spec = self.spec
+        shard = self.shard_clients
 
         if is_flat:
             if use_kernel:
@@ -178,48 +276,131 @@ class ScanEngine:
         else:
             score_fn = gp_mod.gp_scores_stacked
 
-        def body(carry: RoundCarry, xs):
-            t, jitter = xs
-            if is_gpfl:
-                key, kt = jax.random.split(carry.key)
-                scores = gpcb.selection_scores(
-                    carry.bandit, carry.latest_gp, jitter, t, T,
-                    rho=exp.rho, use_ee=use_ee)
-                ids = jnp.argsort(-scores)[:K]
-            else:
-                key, ksel, kt = jax.random.split(carry.key, 3)
-                ids = jax.random.permutation(ksel, N)[:K]
+        cohort_sharded = None
+        if shard > 1:
+            cohort_P, repl_P = cohort_specs(self._cohort_rules)
 
-            x, y, sizes = ClientStore.gather_tables(x_tab, y_tab, sz_tab, ids)
-            rngs = jax.random.split(kt, K)
+            def _cohort(params_vec, direction_vec, x, y, sizes, rng_raw):
+                # per-device view: K/shard clients of this round's cohort
+                rngs = jax.random.wrap_key_data(rng_raw)
+                p_tree = flat_mod.unpack(spec, params_vec)
+                w_i, d_i, _ = trainer(p_tree, x, y, sizes, rngs)
+                w_loc = flat_mod.pack_stacked(spec, w_i)
+                # tiled all-gather: row order == single-device pack, so the
+                # gathered matrix (and everything downstream) is bit-equal
+                w_mat = jax.lax.all_gather(w_loc, "clients", axis=0,
+                                           tiled=True)
+                if is_gpfl:
+                    d_loc = flat_mod.pack_stacked(spec, d_i)
+                    # each device projects ITS clients' momenta (Eq. 3);
+                    # rows are independent dots, so local == global values
+                    gp_loc = gp_mod.gp_scores_matrix(d_loc, direction_vec)
+                    gp = jax.lax.all_gather(gp_loc, "clients", axis=0,
+                                            tiled=True)
+                else:
+                    gp = jnp.zeros((K,), jnp.float32)
+                return w_mat, gp
+
+            cohort_sharded = jax.shard_map(
+                _cohort, mesh=self._mesh,
+                in_specs=(repl_P, repl_P, cohort_P, cohort_P, cohort_P,
+                          cohort_P),
+                out_specs=(repl_P, repl_P), check_vma=False)
+
+        def body(carry: RoundCarry, xs):
+            t, jitter, sel_ids, cand_ids, avail, lat = xs
+            key, kt = jax.random.split(carry.key)
+            avail_arg = avail if has_avail else None
             params_in = flat_mod.unpack(spec, carry.params) if is_flat \
                 else carry.params
-            w_i, d_i, _ = trainer(params_in, x, y, sizes, rngs)
 
+            # ---- selection (fixed-shape, pure jnp) ----
+            all_losses = None
+            if is_gpfl:
+                scores = gpcb.selection_scores(
+                    carry.bandit, carry.latest_gp, jitter, t, T,
+                    rho=exp.rho, use_ee=use_ee, avail=avail_arg)
+                ids = jnp.argsort(-scores)[:K]
+            elif is_random:
+                ids = sel_ids
+            elif is_powd:
+                cx, cy, csz = ClientStore.gather_tables(
+                    x_tab, y_tab, sz_tab, cand_ids)
+                closs = loss_eval(params_in, cx, cy, csz)
+                ids = jnp.take(cand_ids, jnp.argsort(-closs)[:K])
+            else:  # fedcor
+                all_losses = loss_eval(params_in, x_tab, y_tab, sz_tab)
+                ids = jax.lax.cond(
+                    t < W,
+                    lambda: sel_ids,
+                    lambda: fedcor_greedy(carry.fc_cov, K, avail=avail_arg))
+            ids = ids.astype(jnp.int32)
+
+            # ---- cohort local training (vmapped; sharded when asked) ----
+            x, y, sizes = ClientStore.gather_tables(x_tab, y_tab, sz_tab, ids)
+            rngs = jax.random.split(kt, K)
+            w_mat = w_i = d_i = gp_sharded = None
+            if shard > 1:
+                w_mat, gp_sharded = cohort_sharded(
+                    carry.params, carry.direction, x, y, sizes,
+                    jax.random.key_data(rngs))
+            else:
+                w_i, d_i, _ = trainer(params_in, x, y, sizes, rngs)
+
+            # ---- straggler deadlines: late clients miss aggregation ----
+            if has_lat:
+                done = jnp.take(lat, ids) <= deadline
+                cnt = jnp.sum(done.astype(jnp.float32))
+                # nobody made it → fall back to plain FedAvg over the
+                # cohort (the server cannot skip a round in fixed shapes)
+                weights = jnp.where(cnt > 0,
+                                    done.astype(jnp.float32)
+                                    / jnp.maximum(cnt, 1.0),
+                                    jnp.full((K,), 1.0 / K, jnp.float32))
+            else:
+                done, weights = None, None
+
+            # ---- server update + evaluation ----
             if is_flat:
-                # server side entirely on the flat workspace: one (K, Dp)
-                # pack out of the trainer, then contiguous vector passes
-                w_mat = flat_mod.pack_stacked(spec, w_i)
+                if w_mat is None:
+                    # one (K, Dp) pack out of the trainer, then contiguous
+                    # vector passes (or the fused Pallas server kernel)
+                    w_mat = flat_mod.pack_stacked(spec, w_i)
                 params, direction = server_update_flat(
                     w_mat, carry.params, carry.direction,
-                    lr=exp.lr, gamma=exp.momentum, use_kernel=use_kernel)
+                    lr=exp.lr, gamma=exp.momentum, weights=weights,
+                    use_kernel=use_kernel)
                 acc, gl_loss = evaluate(flat_mod.unpack(spec, params))
             else:
-                params = fedavg(w_i)
+                params = fedavg(w_i, weights)
                 direction = update_global_direction(
                     carry.direction, carry.params, params, exp.lr,
                     exp.momentum)
                 acc, gl_loss = evaluate(params)
 
+            # ---- per-selector feedback state ----
             if is_gpfl:
-                grads_in = flat_mod.pack_stacked(spec, d_i) if is_flat \
-                    else d_i
-                gp_scores = score_fn(grads_in, carry.direction)
+                if gp_sharded is not None:
+                    gp_scores = gp_sharded
+                else:
+                    grads_in = flat_mod.pack_stacked(spec, d_i) if is_flat \
+                        else d_i
+                    gp_scores = score_fn(grads_in, carry.direction)
                 bandit, latest_gp = gpcb.observe(
                     carry.bandit, carry.latest_gp, ids, gp_scores, acc,
-                    gl_loss)
+                    gl_loss, valid_mask=done)
             else:
                 bandit, latest_gp = carry.bandit, carry.latest_gp
+
+            if is_fedcor:
+                fc_cov = jax.lax.cond(
+                    t >= 1,
+                    lambda: fedcor_cov_update(carry.fc_cov, carry.fc_prev,
+                                              all_losses, beta=_FEDCOR_BETA),
+                    lambda: carry.fc_cov)
+                fc_prev = all_losses
+            else:
+                fc_cov, fc_prev = carry.fc_cov, carry.fc_prev
 
             seen = carry.seen.at[ids].set(True)
             cov = jnp.mean(seen.astype(jnp.float32))
@@ -234,31 +415,59 @@ class ScanEngine:
                     lambda op: None,
                     (t, acc, gl_loss, cov))
 
-            out = {"ids": ids.astype(jnp.int32), "acc": acc,
-                   "loss": gl_loss, "coverage": cov}
+            out = {"ids": ids, "acc": acc, "loss": gl_loss, "coverage": cov}
             return RoundCarry(params, direction, bandit, latest_gp, seen,
-                              key), out
+                              key, fc_cov, fc_prev), out
 
-        def run_scan(params, direction, bandit, latest_gp, key, jitter):
+        def run_scan(params, direction, bandit, latest_gp, fc_cov, fc_prev,
+                     key, streams):
+            jitter, sel_ids, cand_ids, avail, lat = streams
             carry0 = RoundCarry(params, direction, bandit, latest_gp,
-                                jnp.zeros((N,), bool), key)
-            return jax.lax.scan(body, carry0, (jnp.arange(T), jitter))
+                                jnp.zeros((N,), bool), key, fc_cov, fc_prev)
+            return jax.lax.scan(
+                body, carry0,
+                (jnp.arange(T), jitter, sel_ids, cand_ids, avail, lat))
 
         return run_scan
 
     def _build_initial_state(self):
-        """The pre-scan state: params at w^0, Algorithm 1's init phase and
-        the host jitter stream.  Deterministic in ``exp.seed``, so it is
-        computed once here and reused by every ``run()``.  In the flat
-        layout this is also where the static ``FlatSpec`` is derived and
-        the initial params/direction are packed."""
-        exp = self.exp
-        N, T = self.store.n_clients, exp.rounds
+        """The pre-scan state: params at w^0, Algorithm 1's init phase,
+        the per-selector host-RNG streams and the scenario streams.
+        Deterministic in ``exp.seed`` (scenario streams in the scenario's
+        own seed), so it is computed once here and reused by every
+        ``run()``.  In the flat layout this is also where the static
+        ``FlatSpec`` is derived and the initial params/direction are
+        packed.
+
+        Host-parity invariant: ``rng_np`` is consumed in EXACTLY the
+        order the host loop's selector consumes it (stream functions in
+        ``repro.core.selector`` document each selector's draws); the
+        scenario streams draw from an independent generator so enabling a
+        scenario never shifts the selector streams.
+        """
+        exp, scn = self.exp, self.scenario
+        N, K, T = self.store.n_clients, exp.clients_per_round, exp.rounds
         rng_np = np.random.default_rng(exp.seed)
         key = jax.random.key(exp.seed)
         key, k0 = jax.random.split(key)
         params = small.init(k0, exp.model)
 
+        # -- scenario streams (independent host rng; scan-only semantics) --
+        avail_np = lat_np = None
+        if scn.kind == "availability":
+            need = max(K, self.powd_d) if exp.selector == "powd" else K
+            srng = np.random.default_rng((exp.seed, scn.seed, 1))
+            avail_np = availability_stream(srng, T, N, scn.availability,
+                                           need)
+        elif scn.kind == "stragglers":
+            srng = np.random.default_rng((exp.seed, scn.seed, 2))
+            lat_np = completion_time_stream(
+                dataclasses.replace(scn.latency, n_clients=N), srng, T)
+
+        # -- selector streams: replay the host loop's rng consumption --
+        jitter = np.zeros((T, 1), np.float32)
+        sel_ids = np.zeros((T, 1), np.int32)
+        cand_ids = np.zeros((T, 1), np.int32)
         if exp.selector == "gpfl":
             # Algorithm 1 init phase — shared with the host loop so the
             # seed GPs (and hence round-0 selection) are bit-identical.
@@ -266,31 +475,68 @@ class ScanEngine:
             direction, gp_all = init_gp_phase(self.trainer, self.store,
                                               params, kinit)
             latest_gp = jnp.asarray(gp_all, jnp.float32)
-            jitter = jnp.asarray(gpfl_jitter_stream(rng_np, T, N),
-                                 jnp.float32)
+            jitter = np.asarray(gpfl_jitter_stream(rng_np, T, N), np.float32)
         else:
             direction = tree_zeros_like(params)
             latest_gp = jnp.zeros((N,), jnp.float32)
-            jitter = jnp.zeros((T, N), jnp.float32)
+            if exp.selector == "random":
+                sel_ids = random_id_stream(rng_np, T, N, K,
+                                           avail=avail_np).astype(np.int32)
+            elif exp.selector == "powd":
+                cand_ids = powd_candidate_stream(
+                    rng_np, T, N, self.powd_d,
+                    avail=avail_np).astype(np.int32)
+            elif exp.selector == "fedcor":
+                sel_ids = fedcor_warmup_stream(
+                    rng_np, T, N, K, exp.fedcor_warmup,
+                    avail=avail_np).astype(np.int32)
         bandit = gpcb.init_state(N)
+
+        if exp.selector == "fedcor":
+            fc_cov = jnp.eye(N, dtype=jnp.float32)
+            fc_prev = jnp.zeros((N,), jnp.float32)
+        else:
+            fc_cov = jnp.zeros((1, 1), jnp.float32)
+            fc_prev = jnp.zeros((1,), jnp.float32)
 
         if self.param_layout == "flat":
             self.spec = flat_mod.make_flat_spec(params)
             params = flat_mod.pack(self.spec, params)
             direction = flat_mod.pack(self.spec, direction)
-        return params, direction, bandit, latest_gp, key, jitter
+
+        streams = (
+            jnp.asarray(jitter),
+            jnp.asarray(sel_ids),
+            jnp.asarray(cand_ids),
+            jnp.asarray(avail_np) if avail_np is not None
+            else jnp.zeros((T, 1), bool),
+            jnp.asarray(lat_np) if lat_np is not None
+            else jnp.zeros((T, 1), jnp.float32),
+        )
+        return (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
+                streams)
 
     def run(self) -> RunResult:
+        """Dispatch the compiled scan once → the full T-round history.
+
+        Returns:
+            ``repro.fl.simulation.RunResult`` with the accuracy/loss
+            curves, the (T, K) selection log, per-client selection
+            counts, coverage and the amortised per-round wall time (ONE
+            device dispatch covers all T rounds; the first call includes
+            the scan's compile).
+        """
         exp = self.exp
         N, T = self.store.n_clients, exp.rounds
-        params, direction, bandit, latest_gp, key, jitter = self._inputs
+        (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
+         streams) = self._inputs
 
         t0 = time.perf_counter()
         # params/direction are donated to the scan — pass fresh copies so
         # the cached initial state survives for the next run()
         _, out = jax.block_until_ready(self._scan(
             jax.tree.map(jnp.copy, params), jax.tree.map(jnp.copy, direction),
-            bandit, latest_gp, key, jitter))
+            bandit, latest_gp, fc_cov, fc_prev, key, streams))
         scan_wall = time.perf_counter() - t0
 
         selections = np.asarray(out["ids"])
@@ -312,9 +558,13 @@ class ScanEngine:
 def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                         use_gp_kernel: bool = False, gp_impl: str = "auto",
                         param_layout: str = "tree",
-                        use_ee: bool = True) -> RunResult:
+                        use_ee: bool = True,
+                        scenario: Union[str, ScenarioConfig, None] = "full",
+                        shard_clients: int = 1) -> RunResult:
     """One-shot convenience over ``ScanEngine`` — the ``backend="scan"``
-    entry point of ``repro.fl.run_experiment``."""
+    entry point of ``repro.fl.run_experiment`` (see that function and the
+    ``ScanEngine`` docstring for every knob)."""
     return ScanEngine(exp, use_gp_kernel=use_gp_kernel, gp_impl=gp_impl,
                       param_layout=param_layout, use_ee=use_ee,
-                      log_every=log_every).run()
+                      log_every=log_every, scenario=scenario,
+                      shard_clients=shard_clients).run()

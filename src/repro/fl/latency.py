@@ -1,4 +1,5 @@
-"""Round-latency model for the paper's efficiency claim (§VI-D / Fig. 6).
+"""Round-latency model (§VI-D / Fig. 6) + the scan engine's heterogeneity
+scenarios.
 
 The wall-clock comparison in Fig. 6 conflates selector compute with the
 *protocol* costs the paper argues about: pre-selection (GPFL, FedCor after
@@ -13,17 +14,40 @@ can be analysed independent of this container's CPU:
 
 with client speeds drawn from a heavy-tailed distribution (stragglers).
 ``compare_selectors`` reproduces the Fig. 6 ordering analytically.
+
+The same :class:`LatencyModel` also drives the compiled round engine's
+**in-scan heterogeneity scenarios** (``run_experiment(...,
+scenario=...)``, scan backend only):
+
+* ``"availability"`` — a per-round (T, N) client-availability mask
+  (:func:`availability_stream`); selection is restricted to available
+  clients every round.
+* ``"stragglers"`` — per-round per-client completion times drawn from
+  the latency model (:func:`completion_time_stream`); selected clients
+  whose completion time exceeds :attr:`ScenarioConfig.deadline_s` miss
+  the round's aggregation (their update and GP feedback are dropped).
+
+Both streams are precomputed host-side (numpy RNG, like the selector
+streams in ``repro.core.selector``) and fed to the engine as
+``lax.scan`` inputs, so the scenarios run fully device-resident.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional, Union
 
 import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
 class LatencyModel:
+    """Analytic model of one FL round's wall-clock critical path.
+
+    Client completion time = ``downlink + local_compute·speed + uplink``
+    with per-round lognormal speed factors (heavy tail = stragglers);
+    selector-specific probe/posterior overheads model the §VI-D protocol
+    differences.  Also the sampling source for the scan engine's
+    straggler scenario (:func:`completion_time_stream`)."""
     n_clients: int = 100
     local_compute_s: float = 2.0       # mean local-training time
     downlink_s: float = 0.3            # model broadcast per client
@@ -34,11 +58,38 @@ class LatencyModel:
     probe_fraction: float = 1.0        # fraction of local work for a probe
 
     def client_speeds(self, rng) -> np.ndarray:
+        """Per-client slowdown factors for one round.
+
+        Args:
+            rng: ``np.random.Generator`` to draw from.
+
+        Returns:
+            (n_clients,) lognormal factors (median 1; ``straggler_scale``
+            is the lognormal sigma, so the tail holds the stragglers).
+        """
         return rng.lognormal(mean=0.0, sigma=self.straggler_scale,
                              size=self.n_clients)
 
+    def nominal_round_s(self) -> float:
+        """Completion time of a median-speed client (speed factor 1)."""
+        return self.downlink_s + self.uplink_s + self.local_compute_s
+
     def round_time(self, selector: str, k: int, rng, *,
                    d_probe: int = 0, all_probe: bool = False) -> float:
+        """Critical-path wall time of one round under ``selector``.
+
+        Args:
+            selector: one of ``random``/``gpfl``/``powd``/``fedcor`` —
+                decides which protocol overhead is added on top of the
+                cohort's straggler-dominated train time.
+            k: cohort size.
+            rng: host ``np.random.Generator`` (speeds + cohort draw).
+            d_probe: Pow-d candidate-pool size (0 → the 2k default).
+            all_probe: unused; kept for call-site compatibility.
+
+        Returns:
+            Simulated seconds for the round's critical path.
+        """
         speeds = self.client_speeds(rng)
         chosen = rng.choice(self.n_clients, size=k, replace=False)
         t_train = (self.downlink_s + self.uplink_s
@@ -64,10 +115,148 @@ class LatencyModel:
 
 def compare_selectors(rounds: int = 200, k: int = 5, seed: int = 0,
                       model: LatencyModel = LatencyModel()) -> Dict[str, float]:
-    """Mean simulated round time per selector (the analytic Fig. 6)."""
+    """Mean simulated round time per selector (the analytic Fig. 6).
+
+    Args:
+        rounds: rounds to simulate per selector.
+        k: cohort size per round.
+        seed: RNG seed (each selector re-seeds, so they see the same draws).
+        model: the latency model to sample from.
+
+    Returns:
+        ``{selector: mean_round_seconds}`` for the paper's four selectors.
+    """
     out = {}
     for sel in ("random", "gpfl", "powd", "fedcor"):
         rng = np.random.default_rng(seed)
         ts = [model.round_time(sel, k, rng) for _ in range(rounds)]
         out[sel] = float(np.mean(ts))
+    return out
+
+
+# --------------------------------------------------------------------------
+# In-scan heterogeneity scenarios (the compiled round engine's
+# ``scenario=`` knob; see repro.fl.engine).
+# --------------------------------------------------------------------------
+
+#: scenario kinds the scan engine understands.
+SCENARIO_KINDS = ("full", "availability", "stragglers")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """One heterogeneity scenario for the compiled round engine.
+
+    Attributes:
+        kind: one of :data:`SCENARIO_KINDS`.  ``"full"`` is the paper's
+            default world — every client reachable, every update lands.
+        availability: per-round probability that a client is reachable
+            (``kind="availability"``).  The precomputed mask always keeps
+            at least the cohort (and Pow-d candidate pool) available, so
+            fixed-shape selection inside the scan never starves.
+        deadline_s: straggler deadline (``kind="stragglers"``).  ``None``
+            resolves to 1.5× the latency model's nominal round time
+            (≈30% of lognormal(σ=0.8) clients miss it).
+        latency: the :class:`LatencyModel` completion times are drawn
+            from; its ``n_clients`` is re-stamped to the experiment's N
+            by the engine.
+        seed: host RNG seed for the scenario streams — independent of the
+            experiment seed so scenario draws never perturb the selector
+            streams' host-parity contract.
+    """
+    kind: str = "full"
+    availability: float = 0.7
+    deadline_s: Optional[float] = None
+    latency: LatencyModel = LatencyModel()
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in SCENARIO_KINDS:
+            raise ValueError(f"scenario kind must be one of {SCENARIO_KINDS}; "
+                             f"got {self.kind!r}")
+        if not 0.0 < self.availability <= 1.0:
+            raise ValueError("availability must be in (0, 1]; "
+                             f"got {self.availability}")
+
+    def resolved_deadline(self) -> float:
+        """The effective straggler deadline in seconds."""
+        if self.deadline_s is not None:
+            return float(self.deadline_s)
+        return 1.5 * self.latency.nominal_round_s()
+
+
+def make_scenario(scenario: Union[str, ScenarioConfig, None]) -> ScenarioConfig:
+    """Coerce the ``scenario=`` argument into a :class:`ScenarioConfig`.
+
+    Args:
+        scenario: ``None`` or a kind name from :data:`SCENARIO_KINDS`
+            (string shorthand with default knobs), or an explicit config.
+
+    Returns:
+        The resolved :class:`ScenarioConfig`.
+
+    Raises:
+        ValueError: unknown kind name (listing the supported kinds).
+    """
+    if scenario is None:
+        return ScenarioConfig(kind="full")
+    if isinstance(scenario, ScenarioConfig):
+        return scenario
+    if scenario in SCENARIO_KINDS:
+        return ScenarioConfig(kind=scenario)
+    raise ValueError(f"unknown scenario {scenario!r}; expected one of "
+                     f"{SCENARIO_KINDS} or a ScenarioConfig")
+
+
+def availability_stream(rng, rounds: int, n_clients: int, prob: float,
+                        min_available: int) -> np.ndarray:
+    """Precompute the per-round client-availability mask.
+
+    Each client is independently available with probability ``prob``;
+    rounds left with fewer than ``min_available`` reachable clients get
+    random extras switched back on, so fixed-shape K-of-N selection (and
+    Pow-d's d-candidate probe) inside the scan never runs dry.
+
+    Args:
+        rng: host ``np.random.Generator`` (scenario stream, NOT the
+            experiment rng — see :class:`ScenarioConfig.seed`).
+        rounds: number of FL rounds T.
+        n_clients: number of clients N.
+        prob: per-(round, client) availability probability.
+        min_available: floor on available clients per round.
+
+    Returns:
+        (T, N) bool mask, ``True`` = reachable this round.
+    """
+    if min_available > n_clients:
+        raise ValueError(f"min_available={min_available} exceeds "
+                         f"n_clients={n_clients}")
+    mask = rng.random((rounds, n_clients)) < prob
+    for t in range(rounds):
+        short = min_available - int(mask[t].sum())
+        if short > 0:
+            off = np.flatnonzero(~mask[t])
+            mask[t, rng.choice(off, size=short, replace=False)] = True
+    return mask
+
+
+def completion_time_stream(model: LatencyModel, rng,
+                           rounds: int) -> np.ndarray:
+    """Precompute every (round, client) completion time.
+
+    Args:
+        model: latency model (``n_clients`` must equal the experiment's N).
+        rng: host ``np.random.Generator`` (scenario stream).
+        rounds: number of FL rounds T.
+
+    Returns:
+        (T, N) float32 seconds: ``downlink + local_compute·speed + uplink``
+        with speeds redrawn per round (a client may straggle one round and
+        be fast the next, as in §VI-D's heavy-tailed model).
+    """
+    out = np.empty((rounds, model.n_clients), np.float32)
+    for t in range(rounds):
+        speeds = model.client_speeds(rng)
+        out[t] = (model.downlink_s + model.uplink_s
+                  + model.local_compute_s * speeds)
     return out

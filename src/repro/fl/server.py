@@ -28,9 +28,24 @@ from repro.utils.pytree import tree_axpy, tree_scale, tree_sub
 
 
 @jax.jit
-def fedavg(cohort_params):
-    """w^t = mean_i w_i^t over the selected cohort (leading cohort dim)."""
-    return jax.tree.map(lambda w: jnp.mean(w, axis=0), cohort_params)
+def fedavg(cohort_params, weights=None):
+    """FedAvg over the selected cohort (leading cohort dim on every leaf).
+
+    Args:
+        cohort_params: stacked parameter pytree, leading (K,) cohort axis.
+        weights: optional (K,) aggregation weights summing to 1 (straggler
+            scenarios weight out clients that missed the deadline).
+            ``None`` → the uniform mean ``w^t = mean_i w_i^t``.
+
+    Returns:
+        The aggregated global parameter pytree.
+    """
+    if weights is None:
+        return jax.tree.map(lambda w: jnp.mean(w, axis=0), cohort_params)
+    return jax.tree.map(
+        lambda w: jnp.tensordot(weights.astype(jnp.float32),
+                                w.astype(jnp.float32), axes=1),
+        cohort_params)
 
 
 def update_global_direction(direction, w_prev, w_new, lr: float,
@@ -91,6 +106,19 @@ def server_update_flat(w_matrix, w_prev, direction, *, lr: float,
 
 def make_evaluator(exp: FLExperimentConfig, eval_x, eval_y,
                    batch: int = 512) -> Callable:
+    """Build the global-model evaluator over a fixed held-out set.
+
+    Args:
+        exp: experiment config (the model architecture).
+        eval_x / eval_y: device-resident eval arrays, fixed for the run.
+        batch: static eval batch size — the internal loop is a Python
+            loop over a fixed set, so it unrolls at trace time and the
+            evaluator stays scan-safe (reused verbatim inside the
+            compiled engine's ``lax.scan`` body).
+
+    Returns:
+        ``evaluate(params) -> (accuracy, mean_loss)`` (jitted).
+    """
     cfg = exp.model
     n = eval_x.shape[0]
 

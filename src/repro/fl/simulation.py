@@ -24,8 +24,38 @@ from repro.fl.server import fedavg, make_evaluator, update_global_direction
 from repro.models import small
 
 
+#: Which knob works where.  Embedded verbatim in every compatibility
+#: error so a bad combination fails fast with the full picture instead of
+#: erroring deep inside the scan trace.
+SUPPORT_MATRIX = """\
+supported run_experiment combinations:
+  knob                    backend='python'   backend='scan'
+  selector=random         yes                yes (host-stream replay)
+  selector=gpfl           yes                yes (jitter-stream replay)
+  selector=powd           yes                yes (candidate stream + in-scan probe)
+  selector=fedcor         yes                yes (in-scan GP covariance)
+  param_layout='tree'     yes (only)         yes
+  param_layout='flat'     no                 yes
+  scenario='full'         yes                yes
+  scenario='availability' no                 yes (in-scan masks)
+  scenario='stragglers'   no                 yes (in-scan deadlines)
+  shard_clients > 1       no                 yes (flat layout, K % shards == 0)"""
+
+
 @dataclasses.dataclass
 class RunResult:
+    """The full history of one FL experiment (either backend).
+
+    Attributes:
+        config: the experiment that produced this result.
+        accuracy: (T,) global test accuracy per round.
+        loss: (T,) global test loss per round.
+        selections: (T, K) selected client ids per round.
+        round_time_s: (T,) wall seconds per round (the scan backend
+            reports the amortised time of its single dispatch).
+        selection_counts: (N,) times each client was selected.
+        coverage: (T,) fraction of clients seen at least once.
+    """
     config: FLExperimentConfig
     accuracy: np.ndarray          # (T,)
     loss: np.ndarray              # (T,)
@@ -35,14 +65,21 @@ class RunResult:
     coverage: np.ndarray          # (T,) fraction of clients seen ≥1×
 
     def final_accuracy(self, last: int = 10) -> float:
+        """Mean accuracy over the final ``last`` rounds (Table II style)."""
         return float(self.accuracy[-last:].mean())
 
     def accuracy_at(self, frac: float) -> float:
+        """Accuracy at a fraction of the round budget (Fig. 4 x-axis)."""
         i = max(0, int(len(self.accuracy) * frac) - 1)
         return float(self.accuracy[i])
 
 
 def _build_data(exp: FLExperimentConfig, seed: int):
+    """Synthesize + partition the experiment's dataset.
+
+    Returns ``(ClientStore, eval_x, eval_y)`` — deterministic in
+    ``seed``, shared by both backends so they train on identical bytes.
+    """
     total = exp.n_clients * exp.samples_per_client_mean
     data = make_dataset(exp.model.name, total + exp.eval_size, seed=seed)
     train_x, train_y = data.x[: total], data.y[: total]
@@ -79,35 +116,65 @@ def init_gp_phase(trainer, store, params, kinit, *, chunk: int = 25):
 
 def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
                    use_gp_kernel: bool = False, backend: str = "python",
-                   param_layout: str = "tree") -> RunResult:
+                   param_layout: str = "tree", scenario="full",
+                   shard_clients: int = 1) -> RunResult:
     """Run one FL experiment.
 
-    ``backend`` selects the execution engine:
+    Args:
+        exp: the experiment config (one cell of the paper's Table II).
+        log_every: print progress every N rounds (0 = silent).
+        use_gp_kernel: route GP scoring through the Pallas kernel.
+        backend: execution engine —
 
-    * ``"python"`` (default) — the reference host loop below: one round at
-      a time, numpy selectors, host-synced eval.  Supports every selector
-      (incl. the host-interactive Pow-d / FedCor probes).
-    * ``"scan"`` — the compiled round engine (``repro.fl.engine``): all T
-      rounds inside one jitted ``lax.scan``, state device-resident.
-      Supports ``gpfl`` (bit-matching selection history) and ``random``.
+            * ``"python"`` (default) — the reference host loop below: one
+              round at a time, numpy selectors, host-synced eval.
+            * ``"scan"`` — the compiled round engine
+              (``repro.fl.engine``): all T rounds inside one jitted
+              ``lax.scan``, state device-resident.  Replays every
+              selector's host selection history bit-identically via
+              precomputed host-RNG streams.
+        param_layout: scan-backend carry layout — ``"tree"`` walks
+            parameter pytrees (the parity oracle), ``"flat"`` runs the
+            server side on one contiguous ``repro.core.flat`` workspace
+            vector (same selection history, fewer HBM-bound ops/round).
+        scenario: heterogeneity scenario (scan backend only) —
+            ``"full"``, ``"availability"``, ``"stragglers"`` or a
+            ``repro.fl.latency.ScenarioConfig``.
+        shard_clients: shard the cohort over this many devices on a
+            ``("clients",)`` mesh (scan backend, flat layout only).
 
-    ``param_layout`` (scan backend only) selects the carry layout:
-    ``"tree"`` walks parameter pytrees (the parity oracle), ``"flat"``
-    runs the server side on one contiguous ``repro.core.flat`` workspace
-    vector (same selection history, fewer HBM-bound ops per round).
+    Returns:
+        The :class:`RunResult` history.
+
+    Raises:
+        ValueError: an unsupported combination — raised BEFORE anything
+            compiles, with :data:`SUPPORT_MATRIX` in the message.
     """
+    scenario_kind = getattr(scenario, "kind", scenario or "full")
     if backend == "scan":
         from repro.fl.engine import run_experiment_scan
         return run_experiment_scan(exp, log_every=log_every,
                                    use_gp_kernel=use_gp_kernel,
-                                   param_layout=param_layout)
+                                   param_layout=param_layout,
+                                   scenario=scenario,
+                                   shard_clients=shard_clients)
     if backend != "python":
-        raise ValueError(f"unknown backend {backend!r}; "
-                         "expected 'python' or 'scan'")
+        raise ValueError(f"unknown backend {backend!r}; expected 'python' "
+                         f"or 'scan'.\n{SUPPORT_MATRIX}")
     if param_layout != "tree":
         raise ValueError(
             f"param_layout={param_layout!r} requires backend='scan'; the "
-            "python host loop always runs the tree layout")
+            f"python host loop always runs the tree layout.\n"
+            f"{SUPPORT_MATRIX}")
+    if scenario_kind != "full":
+        raise ValueError(
+            f"scenario={scenario_kind!r} requires backend='scan' (the "
+            f"availability/straggler streams are scan inputs).\n"
+            f"{SUPPORT_MATRIX}")
+    if shard_clients != 1:
+        raise ValueError(
+            f"shard_clients={shard_clients} requires backend='scan' with "
+            f"param_layout='flat'.\n{SUPPORT_MATRIX}")
 
     rng_np = np.random.default_rng(exp.seed)
     key = jax.random.key(exp.seed)
@@ -120,7 +187,8 @@ def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
     loss_eval = make_cohort_loss_eval(exp)
     evaluate = make_evaluator(exp, eval_x, eval_y)
     selector = make_selector(exp.selector, store.n_clients,
-                             exp.clients_per_round, exp.rounds, rho=exp.rho)
+                             exp.clients_per_round, exp.rounds, rho=exp.rho,
+                             warmup=exp.fedcor_warmup, d=exp.powd_d)
 
     N, K, T = store.n_clients, exp.clients_per_round, exp.rounds
     direction = None

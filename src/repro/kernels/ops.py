@@ -103,6 +103,7 @@ def fused_momentum_tree(params, grads, momentum, *, lr, gamma=0.9,
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
 def rmsnorm(x, scale, *, eps: float = 1e-6,
             interpret: Optional[bool] = None):
+    """RMSNorm over the last dim: ``x·scale / sqrt(mean(x²)+eps)``."""
     return rmsnorm_pallas(x, scale, eps=eps,
                           interpret=interpret)
 
@@ -111,6 +112,8 @@ def rmsnorm(x, scale, *, eps: float = 1e-6,
                                              "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
                     block_k=128, interpret: Optional[bool] = None):
+    """Tiled online-softmax attention (optionally causal / windowed) —
+    see ``repro.kernels.flash_attention`` for the block layout."""
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   block_q=block_q, block_k=block_k,
                                   interpret=interpret)

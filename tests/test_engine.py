@@ -56,14 +56,37 @@ def test_scan_random_selector_learns():
     assert all(len(set(row)) == len(row) for row in res.selections)
 
 
-def test_scan_rejects_host_interactive_selectors():
-    for sel in ("powd", "fedcor"):
-        exp = _tiny(femnist_experiment("2spc", sel, seed=0), rounds=3)
-        with pytest.raises(ValueError, match="scan"):
-            run_experiment(exp, backend="scan")
+def test_bad_combinations_fail_fast_with_support_matrix():
+    """Unsupported knob combinations raise BEFORE anything compiles, and
+    every message carries the full supported-combination matrix."""
+    exp = _tiny(femnist_experiment("2spc", "gpfl"), rounds=3)
     with pytest.raises(ValueError, match="backend"):
-        run_experiment(_tiny(femnist_experiment("2spc", "gpfl")),
-                       backend="nope")
+        run_experiment(exp, backend="nope")
+    with pytest.raises(ValueError, match="supported run_experiment"):
+        run_experiment(exp, backend="nope")
+    # python-backend-incompatible knobs fail fast on the host side
+    with pytest.raises(ValueError, match="param_layout"):
+        run_experiment(exp, backend="python", param_layout="flat")
+    with pytest.raises(ValueError, match="scenario"):
+        run_experiment(exp, backend="python", scenario="availability")
+    with pytest.raises(ValueError, match="shard_clients"):
+        run_experiment(exp, backend="python", shard_clients=2)
+    # scan-side constraints: flat-only sharding, divisibility, devices
+    with pytest.raises(ValueError, match="flat"):
+        run_experiment(exp, backend="scan", param_layout="tree",
+                       shard_clients=2)
+    with pytest.raises(ValueError, match="divide"):
+        run_experiment(exp, backend="scan", param_layout="flat",
+                       shard_clients=3)  # K=4 % 3 != 0
+    with pytest.raises(ValueError, match="scenario"):
+        run_experiment(exp, backend="scan", scenario="apocalypse")
+    # unknown selector: caught by the engine before the scan traces
+    bad = dataclasses.replace(exp, selector="powerd")
+    with pytest.raises(ValueError, match="supported run_experiment"):
+        run_experiment(bad, backend="scan")
+    from repro.core.selector import make_selector
+    with pytest.raises(KeyError, match="powerd"):
+        make_selector("powerd", 10, 3, 100)
 
 
 @pytest.mark.parametrize("param_layout", ["tree", "flat"])

@@ -1,0 +1,157 @@
+"""In-scan baseline selectors vs the reference host loop.
+
+The generalized engine (ISSUE 4) replays ALL FOUR selectors inside the
+compiled scan.  These tests pin the parity contract the same way the
+gpfl one is pinned in test_engine.py: identical seeds → bit-identical
+selection histories, because
+
+* random / pow-d candidates / fedcor warm-up cohorts are precomputed
+  host-RNG streams (repro.core.selector.*_stream) fed as scan inputs;
+* pow-d's loss ranking and fedcor's covariance/greedy pick re-derive the
+  host decisions from shared implementations in-scan.
+
+Plus the scenario layer: availability masks restrict selection, straggler
+deadlines drop late updates, and an infinite deadline degrades to the
+full scenario.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper import femnist_experiment
+from repro.core.selector import (FedCorSelector, fedcor_cov_update,
+                                 fedcor_greedy, powd_default_d)
+from repro.fl import run_experiment
+from repro.fl.latency import (LatencyModel, ScenarioConfig,
+                              availability_stream, completion_time_stream,
+                              make_scenario)
+
+
+def _tiny(exp, rounds=8, **kw):
+    return dataclasses.replace(
+        exp, rounds=rounds, n_clients=16, clients_per_round=4,
+        samples_per_client_mean=40, samples_per_client_std=10,
+        local_iters=5, eval_size=400, **kw)
+
+
+# ------------------------------------------------ host-loop parity pins
+
+def test_random_scan_bit_identical_to_host_loop():
+    """The random selector now replays the HOST rng's draws (PR 2 used a
+    jax-PRNG permutation — statistically but not bitwise equivalent)."""
+    exp = _tiny(femnist_experiment("2spc", "random", seed=11))
+    r_py = run_experiment(exp, backend="python")
+    r_sc = run_experiment(exp, backend="scan")
+    np.testing.assert_array_equal(r_py.selections, r_sc.selections)
+    np.testing.assert_allclose(r_py.accuracy, r_sc.accuracy, atol=1e-3)
+
+
+def test_powd_scan_bit_identical_to_host_loop():
+    """Pow-d: candidate pools from the host stream, loss probe + top-K
+    ranking re-derived in-scan against the same params."""
+    exp = _tiny(femnist_experiment("2spc", "powd", seed=12))
+    r_py = run_experiment(exp, backend="python")
+    r_sc = run_experiment(exp, backend="scan")
+    np.testing.assert_array_equal(r_py.selections, r_sc.selections)
+    np.testing.assert_allclose(r_py.accuracy, r_sc.accuracy, atol=1e-3)
+    np.testing.assert_allclose(r_py.loss, r_sc.loss, atol=1e-2)
+    # every cohort is distinct clients drawn from that round's pool
+    assert all(len(set(row)) == len(row) for row in r_sc.selections)
+
+
+def test_powd_scan_parity_in_flat_layout():
+    exp = _tiny(femnist_experiment("2spc", "powd", seed=13), rounds=5)
+    r_py = run_experiment(exp, backend="python")
+    r_fl = run_experiment(exp, backend="scan", param_layout="flat")
+    np.testing.assert_array_equal(r_py.selections, r_fl.selections)
+
+
+def test_fedcor_scan_bit_identical_to_host_loop():
+    """FedCor past warm-up: the greedy GP-posterior cohorts must replay
+    (warmup=3 → rounds 3..9 exercise the in-scan covariance + greedy)."""
+    exp = _tiny(femnist_experiment("2spc", "fedcor", seed=14), rounds=10,
+                fedcor_warmup=3)
+    r_py = run_experiment(exp, backend="python")
+    r_sc = run_experiment(exp, backend="scan")
+    np.testing.assert_array_equal(r_py.selections, r_sc.selections)
+    np.testing.assert_allclose(r_py.accuracy, r_sc.accuracy, atol=1e-3)
+    # sanity: the greedy rounds are NOT the warm-up stream replayed
+    assert not np.array_equal(r_py.selections[3:], r_py.selections[:7])
+
+
+def test_fedcor_greedy_matches_host_selector_decisions():
+    """Unit-level: the jnp greedy/cov twins drive FedCorSelector itself,
+    so feeding both the same loss stream keeps them in lockstep."""
+    N, K, T = 12, 3, 9
+    rng = np.random.default_rng(21)
+    sel = FedCorSelector(N, K, warmup=2)
+    cov = jnp.eye(N, dtype=jnp.float32)
+    prev = None
+    for t in range(T):
+        losses = rng.normal(size=N).astype(np.float32)
+        ids_host = sel.select(np.random.default_rng(0), t)
+        if t >= 2:
+            ids_jnp = np.asarray(fedcor_greedy(cov, K))
+            np.testing.assert_array_equal(ids_host, ids_jnp,
+                                          err_msg=f"round {t}")
+        sel.receive_all_losses(losses)
+        if prev is not None:
+            cov = fedcor_cov_update(cov, jnp.asarray(prev),
+                                    jnp.asarray(losses))
+        prev = losses
+        np.testing.assert_allclose(np.asarray(cov), sel.cov, rtol=1e-6,
+                                   atol=1e-7)
+
+
+# ------------------------------------------------------- scenario layer
+
+@pytest.mark.parametrize("selector", ["gpfl", "random", "powd", "fedcor"])
+def test_availability_scenario_restricts_selection(selector):
+    exp = _tiny(femnist_experiment("2spc", selector, seed=15), rounds=6,
+                fedcor_warmup=2)
+    scn = ScenarioConfig(kind="availability", availability=0.6, seed=3)
+    res = run_experiment(exp, backend="scan", scenario=scn)
+    # rebuild the engine's mask stream and check every selected client
+    # was available in its round
+    need = max(exp.clients_per_round, powd_default_d(16, 4)) \
+        if selector == "powd" else exp.clients_per_round
+    srng = np.random.default_rng((exp.seed, scn.seed, 1))
+    avail = availability_stream(srng, exp.rounds, 16, 0.6, need)
+    for t, row in enumerate(res.selections):
+        assert avail[t, row].all(), f"round {t} selected unavailable client"
+    assert np.all(np.isfinite(res.accuracy))
+
+
+def test_straggler_scenario_drops_late_clients():
+    exp = _tiny(femnist_experiment("2spc", "gpfl", seed=16), rounds=6)
+    full = run_experiment(exp, backend="scan")
+    tight = run_experiment(
+        exp, backend="scan",
+        scenario=ScenarioConfig(kind="stragglers", deadline_s=2.0))
+    # the deadline actually bites: some round's aggregation differs
+    assert not np.array_equal(full.accuracy, tight.accuracy)
+    assert np.all(np.isfinite(tight.accuracy))
+    # with an infinite deadline nobody drops → identical selections
+    loose = run_experiment(
+        exp, backend="scan",
+        scenario=ScenarioConfig(kind="stragglers", deadline_s=1e9))
+    np.testing.assert_array_equal(full.selections, loose.selections)
+    np.testing.assert_allclose(full.accuracy, loose.accuracy, atol=1e-6)
+
+
+def test_scenario_streams_shapes_and_floors():
+    rng = np.random.default_rng(0)
+    avail = availability_stream(rng, 20, 30, prob=0.3, min_available=8)
+    assert avail.shape == (20, 30)
+    assert (avail.sum(axis=1) >= 8).all()
+    lat = completion_time_stream(LatencyModel(n_clients=30),
+                                 np.random.default_rng(1), 20)
+    assert lat.shape == (20, 30) and (lat > 0).all()
+    assert make_scenario(None).kind == "full"
+    assert make_scenario("stragglers").resolved_deadline() > 0
+    with pytest.raises(ValueError, match="scenario"):
+        make_scenario("nope")
+    with pytest.raises(ValueError, match="availability"):
+        ScenarioConfig(kind="availability", availability=0.0)

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Docstring-coverage gate (dependency-free stand-in for ``interrogate``).
+
+Walks the given packages with ``ast`` (no imports, so it runs without
+jax installed), counts the documentable public surface — module
+docstrings, public classes, public functions and public methods (dunders
+other than ``__init__`` and anything prefixed ``_`` are skipped; nested
+closures are implementation detail and are skipped too) — and fails when
+the documented fraction drops below ``--min`` percent.
+
+CI runs it in the lint job::
+
+    python tools/docstring_coverage.py --min 80 src/repro/fl \
+        src/repro/core src/repro/kernels
+
+and prints every missing docstring so the failure is actionable.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+
+def _is_public(name: str) -> bool:
+    if name == "__init__":
+        return True
+    return not name.startswith("_")
+
+
+def _scan_module(path: pathlib.Path):
+    """Yield ``(qualname, has_docstring)`` for one file's public surface."""
+    tree = ast.parse(path.read_text(encoding="utf-8"))
+    yield f"{path}::<module>", ast.get_docstring(tree) is not None
+
+    def walk(body, prefix, in_class):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if not _is_public(node.name):
+                    continue
+                yield (f"{path}::{prefix}{node.name}",
+                       ast.get_docstring(node) is not None)
+                # nested defs inside functions are closures — skip them
+            elif isinstance(node, ast.ClassDef):
+                if not _is_public(node.name):
+                    continue
+                yield (f"{path}::{prefix}{node.name}",
+                       ast.get_docstring(node) is not None)
+                yield from walk(node.body, f"{prefix}{node.name}.", True)
+
+    yield from walk(tree.body, "", False)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", help="package dirs or .py files")
+    ap.add_argument("--min", type=float, default=80.0,
+                    help="minimum documented percentage (default 80)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="only print the summary line")
+    args = ap.parse_args(argv)
+
+    files: list[pathlib.Path] = []
+    for p in map(pathlib.Path, args.paths):
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+
+    total, documented, missing = 0, 0, []
+    for f in files:
+        for qualname, has in _scan_module(f):
+            total += 1
+            documented += has
+            if not has:
+                missing.append(qualname)
+
+    pct = 100.0 * documented / max(total, 1)
+    if missing and not args.quiet:
+        print(f"missing docstrings ({len(missing)}):")
+        for m in missing:
+            print(f"  {m}")
+    print(f"docstring coverage: {documented}/{total} = {pct:.1f}% "
+          f"(gate: {args.min:.0f}%)")
+    if pct < args.min:
+        print("FAIL: coverage below gate", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
