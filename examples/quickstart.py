@@ -7,12 +7,12 @@
 label-skewed (2-shards-per-client) data, gradient-projection selection beats
 random selection, and covers every client sooner.
 
-``--backend scan`` runs the same experiments through the compiled round
-engine (all rounds inside one jitted ``lax.scan`` — see
-``src/repro/fl/engine.py``); for GPFL it replays the host loop's
-selection decisions (observed to match round-for-round on configs like
-this one; exact equality on long runs is not guaranteed — the engine
-ranks in float32).
+The comparison is ONE declarative Plan (``repro.api``): the selector axis
+is swept, execution knobs live in an ``ExecutionSpec``, and the Session
+reuses the single built dataset across both selector cells.
+``--backend scan`` runs the same plan through the compiled round engine
+(all rounds inside one jitted ``lax.scan`` — see ``src/repro/fl/engine.py``),
+which replays the host loop's selection decisions stream-for-stream.
 """
 import argparse
 import dataclasses
@@ -20,8 +20,10 @@ import sys
 
 sys.path.insert(0, "src")
 
+import numpy as np
+
+from repro.api import ExecutionSpec, Plan
 from repro.configs.paper import femnist_experiment
-from repro.fl import run_experiment
 
 
 def main():
@@ -32,26 +34,26 @@ def main():
                          "lax.scan round engine")
     args = ap.parse_args()
 
-    results = {}
-    for selector in ("random", "gpfl"):
-        exp = femnist_experiment("2spc", selector, rounds=40, seed=0)
-        exp = dataclasses.replace(exp, n_clients=40,
-                                  samples_per_client_mean=80,
-                                  local_iters=10, eval_size=1000)
-        print(f"== running {selector} ({exp.rounds} rounds, "
-              f"{exp.n_clients} clients, K={exp.clients_per_round}, "
-              f"backend={args.backend}) ==")
-        results[selector] = run_experiment(exp, log_every=10,
-                                           backend=args.backend)
+    base = femnist_experiment("2spc", "gpfl", rounds=40, seed=0)
+    base = dataclasses.replace(base, n_clients=40,
+                               samples_per_client_mean=80,
+                               local_iters=10, eval_size=1000)
+    plan = Plan(base).sweep(selector=["random", "gpfl"])
+    print(f"== running {len(plan.cells())} cells ({base.rounds} rounds, "
+          f"{base.n_clients} clients, K={base.clients_per_round}, "
+          f"backend={args.backend}) ==")
+    runset = plan.execute_with(ExecutionSpec(backend=args.backend),
+                               log_every=10).run()
 
     print("\nselector  final_acc  acc@50%  rounds_to_full_coverage")
+    results = {r.config.selector: r for r in runset}
     for name, res in results.items():
-        import numpy as np
         cov = int(np.argmax(res.coverage >= 1.0) + 1) \
             if res.coverage[-1] >= 1.0 else -1
         print(f"{name:9s} {res.final_accuracy(5):8.4f} "
               f"{res.accuracy_at(0.5):8.4f}  {cov}")
-    gain = results["gpfl"].final_accuracy(5) - results["random"].final_accuracy(5)
+    gain = results["gpfl"].final_accuracy(5) \
+        - results["random"].final_accuracy(5)
     print(f"\nGPFL − Random final accuracy: {gain:+.4f}")
 
 

@@ -1,0 +1,71 @@
+"""Table II as ONE declarative Plan: 4 selectors × 3 partitions × N seeds.
+
+    PYTHONPATH=src python examples/sweep_table2.py
+    PYTHONPATH=src python examples/sweep_table2.py --seeds 5 --rounds 60
+    PYTHONPATH=src python examples/sweep_table2.py --full-scale   # paper budget
+
+The whole grid is declared once (``repro.configs.paper.table2_plan``) and
+executed through a ``repro.api.Session``: cells that differ only in seed
+are batched into ONE vmapped scan dispatch, and cells that share a seed
+reuse one built dataset.  Results come back as a ``RunSet`` whose
+``mean_final_accuracy(by=...)`` is exactly a Table II column.
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.api import ExecutionSpec
+from repro.configs.paper import PARTITIONS, SELECTORS, table2_plan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="femnist",
+                    choices=["femnist", "cifar10"])
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--full-scale", action="store_true",
+                    help="paper-scale clients/rounds (hours on CPU)")
+    ap.add_argument("--backend", choices=("python", "scan"), default="scan")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="persist the full RunSet as JSON")
+    args = ap.parse_args()
+
+    scale = None if args.full_scale else (
+        lambda e: dataclasses.replace(
+            e, n_clients=32, samples_per_client_mean=60,
+            samples_per_client_std=15, local_iters=5, eval_size=500))
+    plan = table2_plan(dataset=args.dataset, rounds=args.rounds,
+                       seeds=args.seeds, scale=scale)
+    n = len(plan.cells())
+    print(f"executing {n} cells "
+          f"({len(SELECTORS)} selectors x {len(PARTITIONS)} partitions x "
+          f"{args.seeds} seeds) on backend={args.backend} ...")
+    runset = plan.execute_with(ExecutionSpec(backend=args.backend)).run()
+
+    print(f"\nTable II ({args.dataset}, {args.rounds} rounds, "
+          f"mean over {args.seeds} seeds; final acc +- std):")
+    header = "selector   " + "".join(f"{p:>16s}" for p in PARTITIONS)
+    print(header)
+    for sel in SELECTORS:
+        cells = []
+        for part in PARTITIONS:
+            mean, std = runset.filter(selector=sel, partition=part) \
+                .mean_final_accuracy(by="selector")[sel]
+            cells.append(f"  {mean:.4f}+-{std:.3f}")
+        print(f"{sel:9s} " + "".join(f"{c:>16s}" for c in cells))
+
+    print("\naccuracy at 50% round budget (Fig. 4 slice), by selector:")
+    for sel, acc in runset.accuracy_at_budget(0.5, by="selector").items():
+        print(f"  {sel:9s} {acc:.4f}")
+
+    if args.save:
+        runset.save(args.save)
+        print(f"\nwrote {args.save} (reload with "
+              f"repro.api.RunSet.load({args.save!r}))")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""``repro.api`` — the declarative experiment layer.
+
+Four pieces (see ARCHITECTURE.md §API layer):
+
+* :class:`ExecutionSpec` — HOW a run executes (backend, layout,
+  scenario, sharding, kernels), validated against the capability
+  registry (``repro.api.capabilities``) from which the human-readable
+  support matrix is *derived*.
+* :class:`Plan` — a declarative grid: one base config + swept fields +
+  a seed axis.
+* :class:`Session` — executes a Plan: batches same-config multi-seed
+  runs into ONE vmapped scan dispatch, reuses built datasets across
+  cells.
+* :class:`RunSet` — stacked results with Table II / Fig. 4 aggregation
+  helpers and JSON persistence.
+
+``repro.fl.run_experiment(...)`` remains as a thin shim over a one-cell
+Plan, so the legacy kwarg surface keeps working.
+"""
+from repro.api.capabilities import (BACKENDS, CAPABILITIES, PARAM_LAYOUTS,
+                                    SCENARIO_KINDS, SELECTORS, Capability,
+                                    SpecView, support_matrix, validate)
+from repro.api.plan import Plan
+from repro.api.results import RunSet
+from repro.api.session import Session
+from repro.api.spec import ExecutionSpec, spec_from_kwargs
+
+__all__ = [
+    "BACKENDS", "CAPABILITIES", "PARAM_LAYOUTS", "SCENARIO_KINDS",
+    "SELECTORS", "Capability", "SpecView", "support_matrix", "validate",
+    "Plan", "RunSet", "Session", "ExecutionSpec", "spec_from_kwargs",
+]

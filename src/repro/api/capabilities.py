@@ -1,0 +1,227 @@
+"""The capability registry: which knob works on which backend — as DATA.
+
+Before this layer existed the answer lived in a hand-maintained docstring
+(``SUPPORT_MATRIX`` in ``repro/fl/simulation.py``) plus ad-hoc ``if``
+chains scattered over ``run_experiment`` and ``ScanEngine.__init__`` —
+three places that could (and did) drift.  Here every backend/feature
+combination is ONE :class:`Capability` row; both the human-readable
+support matrix (:func:`support_matrix`) and the fail-fast validation
+(:func:`validate`) are *derived* from the same rows, so docs and reality
+cannot disagree (``tests/test_api.py`` executes every registered
+combination and asserts it runs — or raises — exactly as declared).
+
+This module is a dependency leaf: it imports nothing from ``repro`` so
+``repro.fl`` and ``repro.api`` can both build on it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional, Tuple
+
+#: execution backends the framework ships.
+BACKENDS = ("python", "scan")
+
+#: the paper's four client-selection policies (both backends run all four).
+SELECTORS = ("random", "gpfl", "powd", "fedcor")
+
+#: scan-carry parameter layouts.
+PARAM_LAYOUTS = ("tree", "flat")
+
+#: heterogeneity scenario kinds (see ``repro.fl.latency.ScenarioConfig``).
+SCENARIO_KINDS = ("full", "availability", "stragglers")
+
+
+@dataclasses.dataclass(frozen=True)
+class Capability:
+    """One row of the support matrix: a knob value and where it runs.
+
+    Attributes:
+        dim: the ``ExecutionSpec``/config dimension (``"selector"``,
+            ``"param_layout"``, ``"scenario"``, ``"shard_clients"``,
+            ``"use_gp_kernel"``, ``"batch_seeds"``).
+        value: the display value this row covers (e.g. ``"flat"``,
+            ``"> 1"``).
+        backends: backend name → support note (``"yes"`` or ``"yes (...)"``).
+            A backend absent from the mapping does NOT support the value;
+            :func:`validate` rejects it and :func:`support_matrix` renders
+            ``no``.
+        constraint: optional extra structural check, run only when the
+            backend column says yes — returns an error string (without
+            the matrix appended) or ``None``.  Receives the
+            :class:`SpecView` under validation.
+    """
+    dim: str
+    value: str
+    backends: Mapping[str, str]
+    constraint: Optional[Callable[["SpecView"], Optional[str]]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecView:
+    """The flattened (spec × experiment × environment) tuple validation
+    sees — a plain-data view so the registry never imports config classes.
+
+    Attributes:
+        backend: execution backend name.
+        selector: client-selection policy name.
+        param_layout: scan-carry layout name.
+        scenario_kind: resolved scenario kind string.
+        shard_clients: devices on the ``("clients",)`` cohort mesh axis.
+        use_gp_kernel: route GP scoring through the Pallas kernel.
+        clients_per_round: the experiment's cohort size K (divisibility
+            checks).
+        batch_seeds: number of seeds batched into one vmapped dispatch
+            (1 = a plain single-seed run).
+    """
+    backend: str
+    selector: str
+    param_layout: str
+    scenario_kind: str
+    shard_clients: int = 1
+    use_gp_kernel: bool = False
+    clients_per_round: int = 1
+    batch_seeds: int = 1
+
+
+def _shard_constraint(v: SpecView) -> Optional[str]:
+    """Structural rules for client-sharded cohorts (flat-only, K % n)."""
+    if v.param_layout != "flat":
+        return (f"shard_clients={v.shard_clients} requires "
+                f"param_layout='flat' (the sharded cohort is the flat "
+                f"(K, Dp) matrix); got {v.param_layout!r}")
+    if v.clients_per_round % v.shard_clients:
+        return (f"clients_per_round={v.clients_per_round} does not divide "
+                f"across shard_clients={v.shard_clients} shards")
+    if v.batch_seeds > 1:
+        return (f"batch_seeds={v.batch_seeds} cannot combine with "
+                f"shard_clients={v.shard_clients}: the vmapped seed axis "
+                f"and the shard_map cohort mesh would nest")
+    return None
+
+
+#: The registry.  Order is presentation order in :func:`support_matrix`.
+CAPABILITIES: Tuple[Capability, ...] = (
+    Capability("selector", "random",
+               {"python": "yes", "scan": "yes (host-stream replay)"}),
+    Capability("selector", "gpfl",
+               {"python": "yes", "scan": "yes (jitter-stream replay)"}),
+    Capability("selector", "powd",
+               {"python": "yes",
+                "scan": "yes (candidate stream + in-scan probe)"}),
+    Capability("selector", "fedcor",
+               {"python": "yes", "scan": "yes (in-scan GP covariance)"}),
+    Capability("param_layout", "'tree'",
+               {"python": "yes (only)", "scan": "yes"}),
+    Capability("param_layout", "'flat'", {"scan": "yes"}),
+    Capability("scenario", "'full'", {"python": "yes", "scan": "yes"}),
+    Capability("scenario", "'availability'",
+               {"scan": "yes (in-scan masks)"}),
+    Capability("scenario", "'stragglers'",
+               {"scan": "yes (in-scan deadlines)"}),
+    Capability("shard_clients", "> 1",
+               {"scan": "yes (flat layout, K % shards == 0)"},
+               constraint=_shard_constraint),
+    Capability("use_gp_kernel", "True", {"python": "yes", "scan": "yes"}),
+    Capability("batch_seeds", "> 1 (Session)",
+               {"scan": "yes (vmapped seed axis, shard_clients == 1)"}),
+)
+
+# the per-selector rows ARE the selector registry — a row added or
+# removed without updating SELECTORS (or vice versa) is a bug, caught at
+# import time rather than in some later sweep
+assert tuple(c.value for c in CAPABILITIES if c.dim == "selector") \
+    == SELECTORS
+
+
+def support_matrix() -> str:
+    """Render the registry as the human-readable support matrix.
+
+    This string is what every fail-fast ``ValueError`` appends, and what
+    ``repro.fl.simulation.SUPPORT_MATRIX`` now re-exports — generated, so
+    it cannot drift from :func:`validate`'s behaviour.
+    """
+    header = ("supported run_experiment / ExecutionSpec combinations "
+              "(derived from repro.api.capabilities.CAPABILITIES):")
+
+    def knob(c: Capability) -> str:
+        sep = " " if c.value.startswith((">", "<")) else "="
+        return f"{c.dim}{sep}{c.value}"
+
+    knob_w = max(len(knob(c)) for c in CAPABILITIES) + 2
+    col_w = max(max(len(c.backends.get("python", "no"))
+                    for c in CAPABILITIES), len("backend=python")) + 3
+    lines = [header,
+             f"  {'knob'.ljust(knob_w)}"
+             f"{'backend=python'.ljust(col_w)}backend=scan"]
+    for c in CAPABILITIES:
+        py = c.backends.get("python", "no")
+        sc = c.backends.get("scan", "no")
+        lines.append(f"  {knob(c).ljust(knob_w)}{py.ljust(col_w)}{sc}")
+    return "\n".join(lines)
+
+
+def _rows_for(dim: str) -> Mapping[str, Capability]:
+    return {c.value.strip("'"): c for c in CAPABILITIES if c.dim == dim}
+
+
+def validate(view: SpecView) -> None:
+    """Fail fast on any combination the registry does not declare runnable.
+
+    Every check below is a registry lookup — there is no second,
+    hand-written rule set to drift from the matrix.
+
+    Args:
+        view: the flattened spec/experiment view (see :class:`SpecView`).
+
+    Raises:
+        ValueError: the combination is not registered as supported; the
+            message names the offending knob and appends the full derived
+            matrix.
+    """
+    def fail(msg: str) -> None:
+        raise ValueError(f"{msg}\n{support_matrix()}")
+
+    if view.backend not in BACKENDS:
+        fail(f"unknown backend {view.backend!r}; expected one of "
+             f"{BACKENDS}.")
+
+    sel_rows = _rows_for("selector")
+    if view.selector not in sel_rows:
+        fail(f"unknown selector {view.selector!r}; registered selectors: "
+             f"{tuple(sel_rows)}.")
+    if view.backend not in sel_rows[view.selector].backends:
+        fail(f"selector={view.selector!r} is not supported on "
+             f"backend={view.backend!r}.")
+
+    layout_rows = _rows_for("param_layout")
+    if view.param_layout not in layout_rows:
+        fail(f"param_layout must be one of {PARAM_LAYOUTS}; "
+             f"got {view.param_layout!r}.")
+    if view.backend not in layout_rows[view.param_layout].backends:
+        fail(f"param_layout={view.param_layout!r} requires backend='scan'; "
+             f"the python host loop always runs the tree layout.")
+
+    scn_rows = _rows_for("scenario")
+    if view.scenario_kind not in scn_rows:
+        fail(f"unknown scenario {view.scenario_kind!r}; expected one of "
+             f"{SCENARIO_KINDS} or a repro.fl.latency.ScenarioConfig.")
+    if view.backend not in scn_rows[view.scenario_kind].backends:
+        fail(f"scenario={view.scenario_kind!r} requires backend='scan' "
+             f"(the availability/straggler streams are scan inputs).")
+
+    if view.shard_clients != 1:
+        if view.shard_clients < 1:
+            fail(f"shard_clients must be >= 1; got {view.shard_clients}.")
+        row = next(c for c in CAPABILITIES if c.dim == "shard_clients")
+        if view.backend not in row.backends:
+            fail(f"shard_clients={view.shard_clients} requires "
+                 f"backend='scan' with param_layout='flat'.")
+        err = row.constraint(view) if row.constraint else None
+        if err:
+            fail(err + ".")
+
+    if view.batch_seeds > 1:
+        row = next(c for c in CAPABILITIES if c.dim == "batch_seeds")
+        if view.backend not in row.backends:
+            fail(f"batched multi-seed dispatch (batch_seeds="
+                 f"{view.batch_seeds}) requires backend='scan'.")

@@ -1,0 +1,170 @@
+"""``Plan`` — a declarative grid of experiments (the WHAT of a sweep).
+
+The paper's headline result is a comparison — four selectors × three
+partitions × multiple seeds (Table II, Fig. 4) — so the unit of work the
+API should speak is the *grid*, not the single cell.  A ``Plan`` starts
+from one base ``FLExperimentConfig`` and expands declared sweeps into
+cells::
+
+    Plan(base).sweep(selector=["gpfl", "random"]).seeds(3)
+
+expands to 6 configs (2 selectors × 3 seeds).  ``execute_with(spec)``
+hands the cells to a :class:`repro.api.Session`, which owns the
+execution strategy (batched multi-seed dispatches, dataset reuse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, Iterable, List, Sequence, Union
+
+from repro.configs.paper import FLExperimentConfig
+
+
+class Plan:
+    """Builder for a grid of experiment configs.
+
+    Fluent and by-value: every builder call returns a NEW ``Plan`` (the
+    receiver is never mutated), so partially-built plans can be shared
+    and forked.
+
+    Args:
+        base: the config every cell starts from; swept fields are
+            ``dataclasses.replace``-ed onto it.
+    """
+
+    def __init__(self, base: FLExperimentConfig):
+        """Start a plan from one base experiment config."""
+        self.base = base
+        self._sweeps: Dict[str, tuple] = {}
+        self._seeds: tuple = (base.seed,)
+        self._seeds_explicit = False
+        self._derived: Dict[str, Callable] = {}
+
+    def _clone(self) -> "Plan":
+        p = Plan(self.base)
+        p._sweeps = dict(self._sweeps)
+        p._seeds = self._seeds
+        p._seeds_explicit = self._seeds_explicit
+        p._derived = dict(self._derived)
+        return p
+
+    def sweep(self, **dims: Iterable) -> "Plan":
+        """Declare grid dimensions: ``field=[values...]`` per kwarg.
+
+        Args:
+            **dims: each key must be an ``FLExperimentConfig`` field
+                (``seed`` goes through :meth:`seeds` instead); each value
+                is the list of settings to cross.
+
+        Returns:
+            A new plan with the dimensions added (later calls cross with
+            earlier ones).
+
+        Raises:
+            ValueError: a key is not a config field, or is ``seed``.
+        """
+        fields = {f.name for f in dataclasses.fields(FLExperimentConfig)}
+        p = self._clone()
+        for name, values in dims.items():
+            if name == "seed":
+                raise ValueError("sweep the seed axis via .seeds(...) — "
+                                 "Session batches it specially")
+            if name not in fields:
+                raise ValueError(f"unknown sweep field {name!r}; "
+                                 f"FLExperimentConfig fields: "
+                                 f"{sorted(fields)}")
+            p._sweeps[name] = tuple(values)
+        return p
+
+    def seeds(self, seeds: Union[int, Sequence[int]]) -> "Plan":
+        """Declare the seed axis.
+
+        Args:
+            seeds: an int N (→ seeds ``0..N-1``) or an explicit sequence.
+
+        Returns:
+            A new plan with the seed axis set.
+        """
+        p = self._clone()
+        p._seeds = tuple(range(seeds)) if isinstance(seeds, int) \
+            else tuple(seeds)
+        p._seeds_explicit = True
+        if not p._seeds:
+            raise ValueError("at least one seed is required")
+        return p
+
+    def derive(self, **rules: Callable) -> "Plan":
+        """Declare fields computed FROM each expanded cell (linked knobs).
+
+        Table II style: the paper uses K=10 under 1SPC but K=5 under
+        2SPC/Dir, so K is a function of the partition sweep::
+
+            plan.derive(clients_per_round=lambda c: 10 if c.partition == "1spc" else 5)
+
+        Args:
+            **rules: ``field=fn`` where ``fn(cell_config) -> value`` runs
+                after the sweep fields (and seed) are applied.
+
+        Returns:
+            A new plan with the derivation rules added.
+        """
+        fields = {f.name for f in dataclasses.fields(FLExperimentConfig)}
+        for name in rules:
+            if name not in fields:
+                raise ValueError(f"unknown derived field {name!r}")
+        p = self._clone()
+        p._derived.update(rules)
+        return p
+
+    @property
+    def seed_axis(self) -> tuple:
+        """The plan's seeds, in declaration order."""
+        return self._seeds
+
+    def cells(self) -> List[FLExperimentConfig]:
+        """Expand the grid into one config per cell.
+
+        Order is deterministic: sweep dimensions vary outermost-first in
+        declaration order, the seed axis varies innermost — so all seeds
+        of one config are adjacent (what :class:`repro.api.Session`
+        batches into one dispatch).
+
+        Cell names tag the swept axes (``base/selector=gpfl,seed=1``);
+        a plan with no sweeps and no explicit seed axis — e.g. the
+        one-cell ``run_experiment`` shim — keeps the base name
+        untouched, so ``run_experiment(exp).config == exp``.
+
+        Returns:
+            The expanded list of ``FLExperimentConfig``.
+        """
+        names = list(self._sweeps)
+        out = []
+        for combo in itertools.product(*(self._sweeps[n] for n in names)):
+            repl = dict(zip(names, combo))
+            for seed in self._seeds:
+                cell = dataclasses.replace(self.base, seed=seed, **repl)
+                for field, fn in self._derived.items():
+                    cell = dataclasses.replace(cell, **{field: fn(cell)})
+                tags = [f"{n}={v}" for n, v in repl.items()]
+                if self._seeds_explicit:
+                    tags.append(f"seed={seed}")
+                if tags:
+                    cell = dataclasses.replace(
+                        cell, name=f"{self.base.name}/{','.join(tags)}")
+                out.append(cell)
+        return out
+
+    def execute_with(self, spec, *, log_every: int = 0):
+        """Bind the plan to an :class:`repro.api.ExecutionSpec`.
+
+        Args:
+            spec: HOW every cell runs (one spec for the whole plan).
+            log_every: per-round progress printing for each run (0 =
+                silent).
+
+        Returns:
+            A ready :class:`repro.api.Session` — call ``.run()`` on it.
+        """
+        from repro.api.session import Session
+        return Session(self, spec, log_every=log_every)

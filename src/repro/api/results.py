@@ -1,0 +1,194 @@
+"""``RunSet`` — stacked run histories with Table II / Fig. 4 helpers.
+
+A :class:`repro.api.Session` returns every cell's
+``repro.fl.simulation.RunResult`` in plan order, wrapped in a ``RunSet``
+that knows how to aggregate the grid the way the paper reports it:
+``mean_final_accuracy(by="selector")`` is a Table II column,
+``accuracy_at_budget(0.5, by="selector")`` a Fig. 4 vertical slice.
+``save()``/``load()`` round-trip the whole set (configs + full metric
+histories) through JSON so sweeps can be archived and re-aggregated
+without re-running.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+#: serialization format version stamped into every saved file.
+SCHEMA_VERSION = 1
+
+_ARRAY_FIELDS = ("accuracy", "loss", "selections", "round_time_s",
+                 "selection_counts", "coverage")
+
+
+def _config_to_dict(cfg) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def _config_from_dict(d: dict):
+    from repro.configs.paper import FLExperimentConfig, SmallModelConfig
+    model = dict(d["model"])
+    for tup in ("input_shape", "hidden", "conv_channels"):
+        model[tup] = tuple(model[tup])
+    return FLExperimentConfig(**{**d, "model": SmallModelConfig(**model)})
+
+
+class RunSet:
+    """An ordered collection of run histories (one per plan cell).
+
+    Args:
+        runs: ``repro.fl.simulation.RunResult`` objects, in plan order.
+    """
+
+    def __init__(self, runs: List):
+        """Wrap the runs (kept by reference, in the given order)."""
+        self.runs = list(runs)
+
+    def __len__(self) -> int:
+        """Number of runs in the set."""
+        return len(self.runs)
+
+    def __iter__(self):
+        """Iterate over the underlying ``RunResult`` objects."""
+        return iter(self.runs)
+
+    def __getitem__(self, i):
+        """The i-th run (plan order)."""
+        return self.runs[i]
+
+    def filter(self, **config_fields) -> "RunSet":
+        """Subset by exact config-field match, e.g. ``selector="gpfl"``.
+
+        Args:
+            **config_fields: field → required value on ``run.config``.
+
+        Returns:
+            A new ``RunSet`` with the matching runs (plan order kept).
+        """
+        keep = [r for r in self.runs
+                if all(getattr(r.config, k) == v
+                       for k, v in config_fields.items())]
+        return RunSet(keep)
+
+    def _groups(self, by: str) -> Dict:
+        groups: Dict = {}
+        for r in self.runs:
+            groups.setdefault(getattr(r.config, by), []).append(r)
+        return groups
+
+    def mean_final_accuracy(self, by: str = "selector",
+                            last: int = 10) -> Dict:
+        """Table II-style aggregation: mean final accuracy per group.
+
+        Args:
+            by: config field to group on (``"selector"``,
+                ``"partition"``, ...).
+            last: final-accuracy window (mean over the last N rounds of
+                each run, Table II style).
+
+        Returns:
+            ``{group_value: (mean, std)}`` over the runs (seeds and any
+            other swept dims) in each group; std is 0.0 for singletons.
+        """
+        out = {}
+        for val, runs in self._groups(by).items():
+            finals = np.asarray([r.final_accuracy(last) for r in runs])
+            out[val] = (float(finals.mean()), float(finals.std()))
+        return out
+
+    def accuracy_at_budget(self, frac: float,
+                           by: Optional[str] = "selector") -> Dict:
+        """Fig. 4-style slice: mean accuracy at a round-budget fraction.
+
+        Args:
+            frac: fraction of each run's round budget (0 < frac <= 1).
+            by: config field to group on; ``None`` pools every run.
+
+        Returns:
+            ``{group_value: mean_accuracy}`` (or a single float when
+            ``by`` is ``None``).
+        """
+        if by is None:
+            return float(np.mean([r.accuracy_at(frac) for r in self.runs]))
+        return {val: float(np.mean([r.accuracy_at(frac) for r in runs]))
+                for val, runs in self._groups(by).items()}
+
+    def to_frame(self):
+        """One summary row per run — a ``pandas.DataFrame`` when pandas
+        is importable, else the same rows as a list of dicts.
+
+        Columns: the cell name, the swept config axes (selector,
+        partition, seed, rounds, K), final/mid-budget accuracy, final
+        coverage and mean round wall time.
+        """
+        rows = []
+        for r in self.runs:
+            c = r.config
+            rows.append({
+                "name": c.name, "selector": c.selector,
+                "partition": c.partition, "seed": c.seed,
+                "rounds": c.rounds, "clients_per_round": c.clients_per_round,
+                "n_clients": c.n_clients,
+                "final_accuracy": r.final_accuracy(),
+                "accuracy_at_50pct": r.accuracy_at(0.5),
+                "final_coverage": float(r.coverage[-1]),
+                "mean_round_s": float(r.round_time_s.mean()),
+            })
+        try:
+            import pandas as pd
+            return pd.DataFrame(rows)
+        except ImportError:
+            return rows
+
+    def save(self, path: str) -> None:
+        """Write the whole set (configs + full histories) as JSON.
+
+        Args:
+            path: output file path.
+        """
+        payload = {"schema_version": SCHEMA_VERSION, "runs": []}
+        for r in self.runs:
+            rec = {"config": _config_to_dict(r.config)}
+            for f in _ARRAY_FIELDS:
+                rec[f] = np.asarray(getattr(r, f)).tolist()
+            payload["runs"].append(rec)
+        with open(path, "w") as fh:
+            json.dump(payload, fh)
+
+    @classmethod
+    def load(cls, path: str) -> "RunSet":
+        """Rebuild a saved set: full round-trip of :meth:`save`.
+
+        Args:
+            path: file written by :meth:`save`.
+
+        Returns:
+            A ``RunSet`` whose configs and metric arrays compare equal to
+            the saved ones (selections/counts as int64, metrics float32).
+
+        Raises:
+            ValueError: the file's schema version is unknown.
+        """
+        from repro.fl.simulation import RunResult
+        with open(path) as fh:
+            payload = json.load(fh)
+        if payload.get("schema_version") != SCHEMA_VERSION:
+            raise ValueError(
+                f"unknown RunSet schema_version "
+                f"{payload.get('schema_version')!r} in {path}")
+        runs = []
+        for rec in payload["runs"]:
+            runs.append(RunResult(
+                config=_config_from_dict(rec["config"]),
+                accuracy=np.asarray(rec["accuracy"], np.float32),
+                loss=np.asarray(rec["loss"], np.float32),
+                selections=np.asarray(rec["selections"], np.int64),
+                round_time_s=np.asarray(rec["round_time_s"], np.float32),
+                selection_counts=np.asarray(rec["selection_counts"],
+                                            np.int64),
+                coverage=np.asarray(rec["coverage"], np.float32),
+            ))
+        return cls(runs)

@@ -1,0 +1,136 @@
+"""``Session`` — executes a ``Plan``, exploiting the scan engine for scale.
+
+The Session owns execution strategy so the Plan can stay declarative:
+
+* **Batched multi-seed dispatch** — cells that share a config modulo
+  seed (the common case: ``.seeds(n)``) run as ONE device dispatch on
+  the scan backend: the jitted round-scan is ``vmap``-ed over a leading
+  seed axis (``repro.fl.engine.BatchedSeedEngine``), so S seeds cost one
+  trace/compile and one dispatch instead of S.  Per-seed selection
+  histories stay bit-identical to sequential runs (pinned by
+  ``tests/test_api.py``).
+* **Dataset reuse** — the synthetic dataset build depends on the data
+  knobs and the seed but NOT on the selector/scenario, so a 4-selector
+  sweep at one seed builds its ``ClientStore`` once; the Session caches
+  built datasets by their data key and hands them to every run.
+* **Compiled-engine reuse** — sequential scan cells of one
+  config-modulo-seed group (e.g. ``batch_seeds=False`` seed runs) share
+  ONE jitted scan: the round-scan takes tables/eval as runtime
+  arguments and never reads ``exp.seed``, so the first engine's
+  compiled function serves every sibling (re-tracing only if a seed's
+  table capacity differs).
+
+Results come back as a :class:`repro.api.RunSet` in plan order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.api.results import RunSet
+from repro.api.spec import ExecutionSpec
+
+
+def _data_key(exp) -> Tuple:
+    """The fields ``repro.fl.simulation._build_data`` actually depends on
+    (selector/scenario/rho never enter the dataset build)."""
+    return (exp.model.name, exp.n_clients, exp.samples_per_client_mean,
+            exp.samples_per_client_std, exp.eval_size, exp.partition,
+            exp.dirichlet_zeta, exp.seed)
+
+
+class Session:
+    """Runs every cell of a plan under one :class:`ExecutionSpec`.
+
+    Args:
+        plan: the :class:`repro.api.Plan` to execute.
+        spec: HOW each cell runs.  Validated against the capability
+            registry for every cell HERE — before any dataset builds or
+            compiles.
+        log_every: per-round progress printing (0 = silent).  Forced
+            silent inside batched multi-seed dispatches (interleaved
+            vmapped prints would be unreadable).
+
+    Raises:
+        ValueError: some cell × spec combination is not registered as
+            supported (message carries the derived support matrix).
+    """
+
+    def __init__(self, plan, spec: ExecutionSpec, *, log_every: int = 0):
+        """Expand the plan and fail fast on unsupported combinations."""
+        self.plan = plan
+        self.spec = spec
+        self.log_every = log_every
+        self.cells = plan.cells()
+        self._groups = self._group_cells()
+        for idxs, base in self._groups:
+            spec.validate(self.cells[idxs[0]],
+                          n_seeds=len(idxs) if self._batchable(idxs) else 1)
+        self._data_cache: Dict[Tuple, tuple] = {}
+
+    def _group_cells(self) -> List[Tuple[List[int], object]]:
+        """Group cell indices by config-modulo-seed (plan order kept)."""
+        keyed: Dict[object, List[int]] = {}
+        order = []
+        for i, cell in enumerate(self.cells):
+            key = dataclasses.replace(cell, seed=0, name="")
+            if key not in keyed:
+                keyed[key] = []
+                order.append(key)
+            keyed[key].append(i)
+        return [(keyed[k], k) for k in order]
+
+    def _batchable(self, idxs: List[int]) -> bool:
+        """Can this group collapse into one vmapped multi-seed dispatch?"""
+        return (self.spec.backend == "scan" and self.spec.batch_seeds
+                and self.spec.shard_clients == 1 and len(idxs) > 1)
+
+    def _data_for(self, exp):
+        """Build (or reuse) the cell's dataset; cached by data key."""
+        from repro.fl.simulation import _build_data
+        key = _data_key(exp)
+        if key not in self._data_cache:
+            self._data_cache[key] = _build_data(exp, exp.seed)
+        return self._data_cache[key]
+
+    def run(self) -> RunSet:
+        """Execute every cell and return the results in plan order.
+
+        Returns:
+            A :class:`repro.api.RunSet` with one
+            ``repro.fl.simulation.RunResult`` per plan cell.
+        """
+        from repro.fl.engine import BatchedSeedEngine, ScanEngine
+        from repro.fl.simulation import run_python_loop
+
+        results = [None] * len(self.cells)
+        for idxs, _ in self._groups:
+            if self._batchable(idxs):
+                cells = [self.cells[i] for i in idxs]
+                eng = BatchedSeedEngine(
+                    cells, data_provider=self._data_for,
+                    **self.spec.engine_kwargs())
+                for i, res in zip(idxs, eng.run()):
+                    results[i] = res
+                continue
+            shared_scan = None
+            for i in idxs:
+                cell = self.cells[i]
+                if self.spec.backend == "python":
+                    results[i] = run_python_loop(
+                        cell, log_every=self.log_every,
+                        use_gp_kernel=self.spec.use_gp_kernel,
+                        data=self._data_for(cell))
+                else:
+                    eng = ScanEngine(cell, log_every=self.log_every,
+                                     data=self._data_for(cell),
+                                     **self.spec.engine_kwargs())
+                    # the scan body never reads exp.seed and takes the
+                    # tables as arguments, so one compiled scan serves
+                    # every cell of this config-modulo-seed group
+                    if shared_scan is None:
+                        shared_scan = eng._compiled()
+                    else:
+                        eng._scan = shared_scan
+                    results[i] = eng.run()
+        return RunSet(results)

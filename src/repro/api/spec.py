@@ -1,0 +1,112 @@
+"""``ExecutionSpec`` — HOW an experiment runs, as one validated value.
+
+``run_experiment`` historically took a pile of loose kwargs (``backend=``,
+``param_layout=``, ``scenario=``, ``shard_clients=``, ``use_gp_kernel=``)
+whose legal combinations only a docstring knew.  An :class:`ExecutionSpec`
+packs the same knobs into one frozen dataclass that validates itself
+against the capability registry (``repro.api.capabilities``) — the WHAT
+(model, partition, selector, rounds: ``FLExperimentConfig``) stays
+separate from the HOW, so a ``Plan`` can sweep the science while reusing
+one spec for every cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.api import capabilities as caps
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """Execution knobs for one (or a whole Plan of) experiment run(s).
+
+    Attributes:
+        backend: ``"python"`` (reference host loop) or ``"scan"`` (the
+            compiled round engine — all T rounds in one jitted
+            ``lax.scan``).
+        param_layout: scan-carry layout, ``"tree"`` (pytree oracle) or
+            ``"flat"`` (one contiguous workspace vector).
+        scenario: heterogeneity scenario — ``"full"``,
+            ``"availability"``, ``"stragglers"`` or a
+            ``repro.fl.latency.ScenarioConfig``.
+        shard_clients: shard each round's cohort over this many devices
+            on a ``("clients",)`` mesh (scan + flat only).
+        use_gp_kernel: route GP scoring (and the flat server update)
+            through the Pallas kernels.
+        batch_seeds: let a :class:`repro.api.Session` batch runs that
+            differ only in seed into ONE vmapped scan dispatch (scan
+            backend, unsharded).  ``False`` forces sequential per-seed
+            dispatches (e.g. to baseline the batching speedup).
+    """
+    backend: str = "python"
+    param_layout: str = "tree"
+    scenario: Any = "full"
+    shard_clients: int = 1
+    use_gp_kernel: bool = False
+    batch_seeds: bool = True
+
+    @property
+    def scenario_kind(self) -> str:
+        """The scenario's kind string (``ScenarioConfig`` or shorthand)."""
+        kind = getattr(self.scenario, "kind", self.scenario)
+        return "full" if kind is None else kind
+
+    def view(self, exp, n_seeds: int = 1) -> caps.SpecView:
+        """Flatten this spec × ``exp`` into the registry's plain-data view.
+
+        Args:
+            exp: the ``FLExperimentConfig`` the spec will execute.
+            n_seeds: seeds that would share one batched dispatch.
+
+        Returns:
+            A :class:`repro.api.capabilities.SpecView`.
+        """
+        return caps.SpecView(
+            backend=self.backend, selector=exp.selector,
+            param_layout=self.param_layout,
+            scenario_kind=self.scenario_kind,
+            shard_clients=self.shard_clients,
+            use_gp_kernel=self.use_gp_kernel,
+            clients_per_round=exp.clients_per_round,
+            batch_seeds=n_seeds if self.batch_seeds else 1)
+
+    def validate(self, exp, n_seeds: int = 1) -> None:
+        """Fail fast (before anything compiles) on unsupported combos.
+
+        Args:
+            exp: the ``FLExperimentConfig`` to check against.
+            n_seeds: seeds that would share one batched dispatch.
+
+        Raises:
+            ValueError: the registry does not declare the combination
+                runnable; the message carries the derived support matrix.
+        """
+        caps.validate(self.view(exp, n_seeds))
+
+    def engine_kwargs(self) -> dict:
+        """The spec as ``ScanEngine`` keyword arguments."""
+        return dict(param_layout=self.param_layout, scenario=self.scenario,
+                    shard_clients=self.shard_clients,
+                    use_gp_kernel=self.use_gp_kernel)
+
+
+def spec_from_kwargs(backend: str = "python", param_layout: str = "tree",
+                     scenario: Any = "full", shard_clients: int = 1,
+                     use_gp_kernel: bool = False,
+                     batch_seeds: Optional[bool] = None) -> ExecutionSpec:
+    """Adapter for the legacy ``run_experiment`` kwarg pile.
+
+    Args:
+        backend / param_layout / scenario / shard_clients / use_gp_kernel:
+            the historical loose kwargs, unchanged semantics.
+        batch_seeds: ``None`` keeps the spec default (``True``).
+
+    Returns:
+        The equivalent :class:`ExecutionSpec`.
+    """
+    kw = dict(backend=backend, param_layout=param_layout, scenario=scenario,
+              shard_clients=shard_clients, use_gp_kernel=use_gp_kernel)
+    if batch_seeds is not None:
+        kw["batch_seeds"] = batch_seeds
+    return ExecutionSpec(**kw)

@@ -49,6 +49,16 @@ class FLExperimentConfig:
     eval_size: int = 2000
 
 
+#: the paper's four client-selection policies.  Must match the selector
+#: rows of the capability registry (``repro.api.capabilities`` — kept as
+#: a literal here because configs must stay import-leaf; equality is
+#: pinned by ``tests/test_api.py``).
+SELECTORS = ("random", "gpfl", "powd", "fedcor")
+
+#: the paper's three non-IID partitions (Table II columns).
+PARTITIONS = ("1spc", "2spc", "dir")
+
+
 FEMNIST_MLP = SmallModelConfig(
     name="femnist-mlp",
     kind="mlp",
@@ -109,3 +119,34 @@ def cifar10_experiment(partition: str = "2spc", selector: str = "gpfl",
         samples_per_client_mean=946,
         samples_per_client_std=256,
     )
+
+
+def table2_plan(dataset: str = "femnist", rounds: int = 500,
+                seeds: int = 3, scale=None):
+    """The paper's full Table II grid as ONE declarative Plan.
+
+    4 selectors × 3 partitions × ``seeds`` seeds, with the paper's
+    partition-linked cohort size (K=10 under 1SPC, K=5 under 2SPC/Dir)
+    expressed as a derived field.
+
+    Args:
+        dataset: ``"femnist"`` or ``"cifar10"``.
+        rounds: rounds per run (500 is the paper's FEMNIST budget).
+        seeds: seeds per cell (an int N → seeds 0..N-1, or a sequence).
+        scale: optional ``cfg -> cfg`` shrink applied to the base config
+            (CI/containers; e.g. fewer clients and local iters).
+
+    Returns:
+        A ``repro.api.Plan`` — pick an ``ExecutionSpec`` and call
+        ``.execute_with(spec).run()``.
+    """
+    from repro.api import Plan
+    make = femnist_experiment if dataset == "femnist" else cifar10_experiment
+    base = make("2spc", "gpfl", rounds=rounds)
+    if scale is not None:
+        base = scale(base)
+    return (Plan(base)
+            .sweep(selector=list(SELECTORS), partition=list(PARTITIONS))
+            .derive(clients_per_round=lambda c: 10 if c.partition == "1spc"
+                    else 5)
+            .seeds(seeds))

@@ -491,7 +491,8 @@ def make_selector(name: str, n_clients: int, k: int, total_rounds: int,
         raise KeyError(
             f"unknown selector {name!r}. Supported selectors (all run under "
             f"backend='python' AND backend='scan'): {sorted(SELECTORS)}. "
-            "See repro.fl.simulation.SUPPORT_MATRIX for the full "
+            "See repro.api.capabilities (or its rendered "
+            "repro.fl.simulation.SUPPORT_MATRIX) for the full "
             "backend/selector/scenario compatibility matrix.")
     return SELECTORS[name](n_clients=n_clients, k=k, total_rounds=total_rounds,
                            **kw)

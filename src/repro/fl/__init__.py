@@ -1,25 +1,36 @@
 """FL runtime: client engine, FedAvg server, full simulation driver.
 
 Two execution backends share one implementation of the paper's math:
-``run_experiment(..., backend="python")`` is the reference host loop,
-``backend="scan"`` the compiled round engine (``repro.fl.engine``) that
-runs all T rounds device-resident inside one jitted ``lax.scan`` — for
-every one of the paper's four selectors, with bit-identical selection
-histories (host-RNG streams precomputed into scan inputs), optional
-client-sharded cohorts (``shard_clients``) and in-scan heterogeneity
-scenarios (``scenario=``; see ``repro.fl.latency``).  The combination
-matrix lives in ``repro.fl.simulation.SUPPORT_MATRIX``."""
+``run_experiment(..., backend="python")`` is the reference host loop
+(:func:`repro.fl.simulation.run_python_loop`), ``backend="scan"`` the
+compiled round engine (``repro.fl.engine``) that runs all T rounds
+device-resident inside one jitted ``lax.scan`` — for every one of the
+paper's four selectors, with bit-identical selection histories (host-RNG
+streams precomputed into scan inputs), optional client-sharded cohorts
+(``shard_clients``), in-scan heterogeneity scenarios (``scenario=``; see
+``repro.fl.latency``) and batched multi-seed dispatch
+(``BatchedSeedEngine`` — S seeds vmapped into one scan).  The
+combination matrix (``repro.fl.simulation.SUPPORT_MATRIX``) is derived
+from the capability registry in ``repro.api.capabilities``; sweeps
+should go through the declarative ``repro.api`` layer
+(``Plan``/``Session``), of which ``run_experiment`` is a one-cell
+shim."""
 from repro.fl.client import make_cohort_trainer, make_cohort_loss_eval
-from repro.fl.server import fedavg, make_evaluator, update_global_direction
+from repro.fl.server import (fedavg, make_evaluator, make_table_evaluator,
+                             update_global_direction)
 from repro.fl.simulation import (RunResult, SUPPORT_MATRIX, init_gp_phase,
-                                 run_experiment)
-from repro.fl.engine import ScanEngine, run_experiment_scan
+                                 run_experiment, run_python_loop)
+from repro.fl.engine import (BatchedSeedEngine, ScanEngine,
+                             run_batched_seeds, run_experiment_scan)
 from repro.fl.latency import LatencyModel, ScenarioConfig, compare_selectors
 
 __all__ = [
     "make_cohort_trainer", "make_cohort_loss_eval",
-    "fedavg", "make_evaluator", "update_global_direction",
+    "fedavg", "make_evaluator", "make_table_evaluator",
+    "update_global_direction",
     "RunResult", "SUPPORT_MATRIX", "init_gp_phase", "run_experiment",
-    "ScanEngine", "run_experiment_scan",
+    "run_python_loop",
+    "BatchedSeedEngine", "ScanEngine", "run_batched_seeds",
+    "run_experiment_scan",
     "LatencyModel", "ScenarioConfig", "compare_selectors",
 ]

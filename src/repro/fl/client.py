@@ -66,12 +66,23 @@ def make_cohort_trainer(exp: FLExperimentConfig) -> Callable:
 def make_cohort_loss_eval(exp: FLExperimentConfig, batch_cap: int = 256
                           ) -> Callable:
     """Local loss of the *global* params on each client's data (Pow-d probes,
-    FedCor's all-client monitoring).  Evaluates up to batch_cap samples."""
+    FedCor's all-client monitoring).  Evaluates up to batch_cap samples.
+
+    The probe always reduces over EXACTLY ``batch_cap`` rows: clients whose
+    padded table is shorter are zero-padded up to it (the mask already
+    excludes those rows, and summing a fixed-length vector keeps the probe
+    loss bit-identical no matter how tall the backing client table is —
+    the batched multi-seed engine stacks tables from different seeds to a
+    common height, and the per-seed probes must not notice)."""
     cfg = exp.model
 
     def one_client(params, x, y, size):
         n = x.shape[0]
-        take = min(batch_cap, n)
+        if n < batch_cap:
+            pad = batch_cap - n
+            x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+            y = jnp.pad(y, ((0, pad),))
+        take = batch_cap
         logits = small.forward(params, x[:take], cfg).astype(jnp.float32)
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, y[:take, None], axis=-1)[:, 0]

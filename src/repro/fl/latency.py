@@ -13,7 +13,9 @@ can be analysed independent of this container's CPU:
                    (downlink + local_compute · speed_i + uplink)
 
 with client speeds drawn from a heavy-tailed distribution (stragglers).
-``compare_selectors`` reproduces the Fig. 6 ordering analytically.
+``compare_selectors`` reproduces the Fig. 6 ordering analytically (or,
+with ``measured=True``, by executing a ``repro.api`` Plan sweep that
+shares one built dataset across all four selector cells).
 
 The same :class:`LatencyModel` also drives the compiled round engine's
 **in-scan heterogeneity scenarios** (``run_experiment(...,
@@ -114,23 +116,64 @@ class LatencyModel:
 
 
 def compare_selectors(rounds: int = 200, k: int = 5, seed: int = 0,
-                      model: LatencyModel = LatencyModel()) -> Dict[str, float]:
-    """Mean simulated round time per selector (the analytic Fig. 6).
+                      model: LatencyModel = LatencyModel(), *,
+                      measured: bool = False, base_exp=None,
+                      spec=None) -> Dict[str, float]:
+    """Mean round time per selector — a thin wrapper over a ``Plan`` sweep.
+
+    The selector axis comes from expanding
+    ``Plan(base).sweep(selector=[...])`` (``repro.api``), so this function
+    and the experiment drivers enumerate the same registry-backed
+    selector set.  Two modes:
+
+    * analytic (default) — each plan cell's selector is priced by the
+      :class:`LatencyModel` critical-path simulation (the paper's Fig. 6
+      protocol argument, independent of this container's CPU).
+    * ``measured=True`` — the plan executes through one
+      ``repro.api.Session``, which builds the synthetic dataset ONCE and
+      shares it across all four selector cells (the dataset build does
+      not depend on the selector), then reports each cell's measured
+      mean wall seconds per round.
 
     Args:
-        rounds: rounds to simulate per selector.
+        rounds: rounds to simulate (analytic) or run (measured) per
+            selector.
         k: cohort size per round.
-        seed: RNG seed (each selector re-seeds, so they see the same draws).
-        model: the latency model to sample from.
+        seed: RNG seed (each analytic cell re-seeds so every selector
+            sees the same draws; the measured plan runs this seed).
+        model: the latency model the analytic mode samples from.
+        measured: price selectors by really running them (see above).
+        base_exp: measured-mode base config; ``None`` uses a scaled-down
+            FEMNIST 2SPC config with ``n_clients = model.n_clients``.
+        spec: measured-mode ``repro.api.ExecutionSpec``; ``None`` uses
+            the compiled scan backend.
 
     Returns:
         ``{selector: mean_round_seconds}`` for the paper's four selectors.
     """
+    from repro.api import ExecutionSpec, Plan
+    from repro.api.capabilities import SELECTORS
+
+    if base_exp is None:
+        from repro.configs.paper import femnist_experiment
+        base_exp = dataclasses.replace(
+            femnist_experiment("2spc", "gpfl", rounds=rounds, seed=seed),
+            n_clients=model.n_clients, clients_per_round=k,
+            samples_per_client_mean=40, samples_per_client_std=10,
+            local_iters=3, eval_size=256)
+    plan = Plan(dataclasses.replace(base_exp, rounds=rounds, seed=seed)) \
+        .sweep(selector=list(SELECTORS))
+
+    if measured:
+        runset = plan.execute_with(spec or ExecutionSpec(backend="scan")).run()
+        return {r.config.selector: float(r.round_time_s.mean())
+                for r in runset}
+
     out = {}
-    for sel in ("random", "gpfl", "powd", "fedcor"):
+    for cell in plan.cells():
         rng = np.random.default_rng(seed)
-        ts = [model.round_time(sel, k, rng) for _ in range(rounds)]
-        out[sel] = float(np.mean(ts))
+        ts = [model.round_time(cell.selector, k, rng) for _ in range(rounds)]
+        out[cell.selector] = float(np.mean(ts))
     return out
 
 

@@ -104,26 +104,30 @@ def server_update_flat(w_matrix, w_prev, direction, *, lr: float,
                                                lr, gamma)
 
 
-def make_evaluator(exp: FLExperimentConfig, eval_x, eval_y,
-                   batch: int = 512) -> Callable:
-    """Build the global-model evaluator over a fixed held-out set.
+def make_table_evaluator(exp: FLExperimentConfig,
+                         batch: int = 512) -> Callable:
+    """Build an evaluator that takes the eval set as ARGUMENTS.
+
+    The closure-free twin of :func:`make_evaluator`: the eval arrays ride
+    in as runtime arguments instead of captured constants, so the same
+    traced evaluator can be ``vmap``-ed over a leading seed axis by the
+    batched multi-seed engine (``repro.fl.engine.BatchedSeedEngine``) —
+    each seed has its own held-out set.
 
     Args:
         exp: experiment config (the model architecture).
-        eval_x / eval_y: device-resident eval arrays, fixed for the run.
-        batch: static eval batch size — the internal loop is a Python
-            loop over a fixed set, so it unrolls at trace time and the
-            evaluator stays scan-safe (reused verbatim inside the
-            compiled engine's ``lax.scan`` body).
+        batch: static eval batch size (the internal loop unrolls at trace
+            time — eval shapes are static — so the evaluator stays
+            scan-safe).
 
     Returns:
-        ``evaluate(params) -> (accuracy, mean_loss)`` (jitted).
+        ``evaluate(params, eval_x, eval_y) -> (accuracy, mean_loss)``
+        (NOT jitted — it inlines into whatever traces it).
     """
     cfg = exp.model
-    n = eval_x.shape[0]
 
-    @jax.jit
-    def evaluate(params):
+    def evaluate(params, eval_x, eval_y):
+        n = eval_x.shape[0]
         correct = jnp.zeros((), jnp.float32)
         loss_sum = jnp.zeros((), jnp.float32)
         for ofs in range(0, n, batch):
@@ -138,3 +142,23 @@ def make_evaluator(exp: FLExperimentConfig, eval_x, eval_y,
         return correct / n, loss_sum / n
 
     return evaluate
+
+
+def make_evaluator(exp: FLExperimentConfig, eval_x, eval_y,
+                   batch: int = 512) -> Callable:
+    """Build the global-model evaluator over a fixed held-out set.
+
+    A jitted closure over :func:`make_table_evaluator` (one shared
+    implementation, so the host loop and the compiled engine evaluate
+    with bit-identical math).
+
+    Args:
+        exp: experiment config (the model architecture).
+        eval_x / eval_y: device-resident eval arrays, fixed for the run.
+        batch: static eval batch size.
+
+    Returns:
+        ``evaluate(params) -> (accuracy, mean_loss)`` (jitted).
+    """
+    ev = make_table_evaluator(exp, batch)
+    return jax.jit(lambda params: ev(params, eval_x, eval_y))

@@ -15,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api.capabilities import support_matrix
 from repro.configs.paper import FLExperimentConfig
 from repro.core import gp as gp_mod
 from repro.core.selector import RoundFeedback, make_selector, PowDSelector
@@ -24,22 +25,11 @@ from repro.fl.server import fedavg, make_evaluator, update_global_direction
 from repro.models import small
 
 
-#: Which knob works where.  Embedded verbatim in every compatibility
-#: error so a bad combination fails fast with the full picture instead of
-#: erroring deep inside the scan trace.
-SUPPORT_MATRIX = """\
-supported run_experiment combinations:
-  knob                    backend='python'   backend='scan'
-  selector=random         yes                yes (host-stream replay)
-  selector=gpfl           yes                yes (jitter-stream replay)
-  selector=powd           yes                yes (candidate stream + in-scan probe)
-  selector=fedcor         yes                yes (in-scan GP covariance)
-  param_layout='tree'     yes (only)         yes
-  param_layout='flat'     no                 yes
-  scenario='full'         yes                yes
-  scenario='availability' no                 yes (in-scan masks)
-  scenario='stragglers'   no                 yes (in-scan deadlines)
-  shard_clients > 1       no                 yes (flat layout, K % shards == 0)"""
+#: Which knob works where — DERIVED from the capability registry
+#: (``repro.api.capabilities.CAPABILITIES``), the same rows that drive
+#: the fail-fast validation, so this string can never drift from what
+#: actually runs.  Embedded verbatim in every compatibility error.
+SUPPORT_MATRIX = support_matrix()
 
 
 @dataclasses.dataclass
@@ -92,7 +82,15 @@ def _build_data(exp: FLExperimentConfig, seed: int):
     return store, jnp.asarray(eval_x), jnp.asarray(eval_y)
 
 
-def init_gp_phase(trainer, store, params, kinit, *, chunk: int = 25):
+#: init-phase chunk size (peak-memory knob).  The chunking — and the
+#: per-chunk ``fold_in`` offsets — must be identical everywhere the init
+#: phase runs (host loop, scan engine, batched multi-seed engine) or the
+#: seed GPs (and hence round-0 selections) diverge; every caller shares
+#: this constant.
+INIT_CHUNK = 25
+
+
+def init_gp_phase(trainer, store, params, kinit, *, chunk: int = INIT_CHUNK):
     """Algorithm 1's initialization phase: every client trains once from
     w^0 (in chunks, bounding peak memory) → the seed global direction and
     the seed GP score of every client.
@@ -118,25 +116,24 @@ def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
                    use_gp_kernel: bool = False, backend: str = "python",
                    param_layout: str = "tree", scenario="full",
                    shard_clients: int = 1) -> RunResult:
-    """Run one FL experiment.
+    """Run one FL experiment — a thin shim over a one-cell declarative
+    Plan (``repro.api``), kept for the legacy kwarg surface.
+
+    The kwargs map 1:1 onto a ``repro.api.ExecutionSpec``; the actual
+    dispatch (backend choice, validation against the capability
+    registry, dataset build) happens in ``repro.api.Session`` exactly as
+    it would for a multi-cell sweep, so ``run_experiment(exp, ...)`` and
+    a one-cell ``Plan(exp).execute_with(spec).run()`` are the same code
+    path (pinned by ``tests/test_api.py``).
 
     Args:
         exp: the experiment config (one cell of the paper's Table II).
         log_every: print progress every N rounds (0 = silent).
         use_gp_kernel: route GP scoring through the Pallas kernel.
-        backend: execution engine —
-
-            * ``"python"`` (default) — the reference host loop below: one
-              round at a time, numpy selectors, host-synced eval.
-            * ``"scan"`` — the compiled round engine
-              (``repro.fl.engine``): all T rounds inside one jitted
-              ``lax.scan``, state device-resident.  Replays every
-              selector's host selection history bit-identically via
-              precomputed host-RNG streams.
-        param_layout: scan-backend carry layout — ``"tree"`` walks
-            parameter pytrees (the parity oracle), ``"flat"`` runs the
-            server side on one contiguous ``repro.core.flat`` workspace
-            vector (same selection history, fewer HBM-bound ops/round).
+        backend: ``"python"`` (reference host loop,
+            :func:`run_python_loop`) or ``"scan"`` (the compiled round
+            engine, ``repro.fl.engine``).
+        param_layout: scan-backend carry layout (``"tree"`` | ``"flat"``).
         scenario: heterogeneity scenario (scan backend only) —
             ``"full"``, ``"availability"``, ``"stragglers"`` or a
             ``repro.fl.latency.ScenarioConfig``.
@@ -148,38 +145,40 @@ def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
 
     Raises:
         ValueError: an unsupported combination — raised BEFORE anything
-            compiles, with :data:`SUPPORT_MATRIX` in the message.
+            compiles, with the registry-derived :data:`SUPPORT_MATRIX`
+            in the message.
     """
-    scenario_kind = getattr(scenario, "kind", scenario or "full")
-    if backend == "scan":
-        from repro.fl.engine import run_experiment_scan
-        return run_experiment_scan(exp, log_every=log_every,
-                                   use_gp_kernel=use_gp_kernel,
-                                   param_layout=param_layout,
-                                   scenario=scenario,
-                                   shard_clients=shard_clients)
-    if backend != "python":
-        raise ValueError(f"unknown backend {backend!r}; expected 'python' "
-                         f"or 'scan'.\n{SUPPORT_MATRIX}")
-    if param_layout != "tree":
-        raise ValueError(
-            f"param_layout={param_layout!r} requires backend='scan'; the "
-            f"python host loop always runs the tree layout.\n"
-            f"{SUPPORT_MATRIX}")
-    if scenario_kind != "full":
-        raise ValueError(
-            f"scenario={scenario_kind!r} requires backend='scan' (the "
-            f"availability/straggler streams are scan inputs).\n"
-            f"{SUPPORT_MATRIX}")
-    if shard_clients != 1:
-        raise ValueError(
-            f"shard_clients={shard_clients} requires backend='scan' with "
-            f"param_layout='flat'.\n{SUPPORT_MATRIX}")
+    from repro.api import Plan, spec_from_kwargs
+    spec = spec_from_kwargs(backend=backend, param_layout=param_layout,
+                            scenario=scenario, shard_clients=shard_clients,
+                            use_gp_kernel=use_gp_kernel)
+    runset = Plan(exp).execute_with(spec, log_every=log_every).run()
+    return runset[0]
 
+
+def run_python_loop(exp: FLExperimentConfig, *, log_every: int = 0,
+                    use_gp_kernel: bool = False, data=None) -> RunResult:
+    """The reference host round loop (``backend="python"``).
+
+    One round at a time: numpy selector → device gather → jitted cohort
+    train → host-synced eval → numpy bandit update.  The parity oracle
+    every compiled path must replay bit-identically.
+
+    Args:
+        exp: the experiment config.
+        log_every: print progress every N rounds (0 = silent).
+        use_gp_kernel: route GP scoring through the Pallas kernel.
+        data: optional prebuilt ``(store, eval_x, eval_y)`` (a Session's
+            dataset cache); ``None`` builds from ``exp``.
+
+    Returns:
+        The :class:`RunResult` history.
+    """
     rng_np = np.random.default_rng(exp.seed)
     key = jax.random.key(exp.seed)
 
-    store, eval_x, eval_y = _build_data(exp, exp.seed)
+    store, eval_x, eval_y = data if data is not None \
+        else _build_data(exp, exp.seed)
     key, k0 = jax.random.split(key)
     params = small.init(k0, exp.model)
 

@@ -1,0 +1,270 @@
+"""The declarative experiment API (``repro.api``).
+
+Pins the PR-5 contracts:
+
+* the capability registry IS reality — every registered combination
+  runs, every unregistered one fails fast (no doc/behaviour drift);
+* a multi-seed Plan batched into one vmapped scan dispatch replays every
+  seed's sequential selection history bit-identically, for all four
+  selectors;
+* ``RunSet`` JSON persistence round-trips configs and histories;
+* ``run_experiment`` is exactly a one-cell Plan/Session (shim parity).
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+import jax
+import pytest
+
+from repro.api import (CAPABILITIES, ExecutionSpec, Plan, RunSet, Session,
+                       SpecView, support_matrix)
+from repro.api import capabilities as caps
+from repro.configs.paper import femnist_experiment, table2_plan
+from repro.fl import run_experiment
+
+
+def _tiny(exp, rounds=5):
+    return dataclasses.replace(
+        exp, rounds=rounds, n_clients=12, clients_per_round=3,
+        samples_per_client_mean=30, samples_per_client_std=8,
+        local_iters=2, local_batch_size=16, eval_size=200)
+
+
+def _spec_for(dim, value, backend):
+    """Build the (ExecutionSpec, selector) a capability row describes."""
+    sel, kw = "gpfl", dict(backend=backend)
+    if dim == "selector":
+        sel = value
+    elif dim == "param_layout":
+        kw["param_layout"] = value
+    elif dim == "scenario":
+        kw["scenario"] = value
+    elif dim == "shard_clients":
+        kw.update(shard_clients=2, param_layout="flat")
+    elif dim == "use_gp_kernel":
+        kw["use_gp_kernel"] = True
+    return ExecutionSpec(**kw), sel
+
+
+# ------------------------------------------------------- registry == reality
+
+@pytest.mark.parametrize("cap,backend", [
+    (c, b) for c, b in itertools.product(CAPABILITIES, ("python", "scan"))
+    if c.dim != "batch_seeds"   # exercised by the batching tests below
+])
+def test_registered_combinations_run_or_raise_as_declared(cap, backend):
+    """Every (capability row × backend) either RUNS or RAISES exactly as
+    the registry declares — the anti-drift pin for the derived matrix."""
+    value = cap.value.strip("'").split()[0].strip("(")
+    spec, sel = _spec_for(cap.dim, value, backend)
+    exp = _tiny(femnist_experiment("2spc", sel), rounds=2)
+    declared = backend in cap.backends
+    if not declared:
+        with pytest.raises(ValueError, match="supported run_experiment"):
+            Plan(exp).execute_with(spec).run()
+        return
+    if cap.dim == "shard_clients":
+        if jax.device_count() >= 2:
+            # K=3 doesn't divide 2 shards — use K=4 for the real run
+            exp = dataclasses.replace(exp, clients_per_round=4)
+            Plan(exp).execute_with(spec).run()
+        else:
+            # registry says yes, but this host lacks the devices: the
+            # engine must still fail fast with a clear ValueError
+            exp = dataclasses.replace(exp, clients_per_round=4)
+            with pytest.raises(ValueError, match="device"):
+                Plan(exp).execute_with(spec).run()
+        return
+    res = Plan(exp).execute_with(spec).run()
+    assert len(res) == 1 and np.all(np.isfinite(res[0].accuracy))
+
+
+def test_batched_seeds_require_scan_backend():
+    """The batch_seeds capability row: python declares no support."""
+    with pytest.raises(ValueError, match="batch"):
+        caps.validate(SpecView(backend="python", selector="gpfl",
+                               param_layout="tree", scenario_kind="full",
+                               batch_seeds=3))
+
+
+def test_support_matrix_covers_every_row():
+    txt = support_matrix()
+    for cap in CAPABILITIES:
+        assert cap.dim in txt
+    assert "supported run_experiment" in txt
+
+
+def test_selector_constants_agree_across_layers():
+    """configs.paper.SELECTORS (the science-side literal) must match the
+    registry's selector rows — the two lists cannot drift."""
+    from repro.configs.paper import SELECTORS as PAPER_SELECTORS
+    assert PAPER_SELECTORS == caps.SELECTORS
+    assert tuple(c.value for c in CAPABILITIES if c.dim == "selector") \
+        == caps.SELECTORS
+
+
+# -------------------------------------------- batched multi-seed bit parity
+
+def test_multi_seed_batched_scan_bit_identical_all_selectors():
+    """THE acceptance pin: a 4-selector × 3-seed Plan through Session
+    (one vmapped dispatch per selector) replays every per-seed selection
+    history bit-identically vs the corresponding sequential
+    ``run_experiment`` call — and the accuracy curves match exactly."""
+    base = _tiny(femnist_experiment("2spc", "gpfl"), rounds=5)
+    plan = (Plan(base)
+            .sweep(selector=["random", "gpfl", "powd", "fedcor"])
+            .seeds([0, 1, 2]))
+    runset = plan.execute_with(ExecutionSpec(backend="scan")).run()
+    assert len(runset) == 12
+    for res in runset:
+        seq = run_experiment(
+            dataclasses.replace(res.config, name=base.name),
+            backend="scan")
+        np.testing.assert_array_equal(
+            res.selections, seq.selections,
+            err_msg=f"{res.config.name}: batched selections diverged")
+        np.testing.assert_array_equal(res.accuracy, seq.accuracy)
+        np.testing.assert_array_equal(res.selection_counts,
+                                      seq.selection_counts)
+
+
+def test_batched_seeds_match_python_host_loop():
+    """Transitivity spot-check: the batched scan also replays the PYTHON
+    host loop (selection history) for gpfl."""
+    base = _tiny(femnist_experiment("2spc", "gpfl"), rounds=4)
+    runset = (Plan(base).seeds([0, 1])
+              .execute_with(ExecutionSpec(backend="scan")).run())
+    for res in runset:
+        ref = run_experiment(
+            dataclasses.replace(res.config, name=base.name),
+            backend="python")
+        np.testing.assert_array_equal(res.selections, ref.selections)
+
+
+def test_batch_seeds_false_forces_sequential():
+    """``batch_seeds=False`` still returns the same histories (it just
+    dispatches per-seed) — the baseline the sweep bench compares."""
+    base = _tiny(femnist_experiment("2spc", "gpfl"), rounds=3)
+    batched = (Plan(base).seeds(2)
+               .execute_with(ExecutionSpec(backend="scan")).run())
+    seq = (Plan(base).seeds(2)
+           .execute_with(ExecutionSpec(backend="scan",
+                                       batch_seeds=False)).run())
+    for b, s in zip(batched, seq):
+        np.testing.assert_array_equal(b.selections, s.selections)
+
+
+# ----------------------------------------------------------- plan expansion
+
+def test_plan_expands_grid_with_seed_innermost():
+    base = _tiny(femnist_experiment("2spc", "gpfl"))
+    plan = (Plan(base).sweep(selector=["gpfl", "random"])
+            .seeds([7, 9]))
+    cells = plan.cells()
+    assert [(c.selector, c.seed) for c in cells] == \
+        [("gpfl", 7), ("gpfl", 9), ("random", 7), ("random", 9)]
+    assert all("selector=" in c.name and "seed=" in c.name for c in cells)
+
+
+def test_plan_derive_links_fields():
+    plan = table2_plan(rounds=4, seeds=1, scale=lambda e: _tiny(e, 4))
+    cells = plan.cells()
+    assert len(cells) == 12   # 4 selectors × 3 partitions × 1 seed
+    for c in cells:
+        assert c.clients_per_round == (10 if c.partition == "1spc" else 5)
+
+
+def test_plan_rejects_bad_fields():
+    base = _tiny(femnist_experiment("2spc", "gpfl"))
+    with pytest.raises(ValueError, match="unknown sweep field"):
+        Plan(base).sweep(selectr=["gpfl"])
+    with pytest.raises(ValueError, match="seeds"):
+        Plan(base).sweep(seed=[0, 1])
+    with pytest.raises(ValueError, match="unknown derived field"):
+        Plan(base).derive(powerd=lambda c: 1)
+
+
+def test_plan_is_immutable_builder():
+    base = _tiny(femnist_experiment("2spc", "gpfl"))
+    p1 = Plan(base)
+    p2 = p1.sweep(selector=["gpfl", "random"])
+    assert len(p1.cells()) == 1 and len(p2.cells()) == 2
+
+
+# -------------------------------------------------------- session behaviour
+
+def test_session_reuses_dataset_across_selector_cells():
+    """The dataset build is selector-independent, so a selector sweep at
+    one seed builds its ClientStore exactly once."""
+    base = _tiny(femnist_experiment("2spc", "gpfl"), rounds=2)
+    sess = (Plan(base).sweep(selector=["random", "gpfl"])
+            .execute_with(ExecutionSpec(backend="scan")))
+    sess.run()
+    assert len(sess._data_cache) == 1
+
+
+def test_session_validates_every_cell_before_running():
+    base = _tiny(femnist_experiment("2spc", "gpfl"))
+    bad = ExecutionSpec(backend="python", param_layout="flat")
+    with pytest.raises(ValueError, match="param_layout"):
+        Plan(base).execute_with(bad)
+
+
+# ------------------------------------------------------- RunSet persistence
+
+def test_runset_save_load_roundtrip(tmp_path):
+    base = _tiny(femnist_experiment("2spc", "gpfl"), rounds=3)
+    runset = (Plan(base).sweep(selector=["gpfl", "random"])
+              .execute_with(ExecutionSpec(backend="scan")).run())
+    path = tmp_path / "runs.json"
+    runset.save(path)
+    loaded = RunSet.load(path)
+    assert len(loaded) == len(runset)
+    for a, b in zip(runset, loaded):
+        assert a.config == b.config
+        np.testing.assert_array_equal(a.accuracy, b.accuracy)
+        np.testing.assert_array_equal(a.loss, b.loss)
+        np.testing.assert_array_equal(a.selections, b.selections)
+        np.testing.assert_array_equal(a.selection_counts,
+                                      b.selection_counts)
+        np.testing.assert_array_equal(a.coverage, b.coverage)
+    # aggregations agree pre/post round-trip
+    assert runset.mean_final_accuracy() == loaded.mean_final_accuracy()
+    assert runset.accuracy_at_budget(0.5) == loaded.accuracy_at_budget(0.5)
+
+
+def test_runset_aggregation_helpers():
+    base = _tiny(femnist_experiment("2spc", "gpfl"), rounds=3)
+    runset = (Plan(base).sweep(selector=["gpfl", "random"]).seeds(2)
+              .execute_with(ExecutionSpec(backend="scan")).run())
+    table = runset.mean_final_accuracy(by="selector", last=2)
+    assert set(table) == {"gpfl", "random"}
+    for mean, std in table.values():
+        assert 0.0 <= mean <= 1.0 and std >= 0.0
+    frame = runset.to_frame()
+    assert len(frame) == 4
+    sub = runset.filter(selector="gpfl")
+    assert len(sub) == 2 and all(r.config.selector == "gpfl" for r in sub)
+
+
+def test_runset_load_rejects_unknown_schema(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"schema_version": 999, "runs": []}')
+    with pytest.raises(ValueError, match="schema_version"):
+        RunSet.load(path)
+
+
+# ------------------------------------------------------------- shim parity
+
+@pytest.mark.parametrize("backend", ["python", "scan"])
+def test_run_experiment_is_a_one_cell_session(backend):
+    """``run_experiment(exp, ...)`` ≡ one-cell Plan → Session → RunSet."""
+    exp = _tiny(femnist_experiment("2spc", "gpfl", seed=3), rounds=4)
+    via_shim = run_experiment(exp, backend=backend)
+    via_api = (Plan(exp).execute_with(ExecutionSpec(backend=backend))
+               .run()[0])
+    np.testing.assert_array_equal(via_shim.selections, via_api.selections)
+    np.testing.assert_array_equal(via_shim.accuracy, via_api.accuracy)
+    np.testing.assert_array_equal(via_shim.coverage, via_api.coverage)
+    assert via_shim.config == via_api.config
