@@ -9,16 +9,18 @@ engine (rounds/sec), the ``flat`` bench comparing the engine's tree
 vs flat parameter layouts (server-round scans + full engine; see
 ``_flat_micro``), the ``selectors`` bench comparing all four
 selectors across {python, scan} × {1, n_devices} with per-row selection
-parity flags (see ``_selector_micro``), and the ``sweep`` bench
+parity flags (see ``_selector_micro``), the ``sweep`` bench
 comparing the batched multi-seed vmapped scan against sequential
-per-seed dispatches (see ``_sweep_micro``).
+per-seed dispatches (see ``_sweep_micro``), and the ``resume`` bench
+recording the chunked-scan snapshot overhead and the kill → resume
+selection parity for all four selectors (see ``_resume_micro``).
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks everything
 (CI); ``--full`` runs paper-scale rounds; ``--json PATH`` additionally
 writes the engine/flat/selector/sweep/kernel results as machine-readable
 JSON (CI uploads ``BENCH_engine.json`` / ``BENCH_flat.json`` /
-``BENCH_selectors.json`` / ``BENCH_sweep.json`` as artifacts — the bench
-trajectory record).  The
+``BENCH_selectors.json`` / ``BENCH_sweep.json`` / ``BENCH_resume.json``
+as artifacts — the bench trajectory record).  The
 §Roofline analysis is a separate entrypoint (``benchmarks.roofline``)
 because it must own XLA_FLAGS=...device_count=512 at process start.
 """
@@ -473,6 +475,103 @@ def _sweep_micro(quick: bool = True):
     return rows
 
 
+def _resume_micro(quick: bool = True):
+    """Snapshot overhead + resume parity of the chunked scan engine.
+
+    The fault-tolerance claim (ISSUE 6): segmenting the single T-round
+    scan into ``snapshot_every=50`` chunks — with the carry written to
+    disk at every boundary — costs ≤10% rounds/sec on the
+    dispatch-bound config, and a run killed at T/2 then resumed from its
+    snapshot replays the uninterrupted selection history bit-identically.
+    One row per selector; both engines are warmed (compile excluded) so
+    the overhead measured is the real steady-state cost: the extra
+    per-chunk dispatches, the host device_get and the fsync'd file
+    writes.
+
+    ``resume_match``/``chunked_match`` are hard CI gates for all four
+    selectors; ``overhead_pct`` is recorded (warning-gated — shared
+    runners are noisy; the committed ``BENCH_resume.json`` documents the
+    ≤10% measurement).
+    """
+    import dataclasses
+    import os
+    import tempfile
+    from repro.configs.paper import SELECTORS, femnist_experiment
+    from repro.fl.engine import ScanEngine
+    from repro.fl.simulation import _build_data
+
+    rounds = 60 if quick else 120
+    every = 50
+    kill_at = rounds // 2
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        data = None
+        for sel in SELECTORS:
+            exp = femnist_experiment("2spc", sel, rounds=rounds, seed=0)
+            # realistic per-round work (client count / local iters in the
+            # paper's regime, scaled): the boundary cost — host sync,
+            # device_get, fsync'd write — must amortize against real
+            # training rounds, not against an empty dispatch
+            exp = dataclasses.replace(
+                exp, n_clients=50, clients_per_round=8,
+                samples_per_client_mean=60, samples_per_client_std=12,
+                local_iters=8, local_batch_size=32, eval_size=512)
+            if data is None:  # selector never enters the dataset build
+                data = _build_data(exp, exp.seed)
+
+            def timed(eng, repeats=2):
+                # best-of-N: one warm run compiles, the min of the next N
+                # is the steady-state wall (shared runners are noisy)
+                eng.run()
+                best, res = float("inf"), None
+                for _ in range(repeats):
+                    t0 = time.time()
+                    res = eng.run()
+                    best = min(best, time.time() - t0)
+                return res, best
+
+            base_eng = ScanEngine(exp, data=data)
+            base, base_wall = timed(base_eng)
+
+            path = os.path.join(td, f"{sel}.ckpt")
+            snap_eng = ScanEngine(exp, data=data, snapshot_every=every,
+                                  snapshot_path=path)
+            snap, snap_wall = timed(snap_eng)
+            chunked_match = bool(
+                np.array_equal(base.selections, snap.selections))
+
+            os.remove(path)
+            kill_eng = ScanEngine(exp, data=data, snapshot_every=every,
+                                  snapshot_path=path)
+            kill_eng._jit = snap_eng._jit        # session-style jit reuse
+            kill_eng.run(until_round=kill_at)    # "killed" at T/2
+            res_eng = ScanEngine(exp, data=data, snapshot_every=every,
+                                 snapshot_path=path)
+            res_eng._jit = snap_eng._jit
+            resumed = res_eng.run(resume=True)
+            resume_match = bool(
+                np.array_equal(base.selections, resumed.selections)
+                and np.array_equal(base.accuracy, resumed.accuracy))
+
+            base_rps = rounds / base_wall
+            snap_rps = rounds / snap_wall
+            rows.append({
+                "name": f"resume_{sel}", "selector": sel,
+                "rounds": rounds, "snapshot_every": every,
+                "kill_at": kill_at, "config": "paper_regime_scaled",
+                "timing": "warm steady-state (compile excluded; snapshot "
+                          "timing includes the fsync'd carry writes)",
+                "baseline_wall_s": base_wall,
+                "snapshot_wall_s": snap_wall,
+                "baseline_rounds_per_s": base_rps,
+                "snapshot_rounds_per_s": snap_rps,
+                "overhead_pct": (base_rps - snap_rps) / base_rps * 100.0,
+                "chunked_match": chunked_match,
+                "resume_match": resume_match,
+            })
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -481,7 +580,7 @@ def main(argv=None) -> None:
                     help="paper-scale rounds (hours)")
     ap.add_argument("--only", default=None,
                     help="comma-list: table2,fig4,fig5,fig6,fig7,kernels,"
-                         "engine,flat,selectors,sweep")
+                         "engine,flat,selectors,sweep,resume")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write engine/flat/kernel results as JSON "
                          "(e.g. BENCH_engine.json, BENCH_flat.json)")
@@ -492,7 +591,7 @@ def main(argv=None) -> None:
     rounds = 12 if args.quick else 60
     only = set(args.only.split(",")) if args.only else \
         {"table2", "fig4", "fig5", "fig6", "fig7", "kernels", "engine",
-         "flat", "selectors", "sweep"}
+         "flat", "selectors", "sweep", "resume"}
     bench_data = {}
 
     print("name,us_per_call,derived")
@@ -573,6 +672,18 @@ def main(argv=None) -> None:
                   f"batched_rps={r['batched_rounds_per_s']:.2f};"
                   f"speedup={r['speedup']:.2f};"
                   f"selections_match={int(r['selections_match'])}",
+                  flush=True)
+
+    if "resume" in only:
+        resume_rows = _resume_micro(quick=args.quick)
+        bench_data["resume"] = resume_rows
+        for r in resume_rows:
+            print(f"{r['name']},{r['snapshot_wall_s'] / r['rounds'] * 1e6:.0f},"
+                  f"baseline_rps={r['baseline_rounds_per_s']:.2f};"
+                  f"snapshot_rps={r['snapshot_rounds_per_s']:.2f};"
+                  f"overhead_pct={r['overhead_pct']:.1f};"
+                  f"chunked_match={int(r['chunked_match'])};"
+                  f"resume_match={int(r['resume_match'])}",
                   flush=True)
 
     if "kernels" in only:

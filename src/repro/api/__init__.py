@@ -13,6 +13,9 @@ Four pieces (see ARCHITECTURE.md §API layer):
   cells.
 * :class:`RunSet` — stacked results with Table II / Fig. 4 aggregation
   helpers and JSON persistence.
+* :class:`RunJournal` — append-only, fsync'd on-disk log of finished
+  cells; a restarted ``Session(journal=path)`` skips journaled cells, so
+  a killed sweep loses at most the in-flight cell.
 
 ``repro.fl.run_experiment(...)`` remains as a thin shim over a one-cell
 Plan, so the legacy kwarg surface keeps working.
@@ -20,6 +23,7 @@ Plan, so the legacy kwarg surface keeps working.
 from repro.api.capabilities import (BACKENDS, CAPABILITIES, PARAM_LAYOUTS,
                                     SCENARIO_KINDS, SELECTORS, Capability,
                                     SpecView, support_matrix, validate)
+from repro.api.journal import RunJournal, cell_fingerprint
 from repro.api.plan import Plan
 from repro.api.results import RunSet
 from repro.api.session import Session
@@ -28,5 +32,6 @@ from repro.api.spec import ExecutionSpec, spec_from_kwargs
 __all__ = [
     "BACKENDS", "CAPABILITIES", "PARAM_LAYOUTS", "SCENARIO_KINDS",
     "SELECTORS", "Capability", "SpecView", "support_matrix", "validate",
-    "Plan", "RunSet", "Session", "ExecutionSpec", "spec_from_kwargs",
+    "Plan", "RunJournal", "RunSet", "Session", "ExecutionSpec",
+    "cell_fingerprint", "spec_from_kwargs",
 ]

@@ -72,6 +72,10 @@ class SpecView:
             checks).
         batch_seeds: number of seeds batched into one vmapped dispatch
             (1 = a plain single-seed run).
+        snapshot_every: snapshot the scan carry every N rounds (0 = the
+            single unsegmented scan; > 0 segments it into chunked scans).
+        resume: restore a ``snapshot_every`` run from its snapshot file
+            instead of starting from round 0.
     """
     backend: str
     selector: str
@@ -81,6 +85,8 @@ class SpecView:
     use_gp_kernel: bool = False
     clients_per_round: int = 1
     batch_seeds: int = 1
+    snapshot_every: int = 0
+    resume: bool = False
 
 
 def _shard_constraint(v: SpecView) -> Optional[str]:
@@ -96,6 +102,27 @@ def _shard_constraint(v: SpecView) -> Optional[str]:
         return (f"batch_seeds={v.batch_seeds} cannot combine with "
                 f"shard_clients={v.shard_clients}: the vmapped seed axis "
                 f"and the shard_map cohort mesh would nest")
+    return None
+
+
+def _snapshot_constraint(v: SpecView) -> Optional[str]:
+    """Structural rules for carry snapshots (sequential, unsharded)."""
+    if v.batch_seeds > 1:
+        return (f"snapshot_every={v.snapshot_every} cannot combine with a "
+                f"batched multi-seed dispatch (batch_seeds={v.batch_seeds}); "
+                f"a Session runs snapshotting cells sequentially")
+    if v.shard_clients > 1:
+        return (f"snapshot_every={v.snapshot_every} cannot combine with "
+                f"shard_clients={v.shard_clients}: the snapshot is a "
+                f"host-side carry copy, not a sharded checkpoint")
+    return None
+
+
+def _resume_constraint(v: SpecView) -> Optional[str]:
+    """Resume only restores what a snapshotting run wrote."""
+    if v.snapshot_every <= 0:
+        return ("resume=True requires snapshot_every > 0 (there is no "
+                "snapshot file to restore without a snapshot cadence)")
     return None
 
 
@@ -124,6 +151,12 @@ CAPABILITIES: Tuple[Capability, ...] = (
     Capability("use_gp_kernel", "True", {"python": "yes", "scan": "yes"}),
     Capability("batch_seeds", "> 1 (Session)",
                {"scan": "yes (vmapped seed axis, shard_clients == 1)"}),
+    Capability("snapshot_every", "> 0",
+               {"scan": "yes (chunked scan + carry snapshots)"},
+               constraint=_snapshot_constraint),
+    Capability("resume", "True",
+               {"scan": "yes (restores snapshot_every checkpoints)"},
+               constraint=_resume_constraint),
 )
 
 # the per-selector rows ARE the selector registry — a row added or
@@ -225,3 +258,24 @@ def validate(view: SpecView) -> None:
         if view.backend not in row.backends:
             fail(f"batched multi-seed dispatch (batch_seeds="
                  f"{view.batch_seeds}) requires backend='scan'.")
+
+    if view.snapshot_every != 0:
+        if view.snapshot_every < 0:
+            fail(f"snapshot_every must be >= 0; got {view.snapshot_every}.")
+        row = next(c for c in CAPABILITIES if c.dim == "snapshot_every")
+        if view.backend not in row.backends:
+            fail(f"snapshot_every={view.snapshot_every} requires "
+                 f"backend='scan' (the python host loop has no scan carry "
+                 f"to snapshot).")
+        err = row.constraint(view) if row.constraint else None
+        if err:
+            fail(err + ".")
+
+    if view.resume:
+        row = next(c for c in CAPABILITIES if c.dim == "resume")
+        if view.backend not in row.backends:
+            fail("resume=True requires backend='scan' (resume restores a "
+                 "snapshot_every scan carry).")
+        err = row.constraint(view) if row.constraint else None
+        if err:
+            fail(err + ".")

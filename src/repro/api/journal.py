@@ -1,0 +1,148 @@
+"""``RunJournal`` — an append-only, crash-safe on-disk log of finished cells.
+
+A Table-II-style study is thousands of cells × seeds and a ``Session``
+used to materialise its results only at the end — one SIGKILL and hours
+of compiled scan work rerun from zero.  The journal makes cell completion
+durable the moment it happens:
+
+* **one JSON line per completed cell** — the same record shape as
+  ``RunSet.save`` (config dict + full metric histories, see
+  ``repro.api.results.run_to_record``), prefixed with a schema version
+  and the cell's config fingerprint;
+* **fsync'd appends** — :meth:`RunJournal.append` writes the line with
+  ``O_APPEND`` and ``fsync``s before returning, so a kill at ANY point
+  loses at most the cell that was in flight, never a finished one;
+* **torn-line tolerance** — a writer killed mid-``write`` leaves a
+  truncated final line; :meth:`records` skips unparseable lines, and the
+  next :meth:`append` first terminates any torn tail with a newline so
+  the garbage can never splice into a good record.
+
+A ``Session(..., journal=path)`` appends every finished cell here and,
+on restart, skips cells whose fingerprint is already journaled — the
+restart completes exactly the remaining cells (pinned by
+``tests/test_journal_crash.py``, which SIGKILLs a live sweep).
+
+Single-writer by design: concurrent sweeps must use one journal file per
+process (the multi-process executor ``repro.launch.sweep`` shards one
+journal per worker and merges).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, Iterator, List, Set
+
+from repro.api.results import run_from_record, run_to_record
+
+#: journal line schema version, stamped into every record.
+JOURNAL_VERSION = 1
+
+
+def cell_fingerprint(config) -> str:
+    """The identity of a cell: sha1 over its full config (sorted JSON).
+
+    Two cells share a fingerprint iff their ``FLExperimentConfig``s are
+    equal — the key a restarted Session uses to decide "already done".
+
+    Args:
+        config: the cell's ``FLExperimentConfig``.
+
+    Returns:
+        A 40-hex-char digest string.
+    """
+    blob = json.dumps(dataclasses.asdict(config), sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+class RunJournal:
+    """Append-only JSONL journal of completed runs at one file path.
+
+    Args:
+        path: the journal file (created on first append).
+    """
+
+    def __init__(self, path: str):
+        """Bind the journal to ``path`` (nothing is opened yet)."""
+        self.path = str(path)
+
+    # ------------------------------------------------------------- write
+    def _tail_is_torn(self) -> bool:
+        """True when the file ends mid-line (a crashed writer's tail)."""
+        try:
+            with open(self.path, "rb") as fh:
+                fh.seek(-1, os.SEEK_END)
+                return fh.read(1) != b"\n"
+        except (FileNotFoundError, OSError):
+            # missing or empty file: nothing torn to repair
+            return False
+
+    def append(self, result) -> str:
+        """Durably journal one finished run (fsync'd single-line append).
+
+        Args:
+            result: the cell's ``repro.fl.simulation.RunResult``.
+
+        Returns:
+            The appended cell's fingerprint.
+        """
+        key = cell_fingerprint(result.config)
+        rec = {"v": JOURNAL_VERSION, "key": key,
+               "name": result.config.name, "run": run_to_record(result)}
+        payload = (json.dumps(rec, separators=(",", ":")) + "\n").encode()
+        if self._tail_is_torn():
+            # terminate the torn tail: the garbage becomes one complete,
+            # unparseable line that records() skips, instead of splicing
+            # into the front of THIS record
+            payload = b"\n" + payload
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        fd = os.open(self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT,
+                     0o644)
+        try:
+            os.write(fd, payload)
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        return key
+
+    # -------------------------------------------------------------- read
+    def records(self) -> Iterator[dict]:
+        """Yield every parseable journal record, in file order.
+
+        Unparseable lines (a torn tail from a killed writer, or garbage)
+        are skipped silently — the cells they would have recorded simply
+        rerun on resume.
+        """
+        try:
+            fh = open(self.path, "r")
+        except FileNotFoundError:
+            return
+        with fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if not isinstance(rec, dict) or rec.get("v") != \
+                        JOURNAL_VERSION or "key" not in rec or "run" not in rec:
+                    continue
+                yield rec
+
+    def keys(self) -> Set[str]:
+        """The set of journaled cell fingerprints."""
+        return {rec["key"] for rec in self.records()}
+
+    def results_by_key(self) -> Dict[str, object]:
+        """Journaled runs as ``{fingerprint: RunResult}`` (last wins)."""
+        return {rec["key"]: run_from_record(rec["run"])
+                for rec in self.records()}
+
+    def results(self) -> List:
+        """Journaled ``RunResult``s in append order."""
+        return [run_from_record(rec["run"]) for rec in self.records()]

@@ -36,6 +36,36 @@ def _config_from_dict(d: dict):
     return FLExperimentConfig(**{**d, "model": SmallModelConfig(**model)})
 
 
+def run_to_record(run) -> dict:
+    """One run as a JSON-able record: config dict + full metric arrays.
+
+    The single serialization shape shared by :meth:`RunSet.save` and the
+    append-only :class:`repro.api.RunJournal` (one journal line per
+    record), so an archived sweep and a journaled one round-trip through
+    the same code.
+    """
+    rec = {"config": _config_to_dict(run.config)}
+    for f in _ARRAY_FIELDS:
+        rec[f] = np.asarray(getattr(run, f)).tolist()
+    return rec
+
+
+def run_from_record(rec: dict):
+    """Rebuild a ``repro.fl.simulation.RunResult`` from a saved record
+    (the inverse of :func:`run_to_record`; selections/counts as int64,
+    metrics float32)."""
+    from repro.fl.simulation import RunResult
+    return RunResult(
+        config=_config_from_dict(rec["config"]),
+        accuracy=np.asarray(rec["accuracy"], np.float32),
+        loss=np.asarray(rec["loss"], np.float32),
+        selections=np.asarray(rec["selections"], np.int64),
+        round_time_s=np.asarray(rec["round_time_s"], np.float32),
+        selection_counts=np.asarray(rec["selection_counts"], np.int64),
+        coverage=np.asarray(rec["coverage"], np.float32),
+    )
+
+
 class RunSet:
     """An ordered collection of run histories (one per plan cell).
 
@@ -149,12 +179,8 @@ class RunSet:
         Args:
             path: output file path.
         """
-        payload = {"schema_version": SCHEMA_VERSION, "runs": []}
-        for r in self.runs:
-            rec = {"config": _config_to_dict(r.config)}
-            for f in _ARRAY_FIELDS:
-                rec[f] = np.asarray(getattr(r, f)).tolist()
-            payload["runs"].append(rec)
+        payload = {"schema_version": SCHEMA_VERSION,
+                   "runs": [run_to_record(r) for r in self.runs]}
         with open(path, "w") as fh:
             json.dump(payload, fh)
 
@@ -172,23 +198,10 @@ class RunSet:
         Raises:
             ValueError: the file's schema version is unknown.
         """
-        from repro.fl.simulation import RunResult
         with open(path) as fh:
             payload = json.load(fh)
         if payload.get("schema_version") != SCHEMA_VERSION:
             raise ValueError(
                 f"unknown RunSet schema_version "
                 f"{payload.get('schema_version')!r} in {path}")
-        runs = []
-        for rec in payload["runs"]:
-            runs.append(RunResult(
-                config=_config_from_dict(rec["config"]),
-                accuracy=np.asarray(rec["accuracy"], np.float32),
-                loss=np.asarray(rec["loss"], np.float32),
-                selections=np.asarray(rec["selections"], np.int64),
-                round_time_s=np.asarray(rec["round_time_s"], np.float32),
-                selection_counts=np.asarray(rec["selection_counts"],
-                                            np.int64),
-                coverage=np.asarray(rec["coverage"], np.float32),
-            ))
-        return cls(runs)
+        return cls([run_from_record(rec) for rec in payload["runs"]])

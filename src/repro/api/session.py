@@ -19,14 +19,25 @@ The Session owns execution strategy so the Plan can stay declarative:
   arguments and never reads ``exp.seed``, so the first engine's
   compiled function serves every sibling (re-tracing only if a seed's
   table capacity differs).
+* **Fault tolerance** — ``journal=path`` appends every finished cell to
+  an fsync'd :class:`repro.api.RunJournal`; a restarted Session skips
+  journal-completed cells, so a SIGKILL mid-sweep loses at most the
+  in-flight cell (or in-flight batched dispatch).
+  ``spec.snapshot_every > 0`` additionally snapshots each cell's scan
+  carry every N rounds to ``spec.snapshot_dir`` and ``spec.resume=True``
+  restores mid-training cells bit-identically (see
+  ``repro.fl.engine.ScanEngine.run``).
 
 Results come back as a :class:`repro.api.RunSet` in plan order.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+import os
+import re
+from typing import Dict, List, Optional, Tuple
 
+from repro.api.journal import RunJournal, cell_fingerprint
 from repro.api.results import RunSet
 from repro.api.spec import ExecutionSpec
 
@@ -37,6 +48,11 @@ def _data_key(exp) -> Tuple:
     return (exp.model.name, exp.n_clients, exp.samples_per_client_mean,
             exp.samples_per_client_std, exp.eval_size, exp.partition,
             exp.dirichlet_zeta, exp.seed)
+
+
+def _slug(name: str) -> str:
+    """A filesystem-safe tag derived from a cell name."""
+    return re.sub(r"[^A-Za-z0-9._-]+", "_", name) or "cell"
 
 
 class Session:
@@ -50,17 +66,23 @@ class Session:
         log_every: per-round progress printing (0 = silent).  Forced
             silent inside batched multi-seed dispatches (interleaved
             vmapped prints would be unreadable).
+        journal: optional path to an append-only
+            :class:`repro.api.RunJournal`.  Finished cells are fsync'd
+            there as they complete, and ``run()`` skips cells the
+            journal already records — restart-safe sweeps.
 
     Raises:
         ValueError: some cell × spec combination is not registered as
             supported (message carries the derived support matrix).
     """
 
-    def __init__(self, plan, spec: ExecutionSpec, *, log_every: int = 0):
+    def __init__(self, plan, spec: ExecutionSpec, *, log_every: int = 0,
+                 journal: Optional[str] = None):
         """Expand the plan and fail fast on unsupported combinations."""
         self.plan = plan
         self.spec = spec
         self.log_every = log_every
+        self.journal = RunJournal(journal) if journal else None
         self.cells = plan.cells()
         self._groups = self._group_cells()
         for idxs, base in self._groups:
@@ -83,7 +105,8 @@ class Session:
     def _batchable(self, idxs: List[int]) -> bool:
         """Can this group collapse into one vmapped multi-seed dispatch?"""
         return (self.spec.backend == "scan" and self.spec.batch_seeds
-                and self.spec.shard_clients == 1 and len(idxs) > 1)
+                and self.spec.shard_clients == 1
+                and self.spec.snapshot_every == 0 and len(idxs) > 1)
 
     def _data_for(self, exp):
         """Build (or reuse) the cell's dataset; cached by data key."""
@@ -93,8 +116,26 @@ class Session:
             self._data_cache[key] = _build_data(exp, exp.seed)
         return self._data_cache[key]
 
+    def _snapshot_path(self, cell) -> str:
+        """This cell's snapshot file under ``spec.snapshot_dir`` —
+        tagged with the config fingerprint so no two cells collide."""
+        fp = cell_fingerprint(cell)
+        return os.path.join(self.spec.snapshot_dir,
+                            f"{_slug(cell.name)}-{fp[:10]}.ckpt")
+
+    def _finish(self, i: int, results: List, res) -> None:
+        """Record a finished cell: result slot + durable journal line."""
+        results[i] = res
+        if self.journal is not None:
+            self.journal.append(res)
+
     def run(self) -> RunSet:
         """Execute every cell and return the results in plan order.
+
+        With a journal attached, cells whose fingerprint is already
+        journaled are NOT re-run — their recorded results fill the
+        returned set, and only the remaining cells execute (each one
+        journaled the moment it finishes).
 
         Returns:
             A :class:`repro.api.RunSet` with one
@@ -103,34 +144,55 @@ class Session:
         from repro.fl.engine import BatchedSeedEngine, ScanEngine
         from repro.fl.simulation import run_python_loop
 
+        done = self.journal.results_by_key() if self.journal else {}
         results = [None] * len(self.cells)
+        skipped = 0
         for idxs, _ in self._groups:
-            if self._batchable(idxs):
-                cells = [self.cells[i] for i in idxs]
+            pending = []
+            for i in idxs:
+                key = cell_fingerprint(self.cells[i])
+                if key in done:
+                    results[i] = done[key]
+                    skipped += 1
+                else:
+                    pending.append(i)
+            if not pending:
+                continue
+            if self._batchable(idxs) and len(pending) > 1:
+                cells = [self.cells[i] for i in pending]
                 eng = BatchedSeedEngine(
                     cells, data_provider=self._data_for,
                     **self.spec.engine_kwargs())
-                for i, res in zip(idxs, eng.run()):
-                    results[i] = res
+                for i, res in zip(pending, eng.run()):
+                    self._finish(i, results, res)
                 continue
-            shared_scan = None
-            for i in idxs:
+            shared_jit = None
+            for i in pending:
                 cell = self.cells[i]
                 if self.spec.backend == "python":
-                    results[i] = run_python_loop(
+                    self._finish(i, results, run_python_loop(
                         cell, log_every=self.log_every,
                         use_gp_kernel=self.spec.use_gp_kernel,
-                        data=self._data_for(cell))
+                        data=self._data_for(cell)))
+                    continue
+                kwargs = self.spec.engine_kwargs()
+                if self.spec.snapshot_every:
+                    kwargs.update(snapshot_every=self.spec.snapshot_every,
+                                  snapshot_path=self._snapshot_path(cell))
+                eng = ScanEngine(cell, log_every=self.log_every,
+                                 data=self._data_for(cell), **kwargs)
+                # the scan body never reads exp.seed and takes the
+                # tables as arguments, so one compiled scan (full or
+                # chunked) serves every cell of this
+                # config-modulo-seed group — engines share the lazily
+                # filled jit cache
+                if shared_jit is None:
+                    shared_jit = eng._jit
                 else:
-                    eng = ScanEngine(cell, log_every=self.log_every,
-                                     data=self._data_for(cell),
-                                     **self.spec.engine_kwargs())
-                    # the scan body never reads exp.seed and takes the
-                    # tables as arguments, so one compiled scan serves
-                    # every cell of this config-modulo-seed group
-                    if shared_scan is None:
-                        shared_scan = eng._compiled()
-                    else:
-                        eng._scan = shared_scan
-                    results[i] = eng.run()
+                    eng._jit = shared_jit
+                self._finish(i, results, eng.run(resume=self.spec.resume))
+        if self.journal is not None and skipped:
+            print(f"[session] journal {self.journal.path}: skipped "
+                  f"{skipped} completed cell(s), ran "
+                  f"{len(self.cells) - skipped}")
         return RunSet(results)

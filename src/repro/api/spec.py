@@ -38,6 +38,15 @@ class ExecutionSpec:
             differ only in seed into ONE vmapped scan dispatch (scan
             backend, unsharded).  ``False`` forces sequential per-seed
             dispatches (e.g. to baseline the batching speedup).
+        snapshot_every: > 0 segments each cell's scan into chunks of N
+            rounds and writes the carry to disk at every boundary
+            (fault-tolerant runs; resumes are bit-identical).  Disables
+            seed batching (snapshotting cells run sequentially).
+        snapshot_dir: directory the per-cell snapshot files live in
+            (required when ``snapshot_every > 0``).
+        resume: restore each cell from its snapshot file when one
+            exists (a fresh run otherwise) — makes restart scripts
+            idempotent.
     """
     backend: str = "python"
     param_layout: str = "tree"
@@ -45,6 +54,9 @@ class ExecutionSpec:
     shard_clients: int = 1
     use_gp_kernel: bool = False
     batch_seeds: bool = True
+    snapshot_every: int = 0
+    snapshot_dir: Optional[str] = None
+    resume: bool = False
 
     @property
     def scenario_kind(self) -> str:
@@ -69,7 +81,9 @@ class ExecutionSpec:
             shard_clients=self.shard_clients,
             use_gp_kernel=self.use_gp_kernel,
             clients_per_round=exp.clients_per_round,
-            batch_seeds=n_seeds if self.batch_seeds else 1)
+            batch_seeds=n_seeds if self.batch_seeds else 1,
+            snapshot_every=self.snapshot_every,
+            resume=self.resume)
 
     def validate(self, exp, n_seeds: int = 1) -> None:
         """Fail fast (before anything compiles) on unsupported combos.
@@ -83,6 +97,10 @@ class ExecutionSpec:
                 runnable; the message carries the derived support matrix.
         """
         caps.validate(self.view(exp, n_seeds))
+        if self.snapshot_every > 0 and not self.snapshot_dir:
+            raise ValueError(
+                f"snapshot_every={self.snapshot_every} needs a "
+                f"snapshot_dir to write the per-cell snapshot files to")
 
     def engine_kwargs(self) -> dict:
         """The spec as ``ScanEngine`` keyword arguments."""

@@ -59,8 +59,13 @@ def _flatten_with_paths(tree):
 
 
 def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
-                    level: int = 3) -> str:
-    """Serialise a pytree of arrays to ``path`` (atomic rename)."""
+                    level: int = 3, meta: Optional[dict] = None) -> str:
+    """Serialise a pytree of arrays to ``path`` (atomic rename).
+
+    ``meta`` optionally attaches a small msgpack-able dict (e.g. a config
+    fingerprint guarding resumes) stored alongside the arrays; read it
+    back with ``restore_checkpoint(..., return_meta=True)``.
+    """
     flat = _flatten_with_paths(tree)
     payload = {}
     for key, leaf in flat.items():
@@ -70,7 +75,7 @@ def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
             "shape": list(arr.shape),
             "data": arr.tobytes(),
         }
-    blob = msgpack.packb({"step": step, "arrays": payload})
+    blob = msgpack.packb({"step": step, "meta": meta, "arrays": payload})
     blob = _compress(blob, level)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -80,10 +85,12 @@ def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
     return path
 
 
-def restore_checkpoint(path: str, like, *, shardings=None):
+def restore_checkpoint(path: str, like, *, shardings=None,
+                       return_meta: bool = False):
     """Restore into the structure of ``like``.  When ``shardings`` (a matching
     pytree of jax.sharding.Sharding) is given, each leaf is device_put with
-    its target sharding (resharding on restore)."""
+    its target sharding (resharding on restore).  ``return_meta=True``
+    appends the checkpoint's meta dict to the return tuple."""
     with open(path, "rb") as f:
         blob = _decompress(f.read())
     obj = msgpack.unpackb(blob)
@@ -121,4 +128,6 @@ def restore_checkpoint(path: str, like, *, shardings=None):
             vals.append(arr)
         return jax.tree_util.tree_unflatten(treedef, vals)
 
+    if return_meta:
+        return rebuild(like), obj.get("step"), obj.get("meta")
     return rebuild(like), obj.get("step")

@@ -95,6 +95,21 @@ scan fresh ``jnp.copy`` buffers so the engine stays re-runnable (and the
 cached initial state stays pristine); on backends without donation
 support (CPU) XLA silently falls back to a copy.
 
+Fault tolerance (``snapshot_every > 0``): the single T-round scan is
+segmented into chunked scans of N rounds sharing the SAME jitted round
+body, so the composition replays the unsegmented run's selection history
+and final params bit-identically (chunk boundaries only change where the
+host syncs, never the per-round math; pinned by ``tests/test_resume.py``
+for all four selectors and both layouts).  After every chunk the full
+``RoundCarry`` — plus the metric history so far — is written to
+``snapshot_path`` via ``repro.checkpoint.msgpack_ckpt`` (atomic rename,
+config-fingerprint meta).  The chunked dispatch donates the whole carry;
+the snapshot ``jax.device_get``s it to host FIRST, so the saved bytes
+are never aliased by the next chunk (donated-buffer-safe).
+``run(resume=True)`` restores the newest snapshot and finishes the
+remaining rounds; ``run(until_round=k)`` stops (and snapshots) at round
+k, which is how a budgeted/preempted run hands off to a later resume.
+
 Batched multi-seed dispatch (``BatchedSeedEngine`` /
 ``run_batched_seeds``): the round-scan takes the client tables and the
 eval set as runtime ARGUMENTS, so S runs differing only in seed vmap
@@ -108,8 +123,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import json
+import os
 import time
-from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, \
+    Sequence, Union
 
 import numpy as np
 import jax
@@ -117,6 +136,8 @@ import jax.numpy as jnp
 
 from repro.api.capabilities import PARAM_LAYOUTS, SELECTORS, SpecView
 from repro.api.capabilities import validate as validate_capabilities
+from repro.checkpoint.msgpack_ckpt import (restore_checkpoint,
+                                           save_checkpoint)
 from repro.configs.paper import FLExperimentConfig
 from repro.core import flat as flat_mod
 from repro.core import gp as gp_mod
@@ -166,6 +187,36 @@ class RoundCarry(NamedTuple):
     fc_prev: jnp.ndarray      # (N,) FedCor previous loss probe
 
 
+def _copy_carry(c: RoundCarry) -> RoundCarry:
+    """A fresh-buffer deep copy of a carry (safe to donate).  PRNG keys
+    are copied through their raw key data (extended dtypes have no
+    ``jnp.copy``)."""
+    cp = functools.partial(jax.tree.map, jnp.copy)
+    return RoundCarry(
+        params=cp(c.params), direction=cp(c.direction), bandit=cp(c.bandit),
+        latest_gp=jnp.copy(c.latest_gp), seen=jnp.copy(c.seen),
+        key=jax.random.wrap_key_data(jnp.copy(jax.random.key_data(c.key))),
+        fc_cov=jnp.copy(c.fc_cov), fc_prev=jnp.copy(c.fc_prev))
+
+
+def _carry_to_tree(c: RoundCarry) -> dict:
+    """The carry as a plain-dict pytree of ordinary arrays — NamedTuples
+    unpacked and the PRNG key swapped for its uint32 key data, so the
+    msgpack checkpointer round-trips every leaf bit-exactly."""
+    d = c._asdict()
+    d["bandit"] = d["bandit"]._asdict()
+    d["key"] = jax.random.key_data(d["key"])
+    return d
+
+
+def _tree_to_carry(tree: dict) -> RoundCarry:
+    """Inverse of :func:`_carry_to_tree` (re-wraps the PRNG key)."""
+    d = dict(tree)
+    d["bandit"] = gpcb.BanditState(**d["bandit"])
+    d["key"] = jax.random.wrap_key_data(d["key"])
+    return RoundCarry(**d)
+
+
 def _resolve_gp_impl(gp_impl: str, use_gp_kernel: bool) -> str:
     if use_gp_kernel:
         return "kernel"
@@ -199,6 +250,11 @@ class ScanEngine:
             ``repro.fl.latency.ScenarioConfig``.
         shard_clients: devices on the ``("clients",)`` mesh axis; > 1
             requires ``param_layout="flat"`` and K divisible by it.
+        snapshot_every: > 0 segments the scan into chunks of N rounds and
+            writes the carry (+ history so far) to ``snapshot_path``
+            at every chunk boundary — resumable, bit-identical runs.
+        snapshot_path: the snapshot file (required iff
+            ``snapshot_every > 0``).
     """
 
     def __init__(self, exp: FLExperimentConfig, *,
@@ -207,7 +263,9 @@ class ScanEngine:
                  log_every: int = 0,
                  scenario: Union[str, ScenarioConfig, None] = "full",
                  shard_clients: int = 1, data=None,
-                 defer_init: bool = False):
+                 defer_init: bool = False,
+                 snapshot_every: int = 0,
+                 snapshot_path: Optional[str] = None):
         """Validate the combination against the capability registry, build
         data/trainer/streams (see the class docstring for every knob;
         ``data`` optionally injects a prebuilt ``(store, eval_x, eval_y)``
@@ -222,7 +280,15 @@ class ScanEngine:
             backend="scan", selector=exp.selector, param_layout=param_layout,
             scenario_kind=getattr(scenario, "kind", scenario or "full"),
             shard_clients=int(shard_clients), use_gp_kernel=use_gp_kernel,
-            clients_per_round=exp.clients_per_round))
+            clients_per_round=exp.clients_per_round,
+            snapshot_every=int(snapshot_every)))
+        self.snapshot_every = int(snapshot_every)
+        self.snapshot_path = snapshot_path
+        if self.snapshot_every > 0 and not snapshot_path:
+            raise ValueError(
+                f"snapshot_every={snapshot_every} needs a snapshot_path "
+                f"to write the carry snapshots to")
+        self.final_carry: Optional[RoundCarry] = None
         self.scenario = make_scenario(scenario)
         self.shard_clients = int(shard_clients)
         if self.shard_clients > 1:
@@ -256,18 +322,34 @@ class ScanEngine:
                 np.asarray(jax.devices()[: self.shard_clients]),
                 ("clients",))
         self._inputs = self._build_initial_state()
-        self._scan = None  # jitted lazily by _compiled()
+        # lazily jitted dispatchers; a Session shares this dict across
+        # config-modulo-seed sibling engines so one compile serves all
+        self._jit: Dict[str, Any] = {"scan": None, "chunk": None}
 
     def _compiled(self):
-        """The jitted scan, built on first use.  Donates the
+        """The jitted full-T scan, built on first use.  Donates the
         params/direction carries: XLA aliases them into the scan instead
         of holding a live caller copy (``run()`` passes copies)."""
-        if self._scan is None:
-            self._scan = jax.jit(self._build_scan(), donate_argnums=(0, 1))
-        return self._scan
+        if self._jit["scan"] is None:
+            self._jit["scan"] = jax.jit(self._build_scan(),
+                                        donate_argnums=(0, 1))
+        return self._jit["scan"]
+
+    def _compiled_chunk(self):
+        """The jitted N-round chunk scan (snapshot runs), built on first
+        use.  Donates the WHOLE input carry — the caller either hands it
+        fresh copies (round 0) or buffers it has already snapshotted to
+        host (chunk boundaries), so donation never aliases live data."""
+        if self._jit["chunk"] is None:
+            self._jit["chunk"] = jax.jit(self._build_chunk(),
+                                         donate_argnums=(0,))
+        return self._jit["chunk"]
 
     # ---- the scan body: one complete federated round, fully on device ----
-    def _build_scan(self):
+    def _build_body(self):
+        """The per-round scan body, shared verbatim by the full-T scan
+        and the N-round chunk scan — chunked execution therefore replays
+        the unsegmented run's math bit-identically."""
         exp, scn = self.exp, self.scenario
         N, K, T = self.store.n_clients, exp.clients_per_round, exp.rounds
         W = max(exp.fedcor_warmup, 2)   # FedCor needs 2 loss probes to rank
@@ -445,6 +527,13 @@ class ScanEngine:
             return RoundCarry(params, direction, bandit, latest_gp, seen,
                               key, fc_cov, fc_prev), out
 
+        return body
+
+    def _build_scan(self):
+        """The full-T dispatcher: builds round-0 carry, scans all rounds."""
+        body = self._build_body()
+        N, T = self.store.n_clients, self.exp.rounds
+
         def run_scan(params, direction, bandit, latest_gp, fc_cov, fc_prev,
                      key, streams, tables, eval_tabs):
             jitter, sel_ids, cand_ids, avail, lat = streams
@@ -456,6 +545,20 @@ class ScanEngine:
                 (jnp.arange(T), jitter, sel_ids, cand_ids, avail, lat))
 
         return run_scan
+
+    def _build_chunk(self):
+        """The chunk dispatcher: scans an N-round segment from an
+        explicit carry (round offsets ride in as the ``ts`` input)."""
+        body = self._build_body()
+
+        def run_chunk(carry, ts, streams, tables, eval_tabs):
+            jitter, sel_ids, cand_ids, avail, lat = streams
+            tabs = tables + eval_tabs
+            return jax.lax.scan(
+                functools.partial(body, tabs), carry,
+                (ts, jitter, sel_ids, cand_ids, avail, lat))
+
+        return run_chunk
 
     def _build_initial_state(self):
         """The pre-scan state: params at w^0, Algorithm 1's init phase,
@@ -550,22 +653,126 @@ class ScanEngine:
         return (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
                 streams)
 
-    def run(self) -> RunResult:
-        """Dispatch the compiled scan once → the full T-round history.
+    # ------------------------------------------------ snapshot machinery
+    def fingerprint(self) -> str:
+        """Identity of this engine's math: the experiment config plus
+        every knob that changes per-round numerics.  Stamped into each
+        snapshot's meta; a resume against a different fingerprint fails
+        fast instead of silently mixing runs.  (``snapshot_every`` is
+        deliberately EXCLUDED — chunk boundaries don't change the math,
+        so a resume may use a different cadence.)"""
+        payload = {
+            "exp": dataclasses.asdict(self.exp),
+            "param_layout": self.param_layout,
+            "scenario": (self.scenario.kind, self.scenario.seed,
+                         self.scenario.availability,
+                         self.scenario.deadline_s),
+            "use_ee": self.use_ee,
+            "gp_impl": self.gp_impl,
+        }
+        return hashlib.sha1(
+            json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+    def _fresh_carry(self) -> RoundCarry:
+        """Round-0 carry assembled from the cached initial state (shared
+        references — callers must copy before donating)."""
+        (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
+         _streams) = self._inputs
+        return RoundCarry(params, direction, bandit, latest_gp,
+                          jnp.zeros((self.store.n_clients,), bool), key,
+                          fc_cov, fc_prev)
+
+    def _empty_outs(self) -> Dict[str, np.ndarray]:
+        """Preallocated full-T host buffers for the scan outputs (chunks
+        fill rows [t, t+n); fixed shapes keep the snapshot restorable
+        without knowing how far the run got)."""
+        T, K = self.exp.rounds, self.exp.clients_per_round
+        return {"ids": np.zeros((T, K), np.int32),
+                "acc": np.zeros((T,), np.float32),
+                "loss": np.zeros((T,), np.float32),
+                "coverage": np.zeros((T,), np.float32)}
+
+    def _write_snapshot(self, carry: RoundCarry, outs: dict,
+                        rounds_done: int) -> None:
+        """Persist carry + history at a chunk boundary (atomic rename).
+        ``save_checkpoint`` device_gets every leaf, i.e. the bytes are
+        host copies taken BEFORE the carry is donated onward."""
+        save_checkpoint(
+            self.snapshot_path, {"carry": _carry_to_tree(carry),
+                                 "out": outs},
+            step=int(rounds_done),
+            meta={"fingerprint": self.fingerprint(),
+                  "rounds": int(rounds_done),
+                  "total_rounds": int(self.exp.rounds),
+                  "snapshot_every": int(self.snapshot_every)})
+
+    def _read_snapshot(self):
+        """Restore ``(carry, outs, rounds_done)`` from ``snapshot_path``.
+
+        Raises:
+            ValueError: the snapshot was written by a different
+                experiment/engine configuration (fingerprint mismatch).
+        """
+        like = {"carry": _carry_to_tree(self._fresh_carry()),
+                "out": self._empty_outs()}
+        tree, step, meta = restore_checkpoint(self.snapshot_path, like,
+                                              return_meta=True)
+        want = self.fingerprint()
+        got = (meta or {}).get("fingerprint")
+        if got != want:
+            raise ValueError(
+                f"snapshot {self.snapshot_path} belongs to a different "
+                f"run (fingerprint {got!r} != this engine's {want!r}); "
+                f"refusing to resume from it")
+        # np.array (not asarray): restored leaves can be read-only
+        # frombuffer views, and the chunk loop writes rows in place
+        outs = {k: np.array(v) for k, v in tree["out"].items()}
+        return _tree_to_carry(tree["carry"]), outs, int(step)
+
+    # --------------------------------------------------------- dispatch
+    def run(self, *, resume: bool = False,
+            until_round: Optional[int] = None) -> Optional[RunResult]:
+        """Dispatch the compiled scan → the full T-round history.
+
+        Without snapshots (``snapshot_every == 0``) this is ONE device
+        dispatch covering all T rounds.  With ``snapshot_every = n`` the
+        run executes as ceil(T/n) chunked dispatches, persisting the
+        carry after each one — bit-identical history, restart-safe.
+
+        Args:
+            resume: restore ``snapshot_path`` if it exists and continue
+                from its round (a fresh run when no snapshot exists, so
+                restart scripts stay idempotent).  Requires
+                ``snapshot_every > 0``.
+            until_round: stop (and snapshot) after this many rounds
+                instead of finishing — a budgeted slice of the run that
+                a later ``resume=True`` call completes.  Requires
+                ``snapshot_every > 0``.
 
         Returns:
             ``repro.fl.simulation.RunResult`` with the accuracy/loss
             curves, the (T, K) selection log, per-client selection
-            counts, coverage and the amortised per-round wall time (ONE
-            device dispatch covers all T rounds; the first call includes
-            the scan's compile).
+            counts, coverage and the amortised per-round wall time —
+            or ``None`` when ``until_round`` stopped the run early (the
+            state lives in the snapshot file).
         """
-        exp = self.exp
         if self._defer_init:
             raise RuntimeError(
                 "this ScanEngine was built with defer_init=True (a "
                 "BatchedSeedEngine sub-engine); its init-phase state may "
                 "be a placeholder — run the batched engine instead")
+        if self.snapshot_every <= 0:
+            if resume or until_round is not None:
+                raise ValueError(
+                    "resume/until_round require snapshot_every > 0 (and "
+                    "a snapshot_path): there is no snapshot state "
+                    "without a snapshot cadence")
+            return self._run_single()
+        return self._run_chunked(resume=resume, until_round=until_round)
+
+    def _run_single(self) -> RunResult:
+        """The snapshot-free fast path: one dispatch for all T rounds."""
+        exp = self.exp
         N, T = self.store.n_clients, exp.rounds
         (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
          streams) = self._inputs
@@ -573,25 +780,78 @@ class ScanEngine:
         t0 = time.perf_counter()
         # params/direction are donated to the scan — pass fresh copies so
         # the cached initial state survives for the next run()
-        _, out = jax.block_until_ready(self._compiled()(
+        carry, out = jax.block_until_ready(self._compiled()(
             jax.tree.map(jnp.copy, params), jax.tree.map(jnp.copy, direction),
             bandit, latest_gp, fc_cov, fc_prev, key, streams,
             self.store.tables(), (self.eval_x, self.eval_y)))
         scan_wall = time.perf_counter() - t0
+        self.final_carry = carry
 
-        selections = np.asarray(out["ids"])
+        return self._result(
+            {k: np.asarray(v) for k, v in out.items()},
+            wall=scan_wall, rounds_timed=T)
+
+    def _run_chunked(self, *, resume: bool,
+                     until_round: Optional[int]) -> Optional[RunResult]:
+        """Segmented execution: chunks of ``snapshot_every`` rounds, the
+        carry snapshotted (host-copied first) after every chunk."""
+        T = self.exp.rounds
+        stop = T if until_round is None else min(int(until_round), T)
+        if until_round is not None and until_round < 1:
+            raise ValueError(f"until_round must be >= 1; got {until_round}")
+        streams = self._inputs[7]
+        t = 0
+        outs = self._empty_outs()
+        if resume and os.path.exists(self.snapshot_path):
+            carry, outs, t = self._read_snapshot()
+        else:
+            # round 0: fresh copies, so the cached initial state survives
+            # the chunk's whole-carry donation
+            carry = _copy_carry(self._fresh_carry())
+        tables, eval_tabs = self.store.tables(), (self.eval_x, self.eval_y)
+
+        t0 = time.perf_counter()
+        ran = 0
+        while t < stop:
+            n = min(self.snapshot_every, stop - t)
+            ts = jnp.arange(t, t + n)
+            chunk_streams = tuple(s[t:t + n] for s in streams)
+            carry, out = jax.block_until_ready(self._compiled_chunk()(
+                carry, ts, chunk_streams, tables, eval_tabs))
+            for name, v in out.items():
+                outs[name][t:t + n] = np.asarray(v)
+            t += n
+            ran += n
+            # device_get inside the save copies the carry to host BEFORE
+            # the next chunk donates (and invalidates) its buffers
+            self._write_snapshot(carry, outs, t)
+        wall = time.perf_counter() - t0
+        self.final_carry = carry
+
+        if stop < T:
+            return None  # budgeted slice done; state lives in the snapshot
+        return self._result(outs, wall=wall, rounds_timed=max(ran, 1))
+
+    def _result(self, outs: dict, *, wall: float,
+                rounds_timed: int) -> RunResult:
+        """Assemble the RunResult from full-T host output buffers."""
+        exp = self.exp
+        N, T = self.store.n_clients, exp.rounds
+        selections = np.asarray(outs["ids"])
         counts = np.bincount(selections.reshape(-1),
                              minlength=N).astype(np.int64)
         return RunResult(
             config=exp,
-            accuracy=np.asarray(out["acc"], np.float32),
-            loss=np.asarray(out["loss"], np.float32),
+            accuracy=np.asarray(outs["acc"], np.float32),
+            loss=np.asarray(outs["loss"], np.float32),
             selections=selections,
-            # one dispatch for all T rounds — report the amortised per-round
-            # wall time (first call includes the scan's compile)
-            round_time_s=np.full((T,), scan_wall / max(T, 1), np.float32),
+            # one (or few) dispatches cover all T rounds — report the
+            # amortised per-round wall time of the rounds THIS call ran
+            # (the first call includes the scan's compile)
+            round_time_s=np.full((T,), wall / max(rounds_timed, 1),
+                                 np.float32),
             selection_counts=counts,
-            coverage=np.asarray(out["coverage"], np.float32),
+            coverage=np.asarray(outs["coverage"], np.float32),
         )
 
 

@@ -1,1 +1,2 @@
-"""Launch layer: production mesh, multi-pod dry-run, train/serve drivers."""
+"""Launch layer: production mesh, multi-pod dry-run, train/serve drivers,
+and the multi-process sweep executor (``repro.launch.sweep``)."""

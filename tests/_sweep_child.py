@@ -1,0 +1,36 @@
+"""Subprocess target for ``tests/test_journal_crash.py``.
+
+Runs a FIXED tiny 4-cell sweep (2 selectors × 2 seeds) through a
+journaled :class:`repro.api.Session` — the parent test SIGKILLs this
+process mid-sweep and then reruns it to completion.  The plan lives here
+(importable by the test for its in-process reference run) so parent and
+child can never drift.
+
+Usage: ``python tests/_sweep_child.py JOURNAL_PATH``
+"""
+import dataclasses
+import sys
+
+from repro.api import ExecutionSpec, Session
+from repro.configs.paper import femnist_experiment
+from repro.launch.sweep import _ListPlan
+
+SPEC = ExecutionSpec(backend="scan")
+
+
+def make_cells():
+    """The fixed sweep: gpfl/random × seeds 0,1 at toy scale."""
+    cells = []
+    for sel in ("gpfl", "random"):
+        for seed in (0, 1):
+            exp = femnist_experiment("2spc", sel, rounds=3, seed=seed)
+            cells.append(dataclasses.replace(
+                exp, n_clients=12, clients_per_round=3,
+                samples_per_client_mean=30, samples_per_client_std=8,
+                local_iters=2, local_batch_size=16, eval_size=200,
+                name=f"{sel}-s{seed}"))
+    return cells
+
+
+if __name__ == "__main__":
+    Session(_ListPlan(make_cells()), SPEC, journal=sys.argv[1]).run()

@@ -33,6 +33,7 @@ def _tiny(exp, rounds=5):
 
 def _spec_for(dim, value, backend):
     """Build the (ExecutionSpec, selector) a capability row describes."""
+    import tempfile
     sel, kw = "gpfl", dict(backend=backend)
     if dim == "selector":
         sel = value
@@ -44,6 +45,11 @@ def _spec_for(dim, value, backend):
         kw.update(shard_clients=2, param_layout="flat")
     elif dim == "use_gp_kernel":
         kw["use_gp_kernel"] = True
+    elif dim == "snapshot_every":
+        kw.update(snapshot_every=2, snapshot_dir=tempfile.mkdtemp())
+    elif dim == "resume":
+        kw.update(snapshot_every=2, snapshot_dir=tempfile.mkdtemp(),
+                  resume=True)
     return ExecutionSpec(**kw), sel
 
 

@@ -1,9 +1,18 @@
 """The zlib fallback path of the msgpack checkpoint must stay covered even
 in environments where ``zstandard`` IS installed (CI installs the full
 dependency set, so without forcing the fallback the zlib branch would only
-ever run in zstd-less containers)."""
+ever run in zstd-less containers).
+
+Also pins the checkpoint against the engine's REAL scan carry (the resume
+feature's payload): both param layouts, GPCB bandit state and FedCor's
+(N, N) covariance state round-trip bit-exactly under both codecs — and the
+zstd error path runs on EVERY environment via a hand-authored raw-block
+zstd frame (no ``zstandard`` needed to write it)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+import msgpack
 import numpy as np
 import pytest
 
@@ -46,11 +55,107 @@ def test_zlib_clamps_zstd_level(tmp_path, no_zstd, level):
     assert step == 1
 
 
+def _zstd_raw_frame(raw: bytes) -> bytes:
+    """Author a valid zstd frame by hand: magic + single-segment header
+    (1-byte frame-content-size) + one raw (uncompressed) block.  Any real
+    zstd decoder reads it, and writing it needs NO zstd library — so the
+    zstd error path below runs on every CI matrix leg instead of skipping
+    where ``zstandard`` is absent."""
+    assert len(raw) < 256  # 1-byte FCS field
+    descriptor = 0x20      # single-segment, no checksum, FCS code 0
+    block_header = (len(raw) << 3) | 0b001  # last=1, block_type=raw
+    return (msgpack_ckpt._MAGIC_ZSTD + bytes([descriptor, len(raw)])
+            + block_header.to_bytes(3, "little") + raw)
+
+
+def _fixture_ckpt_bytes():
+    """A tiny but complete checkpoint file, zstd-framed by hand."""
+    arr = np.arange(3, dtype=np.uint8)
+    blob = msgpack.packb({"step": 7, "meta": {"fingerprint": "fx"},
+                          "arrays": {"x": {"dtype": "uint8", "shape": [3],
+                                           "data": arr.tobytes()}}})
+    return _zstd_raw_frame(blob), arr
+
+
 def test_zstd_file_without_zstd_has_clear_error(tmp_path, monkeypatch):
+    """No skip: the zstd fixture is authored in-process, so this error
+    path is exercised even where ``zstandard`` is not installed."""
     path = str(tmp_path / "ck_zstd.msgpack.zst")
-    if msgpack_ckpt.zstandard is None:
-        pytest.skip("zstandard not installed; cannot author a zstd file")
-    save_checkpoint(path, _tree())
+    frame, _ = _fixture_ckpt_bytes()
+    with open(path, "wb") as fh:
+        fh.write(frame)
     monkeypatch.setattr(msgpack_ckpt, "zstandard", None)
     with pytest.raises(ImportError, match="zstd-compressed"):
-        restore_checkpoint(path, _like(_tree()))
+        restore_checkpoint(path, {"x": jax.ShapeDtypeStruct((3,),
+                                                            jnp.uint8)})
+
+
+@pytest.mark.skipif(msgpack_ckpt.zstandard is None,
+                    reason="needs the real zstd decoder")
+def test_authored_zstd_frame_is_real_zstd(tmp_path):
+    """The hand-rolled raw-block frame must be a REAL zstd frame (the
+    fixture cannot drift into magic-bytes-only garbage): the actual
+    decoder restores it, step + meta + data intact."""
+    path = str(tmp_path / "authored.msgpack.zst")
+    frame, arr = _fixture_ckpt_bytes()
+    with open(path, "wb") as fh:
+        fh.write(frame)
+    tree, step, meta = restore_checkpoint(
+        path, {"x": jax.ShapeDtypeStruct((3,), jnp.uint8)},
+        return_meta=True)
+    assert step == 7 and meta == {"fingerprint": "fx"}
+    np.testing.assert_array_equal(np.asarray(tree["x"]), arr)
+
+
+def test_meta_round_trip(tmp_path):
+    """``meta=`` rides the checkpoint and comes back verbatim (the resume
+    path stores its config fingerprint there)."""
+    path = str(tmp_path / "ck_meta.msgpack.zst")
+    save_checkpoint(path, _tree(), step=11,
+                    meta={"fingerprint": "abc", "rounds": 4})
+    _, step, meta = restore_checkpoint(path, _like(_tree()),
+                                       return_meta=True)
+    assert step == 11 and meta == {"fingerprint": "abc", "rounds": 4}
+    _, step_only = restore_checkpoint(path, _like(_tree()))
+    assert step_only == 11  # default return shape unchanged
+
+
+# ------------------------------------------- the engine's real scan carry
+
+def _trained_carry(selector, layout):
+    """A post-run engine carry: real params/bandit/GP (FedCor: (N, N)
+    covariance EMA) state, mixed dtypes incl. the PRNG key's raw data."""
+    from repro.configs.paper import femnist_experiment
+    from repro.fl.engine import ScanEngine, _carry_to_tree
+    exp = femnist_experiment("2spc", selector, rounds=2, seed=3)
+    exp = dataclasses.replace(
+        exp, n_clients=12, clients_per_round=3, samples_per_client_mean=30,
+        samples_per_client_std=8, local_iters=2, local_batch_size=16,
+        eval_size=200)
+    eng = ScanEngine(exp, param_layout=layout)
+    eng.run()
+    return _carry_to_tree(eng.final_carry)
+
+
+@pytest.mark.parametrize("codec", ["zstd", "zlib"])
+@pytest.mark.parametrize("selector,layout",
+                         [("gpfl", "tree"), ("fedcor", "flat")])
+def test_engine_carry_round_trips(tmp_path, monkeypatch, codec, selector,
+                                  layout):
+    """The actual resume payload — a trained scan carry — must survive
+    save/restore bit-exactly under BOTH codecs, for the tree layout with
+    GPCB bandit state and the flat layout with FedCor covariance state."""
+    if codec == "zlib":
+        monkeypatch.setattr(msgpack_ckpt, "zstandard", None)
+    tree = _trained_carry(selector, layout)
+    path = str(tmp_path / f"carry-{selector}-{layout}.ckpt")
+    save_checkpoint(path, tree, step=2, meta={"fingerprint": "t"})
+    restored, step, meta = restore_checkpoint(path, tree, return_meta=True)
+    assert step == 2 and meta == {"fingerprint": "t"}
+    want = jax.tree_util.tree_flatten_with_path(tree)[0]
+    got = jax.tree.leaves(restored)
+    assert len(want) == len(got)
+    for (p, a), b in zip(want, got):
+        assert a.dtype == b.dtype, p
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(p))

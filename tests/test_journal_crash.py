@@ -1,0 +1,230 @@
+"""Crash-injection harness for the sweep journal (ISSUE 6 satellites).
+
+The durability contract under test:
+
+* a Session SIGKILLed mid-sweep loses AT MOST the in-flight cell — every
+  journaled cell survives (fsync'd single-line appends);
+* restarting the identical sweep completes exactly the remaining cells:
+  no cell reruns, no cell is lost, no journal line is duplicated;
+* a torn final line (writer killed mid-``write``) never corrupts the
+  journal — it is skipped on read, its cell reruns, and the next append
+  can never splice into the garbage;
+* the multi-process executor (``repro.launch.sweep``) respawns dead
+  workers and still merges a complete, bit-correct RunSet.
+
+The killed sweep runs in a real subprocess (``tests/_sweep_child.py``)
+and the kill lands while the child is LIVE mid-sweep — the parent polls
+the journal for a randomized line count, then SIGKILLs.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import RunJournal, Session, cell_fingerprint
+from repro.launch.sweep import _ListPlan, run_plan_processes
+
+import _sweep_child
+
+_CHILD = os.path.join(os.path.dirname(__file__), "_sweep_child.py")
+
+
+def _child_env():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return env
+
+
+def _spawn(journal):
+    return subprocess.Popen([sys.executable, _CHILD, journal],
+                            env=_child_env(), stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+
+
+def _journal_lines(path):
+    try:
+        with open(path, "rb") as fh:
+            return fh.read().count(b"\n")
+    except FileNotFoundError:
+        return 0
+
+
+def _keys_in_order(journal):
+    return [rec["key"] for rec in journal.records()]
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """The uninterrupted sweep, run in-process once per module."""
+    return Session(_ListPlan(_sweep_child.make_cells()),
+                   _sweep_child.SPEC).run()
+
+
+# ------------------------------------------------------------ journal unit
+
+def test_journal_append_then_read_round_trip(tmp_path, reference):
+    j = RunJournal(str(tmp_path / "j.jsonl"))
+    for r in reference:
+        j.append(r)
+    back = j.results()
+    assert len(back) == len(reference)
+    for a, b in zip(reference, back):
+        assert a.config == b.config
+        np.testing.assert_array_equal(a.selections, b.selections)
+        np.testing.assert_array_equal(a.accuracy, b.accuracy)
+
+
+def test_journal_skips_garbage_and_repairs_torn_tail(tmp_path, reference):
+    """A torn tail is unreadable but harmless: reads skip it, the next
+    append newline-terminates it, and no good record is ever spliced."""
+    path = str(tmp_path / "j.jsonl")
+    j = RunJournal(path)
+    j.append(reference[0])
+    with open(path, "ab") as fh:            # a writer died mid-write
+        fh.write(b'{"v": 1, "key": "dead')  # no newline: torn
+    assert j._tail_is_torn()
+    assert _keys_in_order(j) == [cell_fingerprint(reference[0].config)]
+    j.append(reference[1])                  # must not splice into the tear
+    assert not j._tail_is_torn()
+    assert _keys_in_order(j) == [cell_fingerprint(reference[0].config),
+                                 cell_fingerprint(reference[1].config)]
+
+
+# -------------------------------------------------- SIGKILL a live sweep
+
+@pytest.mark.parametrize("kill_after_lines", [1, 2])
+def test_sigkill_mid_sweep_restart_completes_remaining(
+        tmp_path, reference, kill_after_lines):
+    """Kill a live journaled sweep once it has completed N cells; the
+    restart must run exactly the remaining cells and the merged journal
+    must hold every cell once, bit-identical to the uninterrupted run."""
+    journal_path = str(tmp_path / f"kill{kill_after_lines}.jsonl")
+    cells = _sweep_child.make_cells()
+
+    proc = _spawn(journal_path)
+    deadline = time.time() + 300
+    while _journal_lines(journal_path) < kill_after_lines:
+        if proc.poll() is not None:
+            pytest.fail(f"child exited before the kill point:\n"
+                        f"{proc.stdout.read()}")
+        if time.time() > deadline:
+            proc.kill()
+            pytest.fail("child never reached the kill point")
+        time.sleep(0.05)
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.wait()
+
+    j = RunJournal(journal_path)
+    survived = _keys_in_order(j)
+    assert len(survived) >= kill_after_lines       # fsync'd lines survived
+    assert len(set(survived)) == len(survived)     # no duplicates
+
+    proc2 = _spawn(journal_path)
+    out, _ = proc2.communicate(timeout=600)
+    assert proc2.returncode == 0, out
+    # the restart reported exactly the split it ran
+    assert (f"skipped {len(survived)} completed cell(s), "
+            f"ran {len(cells) - len(survived)}") in out
+
+    final = _keys_in_order(j)
+    want = [cell_fingerprint(c) for c in cells]
+    assert sorted(final) == sorted(want)           # nothing lost
+    assert len(set(final)) == len(final)           # nothing duplicated
+    assert final[:len(survived)] == survived       # append-only: old intact
+
+    by_key = j.results_by_key()
+    for ref in reference:
+        got = by_key[cell_fingerprint(ref.config)]
+        np.testing.assert_array_equal(ref.selections, got.selections)
+        np.testing.assert_array_equal(ref.accuracy, got.accuracy)
+
+
+def test_sigkill_with_torn_final_line_still_recovers(tmp_path, reference):
+    """The worst crash: the journal's final line is torn mid-write.  The
+    torn cell reruns on restart and the journal still converges to every
+    cell exactly once."""
+    journal_path = str(tmp_path / "torn.jsonl")
+    proc = _spawn(journal_path)
+    deadline = time.time() + 300
+    while _journal_lines(journal_path) < 2:
+        if proc.poll() is not None:
+            pytest.fail(f"child exited early:\n{proc.stdout.read()}")
+        if time.time() > deadline:
+            proc.kill()
+            pytest.fail("child never reached the kill point")
+        time.sleep(0.05)
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.wait()
+
+    # tear the last journaled line: chop its tail (newline included)
+    with open(journal_path, "rb") as fh:
+        data = fh.read()
+    with open(journal_path, "wb") as fh:
+        fh.write(data[:-20])
+    j = RunJournal(journal_path)
+    assert j._tail_is_torn()
+    survived = _keys_in_order(j)   # the torn record no longer parses
+    assert len(survived) == 1
+
+    proc2 = _spawn(journal_path)
+    out, _ = proc2.communicate(timeout=600)
+    assert proc2.returncode == 0, out
+
+    final = _keys_in_order(j)
+    want = [cell_fingerprint(c) for c in _sweep_child.make_cells()]
+    assert sorted(final) == sorted(want)
+    assert len(set(final)) == len(final)
+    by_key = j.results_by_key()
+    for ref in reference:
+        got = by_key[cell_fingerprint(ref.config)]
+        np.testing.assert_array_equal(ref.selections, got.selections)
+
+
+# ------------------------------------------- multi-process executor retry
+
+def test_executor_respawns_dead_workers_and_merges(tmp_path, reference):
+    """Every worker's first attempt hard-exits after one journaled cell;
+    the executor must respawn each shard and still merge the full sweep
+    bit-identically, recording the restarts."""
+    cells = _sweep_child.make_cells()
+    jdir = str(tmp_path / "exec")
+    rs = run_plan_processes(_ListPlan(cells), _sweep_child.SPEC, workers=2,
+                            journal_dir=jdir, crash_after_cells=1)
+    stats = json.load(open(os.path.join(jdir, "executor_stats.json")))
+    assert stats["workers"] == 2 and stats["cells"] == len(cells)
+    assert all(n >= 1 for n in stats["restarts"].values()), stats
+    assert len(rs) == len(reference)
+    for a, b in zip(reference, rs):
+        assert a.config == b.config
+        np.testing.assert_array_equal(a.selections, b.selections)
+        np.testing.assert_array_equal(a.accuracy, b.accuracy)
+
+
+def test_executor_gives_up_after_max_restarts(tmp_path):
+    """A shard that keeps dying past max_restarts fails the sweep with a
+    clear error instead of looping forever."""
+    cells = _sweep_child.make_cells()
+    jdir = str(tmp_path / "exec_fail")
+    os.makedirs(jdir)
+    # a payload the worker cannot even load → every attempt dies at once
+    with pytest.raises(RuntimeError, match="died with exit code"):
+        run_plan_processes(
+            _BrokenPlan(cells), _sweep_child.SPEC, workers=1,
+            journal_dir=jdir, max_restarts=1)
+
+
+class _BrokenPlan(_ListPlan):
+    """Cells whose configs serialize fine but crash every worker: an
+    unknown partition name KeyErrors at the child's dataset build."""
+
+    def cells(self):
+        import dataclasses
+        return [dataclasses.replace(c, partition="bogus")
+                for c in super().cells()]
