@@ -13,14 +13,17 @@ parity flags (see ``_selector_micro``), the ``sweep`` bench
 comparing the batched multi-seed vmapped scan against sequential
 per-seed dispatches (see ``_sweep_micro``), and the ``resume`` bench
 recording the chunked-scan snapshot overhead and the kill → resume
-selection parity for all four selectors (see ``_resume_micro``).
+selection parity for all four selectors (see ``_resume_micro``), and the
+``async`` bench pinning the buffered event-scan's sync-reduction parity
+and its time-to-accuracy vs. sync under stragglers (see
+``_async_micro``).
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks everything
 (CI); ``--full`` runs paper-scale rounds; ``--json PATH`` additionally
 writes the engine/flat/selector/sweep/kernel results as machine-readable
 JSON (CI uploads ``BENCH_engine.json`` / ``BENCH_flat.json`` /
 ``BENCH_selectors.json`` / ``BENCH_sweep.json`` / ``BENCH_resume.json``
-as artifacts — the bench trajectory record).  The
+/ ``BENCH_async.json`` as artifacts — the bench trajectory record).  The
 §Roofline analysis is a separate entrypoint (``benchmarks.roofline``)
 because it must own XLA_FLAGS=...device_count=512 at process start.
 """
@@ -572,6 +575,107 @@ def _resume_micro(quick: bool = True):
     return rows
 
 
+def _async_micro(quick: bool = True):
+    """Buffered (FedBuff) event-scan vs. the synchronous round-scan.
+
+    Two claims per ISSUE 7, one row kind each:
+
+    * ``kind="parity"`` — the sync-reduction contract: with buffer
+      M = K, ``staleness_discount=1.0``, a zero-latency model and
+      E = T events, the buffered event-scan replays the synchronous
+      scan bit-identically (selections AND accuracy), for all four
+      selectors.  ``reduction_match`` is a **hard CI gate**.
+    * ``kind="time_to_acc"`` — the reason to buffer: under the straggler
+      latency model, simulated time to reach 90% of the sync run's final
+      accuracy.  The sync clock is reconstructed host-side from the SAME
+      precomputed completion-time stream the engine consumed (round cost
+      = min(max cohort completion, deadline)); the buffered clock is the
+      engine's own ``sim_time_s`` event clock.  Both runs consume the
+      same total number of client updates (E = T·K/M).  Recorded, not
+      gated — the committed ``BENCH_async.json`` documents the
+      measurement.
+    """
+    import dataclasses
+    from repro.configs.paper import SELECTORS, femnist_experiment
+    from repro.fl.engine import ScanEngine
+    from repro.fl.latency import (AggregationConfig, LatencyModel,
+                                  ScenarioConfig, completion_time_stream,
+                                  make_scenario)
+
+    rounds = 16 if quick else 40
+    base = dataclasses.replace(
+        femnist_experiment("2spc", "gpfl"), rounds=rounds, n_clients=32,
+        clients_per_round=4, samples_per_client_mean=40,
+        samples_per_client_std=10, local_iters=3, local_batch_size=16,
+        eval_size=256)
+    k = base.clients_per_round
+    zero_lat = ScenarioConfig(kind="full", latency=LatencyModel(
+        local_compute_s=0.0, downlink_s=0.0, uplink_s=0.0,
+        straggler_scale=0.0))
+
+    rows = []
+    for sel in SELECTORS:
+        exp = dataclasses.replace(base, selector=sel, name=f"async-{sel}")
+        sync = ScanEngine(exp).run()
+        buf = ScanEngine(exp, scenario=zero_lat,
+                         aggregation=AggregationConfig(
+                             kind="buffered", buffer_size=k,
+                             staleness_discount=1.0, events=rounds)).run()
+        rows.append({
+            "name": f"async_parity_{sel}", "kind": "parity",
+            "selector": sel, "rounds": rounds, "buffer_size": k,
+            "staleness_discount": 1.0,
+            "reduction_match": bool(
+                np.array_equal(sync.selections, buf.selections)
+                and np.array_equal(sync.accuracy, buf.accuracy)),
+        })
+
+    scn = make_scenario("stragglers")
+    m = k // 2
+    for sel in ("gpfl", "random"):
+        exp = dataclasses.replace(base, selector=sel,
+                                  name=f"async-tta-{sel}")
+        sync = ScanEngine(exp, scenario="stragglers").run()
+        # the engine's exact lat stream, regenerated host-side: sync
+        # round cost = min(max completion over the cohort, deadline)
+        srng = np.random.default_rng((exp.seed, scn.seed, 2))
+        lat = completion_time_stream(
+            dataclasses.replace(scn.latency, n_clients=exp.n_clients),
+            srng, rounds)
+        cohort_lat = np.max(
+            lat[np.arange(rounds)[:, None], np.asarray(sync.selections)],
+            axis=1)
+        sync_clock = np.cumsum(np.minimum(cohort_lat,
+                                          scn.resolved_deadline()))
+        buf = ScanEngine(exp, scenario="stragglers",
+                         aggregation=AggregationConfig(
+                             kind="buffered", buffer_size=m,
+                             staleness_discount=0.5)).run()
+        target = 0.9 * float(sync.accuracy[-1])
+
+        def first_hit(acc, clock):
+            hit = np.nonzero(np.asarray(acc) >= target)[0]
+            return float(clock[hit[0]]) if hit.size else None
+
+        t_sync = first_hit(sync.accuracy, sync_clock)
+        t_buf = first_hit(buf.accuracy, buf.sim_time_s)
+        rows.append({
+            "name": f"async_tta_{sel}", "kind": "time_to_acc",
+            "selector": sel, "rounds": rounds, "buffer_size": m,
+            "staleness_discount": 0.5,
+            "events": rounds * k // m, "target_acc": target,
+            "sync_final_acc": float(sync.accuracy[-1]),
+            "buffered_final_acc": float(buf.accuracy[-1]),
+            "sync_total_sim_s": float(sync_clock[-1]),
+            "buffered_total_sim_s": float(buf.sim_time_s[-1]),
+            "sync_time_to_target_s": t_sync,
+            "buffered_time_to_target_s": t_buf,
+            "sim_speedup_to_target": (t_sync / t_buf
+                                      if t_sync and t_buf else None),
+        })
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -580,7 +684,7 @@ def main(argv=None) -> None:
                     help="paper-scale rounds (hours)")
     ap.add_argument("--only", default=None,
                     help="comma-list: table2,fig4,fig5,fig6,fig7,kernels,"
-                         "engine,flat,selectors,sweep,resume")
+                         "engine,flat,selectors,sweep,resume,async")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write engine/flat/kernel results as JSON "
                          "(e.g. BENCH_engine.json, BENCH_flat.json)")
@@ -591,7 +695,7 @@ def main(argv=None) -> None:
     rounds = 12 if args.quick else 60
     only = set(args.only.split(",")) if args.only else \
         {"table2", "fig4", "fig5", "fig6", "fig7", "kernels", "engine",
-         "flat", "selectors", "sweep", "resume"}
+         "flat", "selectors", "sweep", "resume", "async"}
     bench_data = {}
 
     print("name,us_per_call,derived")
@@ -685,6 +789,23 @@ def main(argv=None) -> None:
                   f"chunked_match={int(r['chunked_match'])};"
                   f"resume_match={int(r['resume_match'])}",
                   flush=True)
+
+    if "async" in only:
+        async_rows = _async_micro(quick=args.quick)
+        bench_data["async"] = async_rows
+        for r in async_rows:
+            if r["kind"] == "parity":
+                print(f"{r['name']},0,"
+                      f"reduction_match={int(r['reduction_match'])}",
+                      flush=True)
+            else:
+                spd = r["sim_speedup_to_target"]
+                print(f"{r['name']},0,"
+                      f"sync_sim_s={r['sync_total_sim_s']:.1f};"
+                      f"buf_sim_s={r['buffered_total_sim_s']:.1f};"
+                      f"tta_speedup="
+                      f"{'n/a' if spd is None else f'{spd:.2f}'}",
+                      flush=True)
 
     if "kernels" in only:
         kernel_rows = _kernel_micro()

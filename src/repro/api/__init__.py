@@ -20,7 +20,8 @@ Four pieces (see ARCHITECTURE.md §API layer):
 ``repro.fl.run_experiment(...)`` remains as a thin shim over a one-cell
 Plan, so the legacy kwarg surface keeps working.
 """
-from repro.api.capabilities import (BACKENDS, CAPABILITIES, PARAM_LAYOUTS,
+from repro.api.capabilities import (AGGREGATION_KINDS, BACKENDS,
+                                    CAPABILITIES, PARAM_LAYOUTS,
                                     SCENARIO_KINDS, SELECTORS, Capability,
                                     SpecView, support_matrix, validate)
 from repro.api.journal import RunJournal, cell_fingerprint
@@ -30,8 +31,9 @@ from repro.api.session import Session
 from repro.api.spec import ExecutionSpec, spec_from_kwargs
 
 __all__ = [
-    "BACKENDS", "CAPABILITIES", "PARAM_LAYOUTS", "SCENARIO_KINDS",
-    "SELECTORS", "Capability", "SpecView", "support_matrix", "validate",
+    "AGGREGATION_KINDS", "BACKENDS", "CAPABILITIES", "PARAM_LAYOUTS",
+    "SCENARIO_KINDS", "SELECTORS", "Capability", "SpecView",
+    "support_matrix", "validate",
     "Plan", "RunJournal", "RunSet", "Session", "ExecutionSpec",
     "cell_fingerprint", "spec_from_kwargs",
 ]

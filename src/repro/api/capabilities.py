@@ -30,6 +30,9 @@ PARAM_LAYOUTS = ("tree", "flat")
 #: heterogeneity scenario kinds (see ``repro.fl.latency.ScenarioConfig``).
 SCENARIO_KINDS = ("full", "availability", "stragglers")
 
+#: aggregation backends (see ``repro.fl.latency.AggregationConfig``).
+AGGREGATION_KINDS = ("sync", "buffered")
+
 
 @dataclasses.dataclass(frozen=True)
 class Capability:
@@ -37,8 +40,9 @@ class Capability:
 
     Attributes:
         dim: the ``ExecutionSpec``/config dimension (``"selector"``,
-            ``"param_layout"``, ``"scenario"``, ``"shard_clients"``,
-            ``"use_gp_kernel"``, ``"batch_seeds"``).
+            ``"param_layout"``, ``"scenario"``, ``"aggregation"``,
+            ``"shard_clients"``, ``"use_gp_kernel"``, ``"batch_seeds"``,
+            ``"snapshot_every"``, ``"resume"``).
         value: the display value this row covers (e.g. ``"flat"``,
             ``"> 1"``).
         backends: backend name → support note (``"yes"`` or ``"yes (...)"``).
@@ -66,6 +70,8 @@ class SpecView:
         selector: client-selection policy name.
         param_layout: scan-carry layout name.
         scenario_kind: resolved scenario kind string.
+        aggregation_kind: resolved aggregation kind string (``"sync"``
+            round engine or the ``"buffered"`` FedBuff event-scan).
         shard_clients: devices on the ``("clients",)`` cohort mesh axis.
         use_gp_kernel: route GP scoring through the Pallas kernel.
         clients_per_round: the experiment's cohort size K (divisibility
@@ -81,6 +87,7 @@ class SpecView:
     selector: str
     param_layout: str
     scenario_kind: str
+    aggregation_kind: str = "sync"
     shard_clients: int = 1
     use_gp_kernel: bool = False
     clients_per_round: int = 1
@@ -118,6 +125,20 @@ def _snapshot_constraint(v: SpecView) -> Optional[str]:
     return None
 
 
+def _buffered_constraint(v: SpecView) -> Optional[str]:
+    """Structural rules for the buffered (FedBuff) event-scan."""
+    if v.shard_clients > 1:
+        return (f"aggregation='buffered' cannot combine with "
+                f"shard_clients={v.shard_clients}: the in-flight pool "
+                f"carries per-client update matrices that the cohort "
+                f"mesh does not shard")
+    if v.batch_seeds > 1:
+        return (f"aggregation='buffered' cannot combine with a batched "
+                f"multi-seed dispatch (batch_seeds={v.batch_seeds}); "
+                f"a Session runs buffered cells sequentially")
+    return None
+
+
 def _resume_constraint(v: SpecView) -> Optional[str]:
     """Resume only restores what a snapshotting run wrote."""
     if v.snapshot_every <= 0:
@@ -145,6 +166,10 @@ CAPABILITIES: Tuple[Capability, ...] = (
                {"scan": "yes (in-scan masks)"}),
     Capability("scenario", "'stragglers'",
                {"scan": "yes (in-scan deadlines)"}),
+    Capability("aggregation", "'sync'", {"python": "yes", "scan": "yes"}),
+    Capability("aggregation", "'buffered'",
+               {"scan": "yes (event-scan, staleness-weighted FedBuff)"},
+               constraint=_buffered_constraint),
     Capability("shard_clients", "> 1",
                {"scan": "yes (flat layout, K % shards == 0)"},
                constraint=_shard_constraint),
@@ -164,6 +189,10 @@ CAPABILITIES: Tuple[Capability, ...] = (
 # import time rather than in some later sweep
 assert tuple(c.value for c in CAPABILITIES if c.dim == "selector") \
     == SELECTORS
+
+# same import-time anti-drift pin for the aggregation axis
+assert tuple(c.value.strip("'") for c in CAPABILITIES
+             if c.dim == "aggregation") == AGGREGATION_KINDS
 
 
 def support_matrix() -> str:
@@ -241,6 +270,20 @@ def validate(view: SpecView) -> None:
     if view.backend not in scn_rows[view.scenario_kind].backends:
         fail(f"scenario={view.scenario_kind!r} requires backend='scan' "
              f"(the availability/straggler streams are scan inputs).")
+
+    agg_rows = _rows_for("aggregation")
+    if view.aggregation_kind not in agg_rows:
+        fail(f"unknown aggregation {view.aggregation_kind!r}; expected one "
+             f"of {AGGREGATION_KINDS} or a "
+             f"repro.fl.latency.AggregationConfig.")
+    agg_row = agg_rows[view.aggregation_kind]
+    if view.backend not in agg_row.backends:
+        fail(f"aggregation={view.aggregation_kind!r} requires "
+             f"backend='scan' (the buffered event-scan is a compiled "
+             f"lax.scan over aggregation events).")
+    err = agg_row.constraint(view) if agg_row.constraint else None
+    if err:
+        fail(err + ".")
 
     if view.shard_clients != 1:
         if view.shard_clients < 1:

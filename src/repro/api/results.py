@@ -47,6 +47,11 @@ def run_to_record(run) -> dict:
     rec = {"config": _config_to_dict(run.config)}
     for f in _ARRAY_FIELDS:
         rec[f] = np.asarray(getattr(run, f)).tolist()
+    # buffered-aggregation runs carry the simulated event clock; sync
+    # runs omit the key entirely, keeping old records byte-compatible
+    # (schema version 1 unchanged)
+    if getattr(run, "sim_time_s", None) is not None:
+        rec["sim_time_s"] = np.asarray(run.sim_time_s).tolist()
     return rec
 
 
@@ -63,6 +68,8 @@ def run_from_record(rec: dict):
         round_time_s=np.asarray(rec["round_time_s"], np.float32),
         selection_counts=np.asarray(rec["selection_counts"], np.int64),
         coverage=np.asarray(rec["coverage"], np.float32),
+        sim_time_s=None if rec.get("sim_time_s") is None
+        else np.asarray(rec["sim_time_s"], np.float32),
     )
 
 

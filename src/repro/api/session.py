@@ -86,8 +86,18 @@ class Session:
         self.cells = plan.cells()
         self._groups = self._group_cells()
         for idxs, base in self._groups:
-            spec.validate(self.cells[idxs[0]],
-                          n_seeds=len(idxs) if self._batchable(idxs) else 1)
+            cell = self.cells[idxs[0]]
+            n_seeds = len(idxs) if self._batchable(idxs) else 1
+            try:
+                spec.validate(cell, n_seeds=n_seeds)
+            except ValueError as err:
+                # name the offending grid cell AND the full spec — a
+                # sweep can expand to dozens of cells, and "param_layout
+                # requires ..." alone doesn't say which one died
+                raise ValueError(
+                    f"plan cell {cell.name!r} (selector="
+                    f"{cell.selector!r}, seeds={len(idxs)}) is not "
+                    f"runnable under {self.spec}: {err}") from err
         self._data_cache: Dict[Tuple, tuple] = {}
 
     def _group_cells(self) -> List[Tuple[List[int], object]]:
@@ -103,9 +113,13 @@ class Session:
         return [(keyed[k], k) for k in order]
 
     def _batchable(self, idxs: List[int]) -> bool:
-        """Can this group collapse into one vmapped multi-seed dispatch?"""
+        """Can this group collapse into one vmapped multi-seed dispatch?
+        Buffered-aggregation cells never batch (the event-scan is not
+        seed-vmappable) — they run sequentially, like snapshotting
+        cells."""
         return (self.spec.backend == "scan" and self.spec.batch_seeds
                 and self.spec.shard_clients == 1
+                and self.spec.aggregation_kind == "sync"
                 and self.spec.snapshot_every == 0 and len(idxs) > 1)
 
     def _data_for(self, exp):

@@ -29,7 +29,16 @@ class ExecutionSpec:
             ``"flat"`` (one contiguous workspace vector).
         scenario: heterogeneity scenario — ``"full"``,
             ``"availability"``, ``"stragglers"`` or a
-            ``repro.fl.latency.ScenarioConfig``.
+            ``repro.fl.latency.ScenarioConfig``.  String shorthands are
+            coerced into a full ``ScenarioConfig`` at construction, so
+            ``spec.scenario`` is always the resolved config value.
+        aggregation: how client updates reach the server — ``"sync"``
+            (the paper's blocking rounds), ``"buffered"`` (FedBuff-style
+            event-scan: aggregate whenever a buffer of M updates fills,
+            staleness-discounted) or a full
+            ``repro.fl.latency.AggregationConfig`` pinning
+            ``buffer_size`` / ``staleness_discount`` / ``events``.
+            Coerced into an ``AggregationConfig`` at construction.
         shard_clients: shard each round's cohort over this many devices
             on a ``("clients",)`` mesh (scan + flat only).
         use_gp_kernel: route GP scoring (and the flat server update)
@@ -51,6 +60,7 @@ class ExecutionSpec:
     backend: str = "python"
     param_layout: str = "tree"
     scenario: Any = "full"
+    aggregation: Any = "sync"
     shard_clients: int = 1
     use_gp_kernel: bool = False
     batch_seeds: bool = True
@@ -58,11 +68,30 @@ class ExecutionSpec:
     snapshot_dir: Optional[str] = None
     resume: bool = False
 
+    def __post_init__(self):
+        """Coerce scenario/aggregation shorthands into their full config
+        values (``ScenarioConfig`` / ``AggregationConfig``) — unknown
+        names fail HERE, at spec construction, not mid-sweep."""
+        # local import: repro.fl.latency is numpy-only, but importing it
+        # at module level would pull the whole repro.fl package (and
+        # jax) into this leaf-adjacent layer
+        from repro.fl.latency import make_aggregation, make_scenario
+        object.__setattr__(self, "scenario", make_scenario(self.scenario))
+        object.__setattr__(self, "aggregation",
+                           make_aggregation(self.aggregation))
+
     @property
     def scenario_kind(self) -> str:
         """The scenario's kind string (``ScenarioConfig`` or shorthand)."""
         kind = getattr(self.scenario, "kind", self.scenario)
         return "full" if kind is None else kind
+
+    @property
+    def aggregation_kind(self) -> str:
+        """The aggregation kind string (``AggregationConfig`` or
+        shorthand)."""
+        kind = getattr(self.aggregation, "kind", self.aggregation)
+        return "sync" if kind is None else kind
 
     def view(self, exp, n_seeds: int = 1) -> caps.SpecView:
         """Flatten this spec × ``exp`` into the registry's plain-data view.
@@ -78,6 +107,7 @@ class ExecutionSpec:
             backend=self.backend, selector=exp.selector,
             param_layout=self.param_layout,
             scenario_kind=self.scenario_kind,
+            aggregation_kind=self.aggregation_kind,
             shard_clients=self.shard_clients,
             use_gp_kernel=self.use_gp_kernel,
             clients_per_round=exp.clients_per_round,
@@ -105,6 +135,7 @@ class ExecutionSpec:
     def engine_kwargs(self) -> dict:
         """The spec as ``ScanEngine`` keyword arguments."""
         return dict(param_layout=self.param_layout, scenario=self.scenario,
+                    aggregation=self.aggregation,
                     shard_clients=self.shard_clients,
                     use_gp_kernel=self.use_gp_kernel)
 
@@ -112,19 +143,46 @@ class ExecutionSpec:
 def spec_from_kwargs(backend: str = "python", param_layout: str = "tree",
                      scenario: Any = "full", shard_clients: int = 1,
                      use_gp_kernel: bool = False,
-                     batch_seeds: Optional[bool] = None) -> ExecutionSpec:
+                     batch_seeds: Optional[bool] = None,
+                     aggregation: Any = "sync",
+                     buffer_size: Optional[int] = None,
+                     staleness_discount: Optional[float] = None
+                     ) -> ExecutionSpec:
     """Adapter for the legacy ``run_experiment`` kwarg pile.
 
     Args:
         backend / param_layout / scenario / shard_clients / use_gp_kernel:
             the historical loose kwargs, unchanged semantics.
         batch_seeds: ``None`` keeps the spec default (``True``).
+        aggregation: ``"sync"``, ``"buffered"`` or a full
+            ``repro.fl.latency.AggregationConfig``.
+        buffer_size: buffered-mode buffer M; folded into the resolved
+            ``AggregationConfig`` (``None`` keeps its default).
+        staleness_discount: buffered-mode staleness weight base; folded
+            into the resolved ``AggregationConfig`` likewise.
 
     Returns:
         The equivalent :class:`ExecutionSpec`.
+
+    Raises:
+        ValueError: ``buffer_size``/``staleness_discount`` passed with a
+            sync aggregation (they have no sync meaning — fail loudly
+            rather than silently ignore).
     """
+    from repro.fl.latency import make_aggregation
+    agg = make_aggregation(aggregation)
+    overrides = {k: v for k, v in (("buffer_size", buffer_size),
+                                   ("staleness_discount", staleness_discount))
+                 if v is not None}
+    if overrides:
+        if agg.kind != "buffered":
+            raise ValueError(
+                f"{'/'.join(overrides)} only apply to "
+                f"aggregation='buffered'; got aggregation={agg.kind!r}")
+        agg = dataclasses.replace(agg, **overrides)
     kw = dict(backend=backend, param_layout=param_layout, scenario=scenario,
-              shard_clients=shard_clients, use_gp_kernel=use_gp_kernel)
+              aggregation=agg, shard_clients=shard_clients,
+              use_gp_kernel=use_gp_kernel)
     if batch_seeds is not None:
         kw["batch_seeds"] = batch_seeds
     return ExecutionSpec(**kw)

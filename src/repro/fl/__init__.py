@@ -9,7 +9,11 @@ paper's four selectors, with bit-identical selection histories (host-RNG
 streams precomputed into scan inputs), optional client-sharded cohorts
 (``shard_clients``), in-scan heterogeneity scenarios (``scenario=``; see
 ``repro.fl.latency``) and batched multi-seed dispatch
-(``BatchedSeedEngine`` — S seeds vmapped into one scan).  The
+(``BatchedSeedEngine`` — S seeds vmapped into one scan).  The scan
+backend additionally offers buffered asynchronous aggregation
+(``aggregation="buffered"``; :class:`repro.fl.latency.AggregationConfig`)
+— a FedBuff-style scan over aggregation events with
+staleness-discounted weights.  The
 combination matrix (``repro.fl.simulation.SUPPORT_MATRIX``) is derived
 from the capability registry in ``repro.api.capabilities``; sweeps
 should go through the declarative ``repro.api`` layer
@@ -22,7 +26,8 @@ from repro.fl.simulation import (RunResult, SUPPORT_MATRIX, init_gp_phase,
                                  run_experiment, run_python_loop)
 from repro.fl.engine import (BatchedSeedEngine, ScanEngine,
                              run_batched_seeds, run_experiment_scan)
-from repro.fl.latency import LatencyModel, ScenarioConfig, compare_selectors
+from repro.fl.latency import (AggregationConfig, LatencyModel,
+                              ScenarioConfig, compare_selectors)
 
 __all__ = [
     "make_cohort_trainer", "make_cohort_loss_eval",
@@ -32,5 +37,6 @@ __all__ = [
     "run_python_loop",
     "BatchedSeedEngine", "ScanEngine", "run_batched_seeds",
     "run_experiment_scan",
-    "LatencyModel", "ScenarioConfig", "compare_selectors",
+    "AggregationConfig", "LatencyModel", "ScenarioConfig",
+    "compare_selectors",
 ]

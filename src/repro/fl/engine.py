@@ -81,6 +81,27 @@ feedback (their completion times come from ``fl.latency.LatencyModel``).
 Both ride into the scan as precomputed (T, N) inputs — no host round
 trips.
 
+Buffered asynchronous aggregation (``aggregation="buffered"``, see
+``repro.fl.latency.AggregationConfig``): the scan iterates over
+aggregation *events* instead of rounds (FedBuff).  A pool of K clients
+stays in flight at completion times drawn from the scenario's latency
+model; each event flushes the M = ``buffer_size`` earliest-completing
+updates with staleness-discounted FedAvg weights (λ ∝ discount^s for an
+update trained s events ago), advances the simulated clock to the M-th
+completion, gates STALE updates out of GPFL's bandit feedback
+(``gpcb.observe(valid_mask=)``) and dispatches M replacement clients
+selected against the just-aggregated model.  One jitted dispatch still
+covers the whole run (the prefill prologue — sync round 0's cohort going
+into the pool — plus all E events), both param layouts.  Parity
+contract: ``staleness_discount=1.0`` + a zero-latency model + M = K
+replays the sync engine bit-identically — an all-fresh buffer takes the
+sync engine's ``weights=None`` reduction, the stable ready-time argsort
+preserves dispatch order, and event e consumes stream row e+1 (row 0 is
+the prefill's), so the selector streams' first T rows are consumed
+exactly as the sync scan consumes them.  CI gates this via the async
+bench (``BENCH_async.json``).  Snapshots/resume work unchanged —
+``snapshot_every``/``until_round`` count events.
+
 GP score path: ``gp_impl="auto"`` routes through the Pallas kernels
 wherever they compile for real (TPU) and through jnp elsewhere —
 interpret mode is resolved per-backend by ``repro.kernels.interpret``,
@@ -149,8 +170,9 @@ from repro.core.selector import (fedcor_cov_update, fedcor_greedy,
 from repro.data import ClientStore
 from repro.dist.sharding import cohort_axis_rules, cohort_specs
 from repro.fl.client import make_cohort_loss_eval, make_cohort_trainer
-from repro.fl.latency import (ScenarioConfig, availability_stream,
-                              completion_time_stream, make_scenario)
+from repro.fl.latency import (AggregationConfig, ScenarioConfig,
+                              availability_stream, completion_time_stream,
+                              make_aggregation, make_scenario)
 from repro.fl.server import (fedavg, make_table_evaluator, server_update_flat,
                              update_global_direction)
 from repro.fl.simulation import (INIT_CHUNK, RunResult, _build_data,
@@ -170,13 +192,18 @@ _FEDCOR_BETA = 0.95
 
 
 class RoundCarry(NamedTuple):
-    """Device-resident state carried across scanned rounds.
+    """Device-resident state carried across scanned rounds (or, in the
+    buffered aggregation backend, across aggregation *events*).
 
     ``params`` / ``direction`` are parameter pytrees in the tree layout
     and padded ``(Dp,)`` workspace vectors in the flat layout.
     ``fc_cov`` / ``fc_prev`` hold FedCor's (N, N) client covariance and
     previous all-client loss vector ((1, 1)/(1,) placeholders for the
-    other selectors, so the carry stays cheap)."""
+    other selectors, so the carry stays cheap).  The ``pool_*`` fields
+    are the buffered backend's in-flight client pool — K trained-but-not-
+    yet-aggregated updates with their owner ids, completion times and
+    the model version each trained against (tiny placeholders in sync
+    mode, like ``fc_cov``)."""
     params: Any               # global model w^t
     direction: Any            # global momentum direction g (Eq. 1-2)
     bandit: gpcb.BanditState  # reward sums / selection counts / round
@@ -185,6 +212,12 @@ class RoundCarry(NamedTuple):
     key: jnp.ndarray          # PRNG key, split once per round
     fc_cov: jnp.ndarray       # (N, N) FedCor covariance EMA
     fc_prev: jnp.ndarray      # (N,) FedCor previous loss probe
+    pool_w: Any               # (K, ...) in-flight trained params (buffered)
+    pool_d: Any               # (K, ...) in-flight local momenta (buffered)
+    pool_ids: jnp.ndarray     # (K,) i32 owner client of each slot
+    pool_ready: jnp.ndarray   # (K,) f32 completion time of each slot
+    pool_ver: jnp.ndarray     # (K,) i32 model version each slot trained on
+    clock: jnp.ndarray        # () f32 simulated server time
 
 
 def _copy_carry(c: RoundCarry) -> RoundCarry:
@@ -192,11 +225,10 @@ def _copy_carry(c: RoundCarry) -> RoundCarry:
     are copied through their raw key data (extended dtypes have no
     ``jnp.copy``)."""
     cp = functools.partial(jax.tree.map, jnp.copy)
-    return RoundCarry(
-        params=cp(c.params), direction=cp(c.direction), bandit=cp(c.bandit),
-        latest_gp=jnp.copy(c.latest_gp), seen=jnp.copy(c.seen),
-        key=jax.random.wrap_key_data(jnp.copy(jax.random.key_data(c.key))),
-        fc_cov=jnp.copy(c.fc_cov), fc_prev=jnp.copy(c.fc_prev))
+    d = c._asdict()
+    key = jax.random.wrap_key_data(
+        jnp.copy(jax.random.key_data(d.pop("key"))))
+    return RoundCarry(key=key, **{k: cp(v) for k, v in d.items()})
 
 
 def _carry_to_tree(c: RoundCarry) -> dict:
@@ -215,6 +247,19 @@ def _tree_to_carry(tree: dict) -> RoundCarry:
     d["bandit"] = gpcb.BanditState(**d["bandit"])
     d["key"] = jax.random.wrap_key_data(d["key"])
     return RoundCarry(**d)
+
+
+def _sync_pool_stubs() -> dict:
+    """Tiny placeholders for the buffered backend's pool fields — the
+    sync backend has no in-flight pool, but ``RoundCarry`` is one shared
+    NamedTuple, so the fields ride along as cheap constants (exactly like
+    FedCor's ``fc_cov`` placeholder for the other selectors)."""
+    return dict(pool_w=jnp.zeros((1,), jnp.float32),
+                pool_d=jnp.zeros((1,), jnp.float32),
+                pool_ids=jnp.zeros((1,), jnp.int32),
+                pool_ready=jnp.zeros((1,), jnp.float32),
+                pool_ver=jnp.zeros((1,), jnp.int32),
+                clock=jnp.zeros((), jnp.float32))
 
 
 def _resolve_gp_impl(gp_impl: str, use_gp_kernel: bool) -> str:
@@ -248,6 +293,16 @@ class ScanEngine:
         log_every: 0 silences in-scan progress prints.
         scenario: ``"full"`` / ``"availability"`` / ``"stragglers"`` or a
             ``repro.fl.latency.ScenarioConfig``.
+        aggregation: ``"sync"`` (the paper's blocking rounds),
+            ``"buffered"`` or a ``repro.fl.latency.AggregationConfig`` —
+            the buffered backend scans aggregation EVENTS instead of
+            rounds: K clients stay in flight at completion times drawn
+            from the scenario's latency model, each event flushes the
+            ``buffer_size`` earliest updates with staleness-discounted
+            weights and dispatches their replacements (FedBuff).  The
+            straggler deadline is meaningless here (nothing blocks), so
+            a ``"stragglers"`` scenario contributes only its latency
+            model.
         shard_clients: devices on the ``("clients",)`` mesh axis; > 1
             requires ``param_layout="flat"`` and K divisible by it.
         snapshot_every: > 0 segments the scan into chunks of N rounds and
@@ -262,6 +317,7 @@ class ScanEngine:
                  param_layout: str = "tree", use_ee: bool = True,
                  log_every: int = 0,
                  scenario: Union[str, ScenarioConfig, None] = "full",
+                 aggregation: Union[str, AggregationConfig, None] = "sync",
                  shard_clients: int = 1, data=None,
                  defer_init: bool = False,
                  snapshot_every: int = 0,
@@ -276,12 +332,22 @@ class ScanEngine:
         sub-engines only) skips the expensive Algorithm 1 init phase,
         leaving zero placeholders the batched engine overwrites with its
         seed-vmapped init — such an engine cannot ``run()`` itself."""
+        self.aggregation = make_aggregation(aggregation)
+        self.buffered = self.aggregation.kind == "buffered"
         validate_capabilities(SpecView(
             backend="scan", selector=exp.selector, param_layout=param_layout,
             scenario_kind=getattr(scenario, "kind", scenario or "full"),
+            aggregation_kind=self.aggregation.kind,
             shard_clients=int(shard_clients), use_gp_kernel=use_gp_kernel,
             clients_per_round=exp.clients_per_round,
             snapshot_every=int(snapshot_every)))
+        # buffered: buffer size M (updates per aggregation event) and the
+        # event count E — at M = K every event is a full sync round
+        self.buffer_m = self.aggregation.resolved_buffer(
+            exp.clients_per_round) if self.buffered else exp.clients_per_round
+        self.events = self.aggregation.resolved_events(
+            exp.rounds, exp.clients_per_round) if self.buffered \
+            else exp.rounds
         self.snapshot_every = int(snapshot_every)
         self.snapshot_path = snapshot_path
         if self.snapshot_every > 0 and not snapshot_path:
@@ -327,13 +393,25 @@ class ScanEngine:
         self._jit: Dict[str, Any] = {"scan": None, "chunk": None}
 
     def _compiled(self):
-        """The jitted full-T scan, built on first use.  Donates the
-        params/direction carries: XLA aliases them into the scan instead
-        of holding a live caller copy (``run()`` passes copies)."""
+        """The jitted full-run scan (all T rounds, or — buffered — the
+        prefill prologue plus all E aggregation events), built on first
+        use.  Donates the params/direction carries: XLA aliases them into
+        the scan instead of holding a live caller copy (``run()`` passes
+        copies)."""
         if self._jit["scan"] is None:
-            self._jit["scan"] = jax.jit(self._build_scan(),
-                                        donate_argnums=(0, 1))
+            build = self._build_event_scan if self.buffered \
+                else self._build_scan
+            self._jit["scan"] = jax.jit(build(), donate_argnums=(0, 1))
         return self._jit["scan"]
+
+    def _compiled_prefill(self):
+        """The jitted buffered prologue (select + train the initial K
+        in-flight clients), used by the CHUNKED path only — the full-run
+        dispatcher inlines the prefill into its single jit.  Not donated:
+        its inputs are the engine's cached initial state."""
+        if self._jit.get("prefill") is None:
+            self._jit["prefill"] = jax.jit(self._build_prefill())
+        return self._jit["prefill"]
 
     def _compiled_chunk(self):
         """The jitted N-round chunk scan (snapshot runs), built on first
@@ -524,8 +602,10 @@ class ScanEngine:
                     (t, acc, gl_loss, cov))
 
             out = {"ids": ids, "acc": acc, "loss": gl_loss, "coverage": cov}
-            return RoundCarry(params, direction, bandit, latest_gp, seen,
-                              key, fc_cov, fc_prev), out
+            return carry._replace(
+                params=params, direction=direction, bandit=bandit,
+                latest_gp=latest_gp, seen=seen, key=key, fc_cov=fc_cov,
+                fc_prev=fc_prev), out
 
         return body
 
@@ -539,17 +619,286 @@ class ScanEngine:
             jitter, sel_ids, cand_ids, avail, lat = streams
             tabs = tables + eval_tabs
             carry0 = RoundCarry(params, direction, bandit, latest_gp,
-                                jnp.zeros((N,), bool), key, fc_cov, fc_prev)
+                                jnp.zeros((N,), bool), key, fc_cov, fc_prev,
+                                **_sync_pool_stubs())
             return jax.lax.scan(
                 functools.partial(body, tabs), carry0,
                 (jnp.arange(T), jitter, sel_ids, cand_ids, avail, lat))
 
         return run_scan
 
+    # -------------------- the buffered (FedBuff) event-scan backend ----
+    def _build_prefill(self):
+        """The buffered prologue: sync round 0's selection + training,
+        except the K trained updates go into the in-flight pool instead
+        of being aggregated — event 0 flushes the earliest of them.  Key
+        splits and stream rows are consumed exactly as the sync body's
+        round 0 does, which is what makes the M = K zero-latency parity
+        bit-exact."""
+        exp, scn = self.exp, self.scenario
+        N, K, E = self.store.n_clients, exp.clients_per_round, self.events
+        trainer, loss_eval = self.trainer, self.loss_eval
+        sel = exp.selector
+        is_gpfl, is_random = sel == "gpfl", sel == "random"
+        is_powd = sel == "powd"
+        is_flat = self.param_layout == "flat"
+        has_avail = scn.kind == "availability"
+        use_ee = self.use_ee
+        spec = self.spec
+
+        def prefill(params, direction, bandit, latest_gp, fc_cov, fc_prev,
+                    key, streams, tables):
+            jitter, sel_ids, cand_ids, avail, lat = streams
+            x_tab, y_tab, sz_tab = tables
+            key, kt = jax.random.split(key)
+            avail_arg = avail[0] if has_avail else None
+            params_in = flat_mod.unpack(spec, params) if is_flat else params
+
+            if is_gpfl:
+                scores = gpcb.selection_scores(
+                    bandit, latest_gp, jitter[0], 0, E,
+                    rho=exp.rho, use_ee=use_ee, avail=avail_arg)
+                ids = jnp.argsort(-scores)[:K]
+            elif is_random:
+                ids = sel_ids[0]
+            elif is_powd:
+                cx, cy, csz = ClientStore.gather_tables(
+                    x_tab, y_tab, sz_tab, cand_ids[0])
+                closs = loss_eval(params_in, cx, cy, csz)
+                ids = jnp.take(cand_ids[0], jnp.argsort(-closs)[:K])
+            else:  # fedcor: round 0 is always warm-up (W >= 2), but the
+                # all-client probe still runs and seeds fc_prev
+                fc_prev = loss_eval(params_in, x_tab, y_tab, sz_tab)
+                ids = sel_ids[0]
+            ids = ids.astype(jnp.int32)
+
+            x, y, sizes = ClientStore.gather_tables(x_tab, y_tab, sz_tab,
+                                                    ids)
+            rngs = jax.random.split(kt, K)
+            w_i, d_i, _ = trainer(params_in, x, y, sizes, rngs)
+            return RoundCarry(
+                params=params, direction=direction, bandit=bandit,
+                latest_gp=latest_gp, seen=jnp.zeros((N,), bool), key=key,
+                fc_cov=fc_cov, fc_prev=fc_prev,
+                pool_w=flat_mod.pack_stacked(spec, w_i) if is_flat else w_i,
+                pool_d=flat_mod.pack_stacked(spec, d_i) if is_flat else d_i,
+                pool_ids=ids, pool_ready=jnp.take(lat[0], ids),
+                pool_ver=jnp.zeros((K,), jnp.int32),
+                clock=jnp.zeros((), jnp.float32))
+
+        return prefill
+
+    def _build_event_body(self):
+        """One buffered aggregation event, fully on device: flush the M
+        earliest-completing in-flight updates with staleness-discounted
+        FedAvg weights, evaluate, feed the FRESH updates to GPFL's
+        bandit, then select + train the M replacement clients against
+        the just-aggregated model.  Event e dispatches cohort slot
+        t = e + 1, consuming stream row t and one key split — the sync
+        body's round-t discipline."""
+        exp, scn = self.exp, self.scenario
+        N, K = self.store.n_clients, exp.clients_per_round
+        M, E = self.buffer_m, self.events
+        W = max(exp.fedcor_warmup, 2)
+        discount = float(self.aggregation.staleness_discount)
+        trainer, loss_eval = self.trainer, self.loss_eval
+        evaluate = make_table_evaluator(exp)
+        use_ee, log_every = self.use_ee, self.log_every
+        sel = exp.selector
+        is_gpfl, is_random = sel == "gpfl", sel == "random"
+        is_powd, is_fedcor = sel == "powd", sel == "fedcor"
+        is_flat = self.param_layout == "flat"
+        use_kernel = self.gp_impl == "kernel"
+        has_avail = scn.kind == "availability"
+        spec = self.spec
+
+        if is_flat:
+            if use_kernel:
+                from repro.kernels.ops import gp_projection
+                score_fn = gp_projection
+            else:
+                score_fn = gp_mod.gp_scores_matrix
+        elif use_kernel:
+            from repro.kernels.ops import gp_projection_tree
+            score_fn = gp_projection_tree
+        else:
+            score_fn = gp_mod.gp_scores_stacked
+
+        def take(tree, idx):
+            return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), tree)
+
+        def body(tabs, carry: RoundCarry, xs):
+            x_tab, y_tab, sz_tab, eval_x, eval_y = tabs
+            e, jitter, sel_row, cand_row, avail, lat = xs
+            key, kt = jax.random.split(carry.key)
+            t = e + 1   # the dispatch slot: sync round t's stream row
+            avail_arg = avail if has_avail else None
+
+            # ---- flush the M earliest-completing in-flight updates ----
+            # stable argsort: equal ready times keep pool (= dispatch)
+            # order, which the zero-latency parity contract relies on
+            order = jnp.argsort(carry.pool_ready, stable=True)
+            flush, keep = order[:M], order[M:]
+            f_ids = jnp.take(carry.pool_ids, flush)
+            # dispatch at event j stamps version j+1, so a slot flushed
+            # at the very next event has staleness 0
+            staleness = e - jnp.take(carry.pool_ver, flush)
+            lam = jnp.power(discount, staleness.astype(jnp.float32))
+            all_fresh = jnp.all(staleness == 0)
+            w_flush = take(carry.pool_w, flush)
+            d_flush = take(carry.pool_d, flush)
+            # the server "wakes up" when the M-th update lands; kept
+            # slots complete later and new dispatches start from here,
+            # so the clock is monotone
+            clock = jnp.take(carry.pool_ready, order[M - 1])
+
+            # an all-fresh buffer takes the sync engine's weights=None
+            # reduction (jnp.mean is NOT bitwise a uniform tensordot),
+            # so discount=1.0 + zero latency is bit-identical to sync
+            if is_flat:
+                params, direction = jax.lax.cond(
+                    all_fresh,
+                    lambda: server_update_flat(
+                        w_flush, carry.params, carry.direction, lr=exp.lr,
+                        gamma=exp.momentum, weights=None,
+                        use_kernel=use_kernel),
+                    lambda: server_update_flat(
+                        w_flush, carry.params, carry.direction, lr=exp.lr,
+                        gamma=exp.momentum, weights=lam / jnp.sum(lam),
+                        use_kernel=use_kernel))
+                acc, gl_loss = evaluate(flat_mod.unpack(spec, params),
+                                        eval_x, eval_y)
+            else:
+                params = jax.lax.cond(
+                    all_fresh,
+                    lambda: fedavg(w_flush, None),
+                    lambda: fedavg(w_flush, lam / jnp.sum(lam)))
+                direction = update_global_direction(
+                    carry.direction, carry.params, params, exp.lr,
+                    exp.momentum)
+                acc, gl_loss = evaluate(params, eval_x, eval_y)
+
+            # ---- feedback: only FRESH updates may touch the bandit ----
+            # (their momenta are projections against a direction the
+            # server has since moved past — Eq. 3 scores of stale
+            # updates are meaningless, so they are masked out exactly
+            # like straggler-dropped clients in the sync backend)
+            if is_gpfl:
+                gp_scores = score_fn(d_flush, carry.direction)
+                bandit, latest_gp = gpcb.observe(
+                    carry.bandit, carry.latest_gp, f_ids, gp_scores, acc,
+                    gl_loss, valid_mask=(staleness == 0))
+            else:
+                bandit, latest_gp = carry.bandit, carry.latest_gp
+
+            seen = carry.seen.at[f_ids].set(True)
+            cov = jnp.mean(seen.astype(jnp.float32))
+
+            # ---- dispatch M replacements against the new model ----
+            params_in = flat_mod.unpack(spec, params) if is_flat \
+                else params
+            fc_cov, fc_prev = carry.fc_cov, carry.fc_prev
+            if is_gpfl:
+                scores = gpcb.selection_scores(
+                    bandit, latest_gp, jitter, t, E, rho=exp.rho,
+                    use_ee=use_ee, avail=avail_arg)
+                n_ids = jnp.argsort(-scores)[:M]
+            elif is_random:
+                n_ids = sel_row[:M]
+            elif is_powd:
+                cx, cy, csz = ClientStore.gather_tables(
+                    x_tab, y_tab, sz_tab, cand_row)
+                closs = loss_eval(params_in, cx, cy, csz)
+                n_ids = jnp.take(cand_row, jnp.argsort(-closs)[:M])
+            else:  # fedcor: probe the NEW model, select with the
+                # PRE-update covariance, then fold the probe in — the
+                # sync body's round-t ordering (t = e+1 >= 1, so the
+                # EMA update is unconditional here)
+                all_losses = loss_eval(params_in, x_tab, y_tab, sz_tab)
+                n_ids = jax.lax.cond(
+                    t < W,
+                    lambda: sel_row[:M],
+                    lambda: fedcor_greedy(carry.fc_cov, M,
+                                          avail=avail_arg))
+                fc_cov = fedcor_cov_update(carry.fc_cov, carry.fc_prev,
+                                           all_losses, beta=_FEDCOR_BETA)
+                fc_prev = all_losses
+            n_ids = n_ids.astype(jnp.int32)
+
+            x, y, sizes = ClientStore.gather_tables(x_tab, y_tab, sz_tab,
+                                                    n_ids)
+            rngs = jax.random.split(kt, M)
+            w_i, d_i, _ = trainer(params_in, x, y, sizes, rngs)
+            new_w = flat_mod.pack_stacked(spec, w_i) if is_flat else w_i
+            new_d = flat_mod.pack_stacked(spec, d_i) if is_flat else d_i
+
+            def cat(kept, new):
+                return jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0), kept,
+                    new)
+
+            pool_w = cat(take(carry.pool_w, keep), new_w)
+            pool_d = cat(take(carry.pool_d, keep), new_d)
+            pool_ids = jnp.concatenate([jnp.take(carry.pool_ids, keep),
+                                        n_ids])
+            pool_ready = jnp.concatenate(
+                [jnp.take(carry.pool_ready, keep),
+                 clock + jnp.take(lat, n_ids)])
+            pool_ver = jnp.concatenate(
+                [jnp.take(carry.pool_ver, keep),
+                 jnp.full((M,), t, jnp.int32)])
+
+            if log_every:
+                fmt = (f"[{exp.name}/scan] event {{r}}/{E} acc={{a:.4f}} "
+                       "loss={l:.4f} cov={c:.2f}")
+                jax.lax.cond(
+                    (e + 1) % log_every == 0,
+                    lambda op: jax.debug.print(fmt, r=op[0] + 1, a=op[1],
+                                               l=op[2], c=op[3]),
+                    lambda op: None,
+                    (e, acc, gl_loss, cov))
+
+            out = {"ids": f_ids, "acc": acc, "loss": gl_loss,
+                   "coverage": cov, "sim_time": clock}
+            return carry._replace(
+                params=params, direction=direction, bandit=bandit,
+                latest_gp=latest_gp, seen=seen, key=key, fc_cov=fc_cov,
+                fc_prev=fc_prev, pool_w=pool_w, pool_d=pool_d,
+                pool_ids=pool_ids, pool_ready=pool_ready,
+                pool_ver=pool_ver, clock=clock), out
+
+        return body
+
+    def _build_event_scan(self):
+        """The buffered full-run dispatcher: prefill the pool (sync
+        round 0's cohort) and scan all E aggregation events, one jit.
+        Event e consumes stream row e+1 — row 0 belongs to the
+        prefill — so at E = T the selector streams' first T rows are
+        consumed exactly as the sync scan consumes them."""
+        prefill = self._build_prefill()
+        body = self._build_event_body()
+        E = self.events
+
+        def run_scan(params, direction, bandit, latest_gp, fc_cov, fc_prev,
+                     key, streams, tables, eval_tabs):
+            tabs = tables + eval_tabs
+            carry0 = prefill(params, direction, bandit, latest_gp, fc_cov,
+                             fc_prev, key, streams, tables)
+            jitter, sel_ids, cand_ids, avail, lat = \
+                (s[1:] for s in streams)
+            return jax.lax.scan(
+                functools.partial(body, tabs), carry0,
+                (jnp.arange(E), jitter, sel_ids, cand_ids, avail, lat))
+
+        return run_scan
+
     def _build_chunk(self):
-        """The chunk dispatcher: scans an N-round segment from an
-        explicit carry (round offsets ride in as the ``ts`` input)."""
-        body = self._build_body()
+        """The chunk dispatcher: scans an N-round (buffered: N-event)
+        segment from an explicit carry (round/event offsets ride in as
+        the ``ts`` input; the buffered caller pre-shifts the stream
+        slices by one row for the prefill)."""
+        body = self._build_event_body() if self.buffered \
+            else self._build_body()
 
         def run_chunk(carry, ts, streams, tables, eval_tabs):
             jitter, sel_ids, cand_ids, avail, lat = streams
@@ -577,6 +926,11 @@ class ScanEngine:
         """
         exp, scn = self.exp, self.scenario
         N, K, T = self.store.n_clients, exp.clients_per_round, exp.rounds
+        # buffered runs need one stream row per dispatch: the prefill
+        # (row 0) plus one per event — every stream function consumes its
+        # rng strictly row-by-row, so at E = T the first T rows are
+        # bit-identical to the sync streams (the parity contract)
+        R = self.events + 1 if self.buffered else T
         rng_np = np.random.default_rng(exp.seed)
         key = jax.random.key(exp.seed)
         key, k0 = jax.random.split(key)
@@ -587,17 +941,19 @@ class ScanEngine:
         if scn.kind == "availability":
             need = max(K, self.powd_d) if exp.selector == "powd" else K
             srng = np.random.default_rng((exp.seed, scn.seed, 1))
-            avail_np = availability_stream(srng, T, N, scn.availability,
+            avail_np = availability_stream(srng, R, N, scn.availability,
                                            need)
-        elif scn.kind == "stragglers":
+        if scn.kind == "stragglers" or self.buffered:
+            # buffered aggregation ALWAYS draws completion times — they
+            # are its event clock, whatever the scenario kind
             srng = np.random.default_rng((exp.seed, scn.seed, 2))
             lat_np = completion_time_stream(
-                dataclasses.replace(scn.latency, n_clients=N), srng, T)
+                dataclasses.replace(scn.latency, n_clients=N), srng, R)
 
         # -- selector streams: replay the host loop's rng consumption --
-        jitter = np.zeros((T, 1), np.float32)
-        sel_ids = np.zeros((T, 1), np.int32)
-        cand_ids = np.zeros((T, 1), np.int32)
+        jitter = np.zeros((R, 1), np.float32)
+        sel_ids = np.zeros((R, 1), np.int32)
+        cand_ids = np.zeros((R, 1), np.int32)
         if exp.selector == "gpfl":
             # Algorithm 1 init phase — shared with the host loop so the
             # seed GPs (and hence round-0 selection) are bit-identical.
@@ -612,20 +968,20 @@ class ScanEngine:
                 direction, gp_all = init_gp_phase(self.trainer, self.store,
                                                   params, kinit)
                 latest_gp = jnp.asarray(gp_all, jnp.float32)
-            jitter = np.asarray(gpfl_jitter_stream(rng_np, T, N), np.float32)
+            jitter = np.asarray(gpfl_jitter_stream(rng_np, R, N), np.float32)
         else:
             direction = tree_zeros_like(params)
             latest_gp = jnp.zeros((N,), jnp.float32)
             if exp.selector == "random":
-                sel_ids = random_id_stream(rng_np, T, N, K,
+                sel_ids = random_id_stream(rng_np, R, N, K,
                                            avail=avail_np).astype(np.int32)
             elif exp.selector == "powd":
                 cand_ids = powd_candidate_stream(
-                    rng_np, T, N, self.powd_d,
+                    rng_np, R, N, self.powd_d,
                     avail=avail_np).astype(np.int32)
             elif exp.selector == "fedcor":
                 sel_ids = fedcor_warmup_stream(
-                    rng_np, T, N, K, exp.fedcor_warmup,
+                    rng_np, R, N, K, exp.fedcor_warmup,
                     avail=avail_np).astype(np.int32)
         bandit = gpcb.init_state(N)
 
@@ -646,9 +1002,9 @@ class ScanEngine:
             jnp.asarray(sel_ids),
             jnp.asarray(cand_ids),
             jnp.asarray(avail_np) if avail_np is not None
-            else jnp.zeros((T, 1), bool),
+            else jnp.zeros((R, 1), bool),
             jnp.asarray(lat_np) if lat_np is not None
-            else jnp.zeros((T, 1), jnp.float32),
+            else jnp.zeros((R, 1), jnp.float32),
         )
         return (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
                 streams)
@@ -669,28 +1025,53 @@ class ScanEngine:
                          self.scenario.deadline_s),
             "use_ee": self.use_ee,
             "gp_impl": self.gp_impl,
+            "aggregation": (self.aggregation.kind, int(self.buffer_m),
+                            int(self.events),
+                            float(self.aggregation.staleness_discount)),
         }
         return hashlib.sha1(
             json.dumps(payload, sort_keys=True).encode()).hexdigest()
 
     def _fresh_carry(self) -> RoundCarry:
         """Round-0 carry assembled from the cached initial state (shared
-        references — callers must copy before donating)."""
+        references — callers must copy before donating).  Buffered: the
+        pool fields are STRUCTURAL zeros — the real initial pool comes
+        from the prefill dispatch; this carry only serves as the restore
+        template (and the sync chunk path's round-0 state)."""
         (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
          _streams) = self._inputs
+        if self.buffered:
+            K = self.exp.clients_per_round
+
+            def z(t):
+                return jax.tree.map(
+                    lambda a: jnp.zeros((K,) + a.shape, a.dtype), t)
+
+            pool = dict(pool_w=z(params), pool_d=z(params),
+                        pool_ids=jnp.zeros((K,), jnp.int32),
+                        pool_ready=jnp.zeros((K,), jnp.float32),
+                        pool_ver=jnp.zeros((K,), jnp.int32),
+                        clock=jnp.zeros((), jnp.float32))
+        else:
+            pool = _sync_pool_stubs()
         return RoundCarry(params, direction, bandit, latest_gp,
                           jnp.zeros((self.store.n_clients,), bool), key,
-                          fc_cov, fc_prev)
+                          fc_cov, fc_prev, **pool)
 
     def _empty_outs(self) -> Dict[str, np.ndarray]:
-        """Preallocated full-T host buffers for the scan outputs (chunks
-        fill rows [t, t+n); fixed shapes keep the snapshot restorable
-        without knowing how far the run got)."""
-        T, K = self.exp.rounds, self.exp.clients_per_round
-        return {"ids": np.zeros((T, K), np.int32),
-                "acc": np.zeros((T,), np.float32),
-                "loss": np.zeros((T,), np.float32),
-                "coverage": np.zeros((T,), np.float32)}
+        """Preallocated full-run host buffers for the scan outputs
+        (chunks fill rows [t, t+n); fixed shapes keep the snapshot
+        restorable without knowing how far the run got).  Sync: T rounds
+        of K selections; buffered: E events of M flushes, plus the
+        simulated-clock trace."""
+        R, C = self.events, self.buffer_m
+        outs = {"ids": np.zeros((R, C), np.int32),
+                "acc": np.zeros((R,), np.float32),
+                "loss": np.zeros((R,), np.float32),
+                "coverage": np.zeros((R,), np.float32)}
+        if self.buffered:
+            outs["sim_time"] = np.zeros((R,), np.float32)
+        return outs
 
     def _write_snapshot(self, carry: RoundCarry, outs: dict,
                         rounds_done: int) -> None:
@@ -703,7 +1084,7 @@ class ScanEngine:
             step=int(rounds_done),
             meta={"fingerprint": self.fingerprint(),
                   "rounds": int(rounds_done),
-                  "total_rounds": int(self.exp.rounds),
+                  "total_rounds": int(self.events),
                   "snapshot_every": int(self.snapshot_every)})
 
     def _read_snapshot(self):
@@ -771,9 +1152,8 @@ class ScanEngine:
         return self._run_chunked(resume=resume, until_round=until_round)
 
     def _run_single(self) -> RunResult:
-        """The snapshot-free fast path: one dispatch for all T rounds."""
-        exp = self.exp
-        N, T = self.store.n_clients, exp.rounds
+        """The snapshot-free fast path: one dispatch for the whole run
+        (all T rounds, or — buffered — prefill + all E events)."""
         (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
          streams) = self._inputs
 
@@ -789,33 +1169,47 @@ class ScanEngine:
 
         return self._result(
             {k: np.asarray(v) for k, v in out.items()},
-            wall=scan_wall, rounds_timed=T)
+            wall=scan_wall, rounds_timed=self.events)
 
     def _run_chunked(self, *, resume: bool,
                      until_round: Optional[int]) -> Optional[RunResult]:
-        """Segmented execution: chunks of ``snapshot_every`` rounds, the
-        carry snapshotted (host-copied first) after every chunk."""
-        T = self.exp.rounds
-        stop = T if until_round is None else min(int(until_round), T)
+        """Segmented execution: chunks of ``snapshot_every`` rounds
+        (buffered: events), the carry snapshotted (host-copied first)
+        after every chunk."""
+        E = self.events
+        stop = E if until_round is None else min(int(until_round), E)
         if until_round is not None and until_round < 1:
             raise ValueError(f"until_round must be >= 1; got {until_round}")
         streams = self._inputs[7]
         t = 0
         outs = self._empty_outs()
+        tables, eval_tabs = self.store.tables(), (self.eval_x, self.eval_y)
         if resume and os.path.exists(self.snapshot_path):
             carry, outs, t = self._read_snapshot()
+        elif self.buffered:
+            # event 0's carry comes from the prefill dispatch; COPY it —
+            # a jit may alias pass-through outputs (params, bandit, ...)
+            # to its inputs, i.e. to the engine's cached initial state,
+            # which the chunk's whole-carry donation must never consume
+            (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
+             _s) = self._inputs
+            carry = _copy_carry(self._compiled_prefill()(
+                params, direction, bandit, latest_gp, fc_cov, fc_prev,
+                key, streams, tables))
         else:
             # round 0: fresh copies, so the cached initial state survives
             # the chunk's whole-carry donation
             carry = _copy_carry(self._fresh_carry())
-        tables, eval_tabs = self.store.tables(), (self.eval_x, self.eval_y)
 
         t0 = time.perf_counter()
         ran = 0
+        # buffered chunks shift the stream window by one row: row 0 was
+        # the prefill's, event e consumes row e+1
+        ofs = 1 if self.buffered else 0
         while t < stop:
             n = min(self.snapshot_every, stop - t)
             ts = jnp.arange(t, t + n)
-            chunk_streams = tuple(s[t:t + n] for s in streams)
+            chunk_streams = tuple(s[t + ofs:t + n + ofs] for s in streams)
             carry, out = jax.block_until_ready(self._compiled_chunk()(
                 carry, ts, chunk_streams, tables, eval_tabs))
             for name, v in out.items():
@@ -828,30 +1222,34 @@ class ScanEngine:
         wall = time.perf_counter() - t0
         self.final_carry = carry
 
-        if stop < T:
+        if stop < E:
             return None  # budgeted slice done; state lives in the snapshot
         return self._result(outs, wall=wall, rounds_timed=max(ran, 1))
 
     def _result(self, outs: dict, *, wall: float,
                 rounds_timed: int) -> RunResult:
-        """Assemble the RunResult from full-T host output buffers."""
+        """Assemble the RunResult from full-run host output buffers
+        (T sync rounds or E buffered events)."""
         exp = self.exp
-        N, T = self.store.n_clients, exp.rounds
+        N, R = self.store.n_clients, self.events
         selections = np.asarray(outs["ids"])
         counts = np.bincount(selections.reshape(-1),
                              minlength=N).astype(np.int64)
+        sim = outs.get("sim_time")
         return RunResult(
             config=exp,
             accuracy=np.asarray(outs["acc"], np.float32),
             loss=np.asarray(outs["loss"], np.float32),
             selections=selections,
-            # one (or few) dispatches cover all T rounds — report the
+            # one (or few) dispatches cover the whole run — report the
             # amortised per-round wall time of the rounds THIS call ran
             # (the first call includes the scan's compile)
-            round_time_s=np.full((T,), wall / max(rounds_timed, 1),
+            round_time_s=np.full((R,), wall / max(rounds_timed, 1),
                                  np.float32),
             selection_counts=counts,
             coverage=np.asarray(outs["coverage"], np.float32),
+            sim_time_s=None if sim is None
+            else np.asarray(sim, np.float32),
         )
 
 
@@ -888,6 +1286,10 @@ class BatchedSeedEngine:
             seed's dataset directly.
         use_gp_kernel / gp_impl / param_layout / use_ee / scenario: as on
             :class:`ScanEngine`.
+        aggregation: accepted for signature parity with ``ScanEngine``
+            (a Session forwards ``ExecutionSpec.engine_kwargs()``) but
+            must resolve to ``"sync"`` — the buffered event-scan is not
+            seed-batchable; a Session runs buffered cells sequentially.
         shard_clients: accepted for signature parity with ``ScanEngine``
             but must be 1 — the vmapped seed axis and the shard_map
             cohort mesh would nest.
@@ -902,6 +1304,7 @@ class BatchedSeedEngine:
                  use_gp_kernel: bool = False, gp_impl: str = "auto",
                  param_layout: str = "tree", use_ee: bool = True,
                  scenario: Union[str, ScenarioConfig, None] = "full",
+                 aggregation: Union[str, AggregationConfig, None] = "sync",
                  shard_clients: int = 1):
         """Build per-seed state, stack it, and jit the vmapped scan."""
         if not cells:
@@ -911,11 +1314,18 @@ class BatchedSeedEngine:
                 f"shard_clients={shard_clients} cannot combine with the "
                 f"batched seed axis (the vmapped seeds and the shard_map "
                 f"cohort mesh would nest); run sharded cells sequentially")
+        agg = make_aggregation(aggregation)
+        if agg.kind != "sync":
+            raise ValueError(
+                f"aggregation={agg.kind!r} cannot combine with the "
+                f"batched seed axis; run buffered cells sequentially "
+                f"(a Session does this automatically)")
         base = cells[0]
         validate_capabilities(SpecView(
             backend="scan", selector=base.selector,
             param_layout=param_layout,
             scenario_kind=getattr(scenario, "kind", scenario or "full"),
+            aggregation_kind=agg.kind,
             shard_clients=int(shard_clients), use_gp_kernel=use_gp_kernel,
             clients_per_round=base.clients_per_round,
             batch_seeds=len(cells)))
@@ -1077,6 +1487,8 @@ def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                         param_layout: str = "tree",
                         use_ee: bool = True,
                         scenario: Union[str, ScenarioConfig, None] = "full",
+                        aggregation: Union[str, AggregationConfig,
+                                           None] = "sync",
                         shard_clients: int = 1) -> RunResult:
     """One-shot convenience over ``ScanEngine`` — the ``backend="scan"``
     entry point of ``repro.fl.run_experiment`` (see that function and the
@@ -1084,4 +1496,5 @@ def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
     return ScanEngine(exp, use_gp_kernel=use_gp_kernel, gp_impl=gp_impl,
                       param_layout=param_layout, use_ee=use_ee,
                       log_every=log_every, scenario=scenario,
+                      aggregation=aggregation,
                       shard_clients=shard_clients).run()

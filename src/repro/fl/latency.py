@@ -32,6 +32,14 @@ scenario=...)``, scan backend only):
 Both streams are precomputed host-side (numpy RNG, like the selector
 streams in ``repro.core.selector``) and fed to the engine as
 ``lax.scan`` inputs, so the scenarios run fully device-resident.
+
+The same completion-time stream also drives the **buffered
+(FedBuff-style) aggregation backend** (``aggregation="buffered"``, see
+:class:`AggregationConfig` and ``repro.fl.engine``): instead of gating a
+synchronous round on a deadline, the engine keeps a pool of in-flight
+clients whose completion times come from :func:`completion_time_stream`
+and aggregates whenever the ``buffer_size`` earliest updates land —
+staleness-discounted, as one compiled scan over aggregation *events*.
 """
 from __future__ import annotations
 
@@ -303,3 +311,93 @@ def completion_time_stream(model: LatencyModel, rng,
         out[t] = (model.downlink_s + model.uplink_s
                   + model.local_compute_s * speeds)
     return out
+
+
+# --------------------------------------------------------------------------
+# Aggregation backends (the engine's ``aggregation=`` spec axis; see
+# repro.fl.engine for the event-scan that consumes this config).
+# --------------------------------------------------------------------------
+
+#: aggregation backends the scan engine understands (mirrors the
+#: capability-registry rows in ``repro.api.capabilities``).
+AGGREGATION_KINDS = ("sync", "buffered")
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationConfig:
+    """How client updates reach the server — sync rounds or a FedBuff
+    buffer.
+
+    Attributes:
+        kind: one of :data:`AGGREGATION_KINDS`.  ``"sync"`` is the
+            paper's protocol: every round blocks on its whole cohort.
+            ``"buffered"`` keeps K clients in flight at completion times
+            drawn from the scenario's :class:`LatencyModel` and
+            aggregates whenever the ``buffer_size`` earliest updates
+            land, discounting stale ones (FedBuff).
+        buffer_size: the buffer M — updates per aggregation event
+            (clamped to K).  ``None`` resolves to ``max(1, K // 2)``;
+            ``buffer_size=K`` makes every event a full synchronous
+            round.
+        staleness_discount: per-version weight decay ``lambda**s`` for
+            an update trained ``s`` model versions ago.  ``1.0`` +
+            a zero-latency model reduces bit-identically to sync FedAvg
+            (the engine's parity contract); must be in (0, 1].
+        events: number of aggregation events E to scan.  ``None``
+            resolves to ``rounds * K // M`` so sync and buffered runs
+            consume the same total number of client updates.
+    """
+    kind: str = "sync"
+    buffer_size: Optional[int] = None
+    staleness_discount: float = 0.5
+    events: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in AGGREGATION_KINDS:
+            raise ValueError(
+                f"aggregation kind must be one of {AGGREGATION_KINDS}; "
+                f"got {self.kind!r}")
+        if not 0.0 < self.staleness_discount <= 1.0:
+            raise ValueError("staleness_discount must be in (0, 1]; "
+                             f"got {self.staleness_discount}")
+        if self.buffer_size is not None and self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1; "
+                             f"got {self.buffer_size}")
+        if self.events is not None and self.events < 1:
+            raise ValueError(f"events must be >= 1; got {self.events}")
+
+    def resolved_buffer(self, k: int) -> int:
+        """The effective buffer size M for a cohort/pool of ``k``."""
+        return min(self.buffer_size or max(1, k // 2), k)
+
+    def resolved_events(self, rounds: int, k: int) -> int:
+        """The effective event count E (same total updates as ``rounds``
+        sync rounds unless ``events`` pins it explicitly)."""
+        if self.events is not None:
+            return int(self.events)
+        return max(1, rounds * k // self.resolved_buffer(k))
+
+
+def make_aggregation(
+        agg: Union[str, "AggregationConfig", None]) -> "AggregationConfig":
+    """Coerce the ``aggregation=`` argument into an
+    :class:`AggregationConfig`.
+
+    Args:
+        agg: ``None`` or a kind name from :data:`AGGREGATION_KINDS`
+            (string shorthand with default knobs), or an explicit config.
+
+    Returns:
+        The resolved :class:`AggregationConfig`.
+
+    Raises:
+        ValueError: unknown kind name (listing the supported kinds).
+    """
+    if agg is None:
+        return AggregationConfig(kind="sync")
+    if isinstance(agg, AggregationConfig):
+        return agg
+    if agg in AGGREGATION_KINDS:
+        return AggregationConfig(kind=agg)
+    raise ValueError(f"unknown aggregation {agg!r}; expected one of "
+                     f"{AGGREGATION_KINDS} or an AggregationConfig")

@@ -45,6 +45,11 @@ class RunResult:
             reports the amortised time of its single dispatch).
         selection_counts: (N,) times each client was selected.
         coverage: (T,) fraction of clients seen at least once.
+        sim_time_s: buffered-aggregation runs only — (E,) simulated
+            server clock at each aggregation event (when the M-th
+            in-flight update landed, in latency-model seconds); the
+            x-axis of time-to-accuracy comparisons.  ``None`` for sync
+            runs, whose per-row histories are indexed by round.
     """
     config: FLExperimentConfig
     accuracy: np.ndarray          # (T,)
@@ -53,6 +58,7 @@ class RunResult:
     round_time_s: np.ndarray      # (T,)
     selection_counts: np.ndarray  # (N,)
     coverage: np.ndarray          # (T,) fraction of clients seen ≥1×
+    sim_time_s: Optional[np.ndarray] = None  # (E,) buffered event clock
 
     def final_accuracy(self, last: int = 10) -> float:
         """Mean accuracy over the final ``last`` rounds (Table II style)."""
@@ -115,9 +121,16 @@ def init_gp_phase(trainer, store, params, kinit, *, chunk: int = INIT_CHUNK):
 def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
                    use_gp_kernel: bool = False, backend: str = "python",
                    param_layout: str = "tree", scenario="full",
+                   aggregation="sync", buffer_size: Optional[int] = None,
+                   staleness_discount: Optional[float] = None,
                    shard_clients: int = 1) -> RunResult:
     """Run one FL experiment — a thin shim over a one-cell declarative
     Plan (``repro.api``), kept for the legacy kwarg surface.
+
+    .. deprecated:: the kwarg pile is frozen — new execution knobs land
+       on :class:`repro.api.ExecutionSpec` only (this shim routes every
+       call through ``repro.api.spec_from_kwargs``, so prefer building
+       the spec directly: ``Plan(exp).execute_with(ExecutionSpec(...))``).
 
     The kwargs map 1:1 onto a ``repro.api.ExecutionSpec``; the actual
     dispatch (backend choice, validation against the capability
@@ -137,6 +150,13 @@ def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
         scenario: heterogeneity scenario (scan backend only) —
             ``"full"``, ``"availability"``, ``"stragglers"`` or a
             ``repro.fl.latency.ScenarioConfig``.
+        aggregation: ``"sync"`` (the paper's blocking rounds),
+            ``"buffered"`` (FedBuff-style event scan, scan backend only)
+            or a ``repro.fl.latency.AggregationConfig``.
+        buffer_size: buffered-mode buffer M (``None`` keeps the config
+            default; rejected with ``aggregation="sync"``).
+        staleness_discount: buffered-mode staleness weight base
+            (likewise).
         shard_clients: shard the cohort over this many devices on a
             ``("clients",)`` mesh (scan backend, flat layout only).
 
@@ -151,7 +171,9 @@ def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
     from repro.api import Plan, spec_from_kwargs
     spec = spec_from_kwargs(backend=backend, param_layout=param_layout,
                             scenario=scenario, shard_clients=shard_clients,
-                            use_gp_kernel=use_gp_kernel)
+                            use_gp_kernel=use_gp_kernel,
+                            aggregation=aggregation, buffer_size=buffer_size,
+                            staleness_discount=staleness_discount)
     runset = Plan(exp).execute_with(spec, log_every=log_every).run()
     return runset[0]
 

@@ -45,7 +45,8 @@ from repro.api.journal import RunJournal, cell_fingerprint
 from repro.api.results import RunSet, _config_from_dict, _config_to_dict
 from repro.api.session import Session
 from repro.api.spec import ExecutionSpec
-from repro.fl.latency import LatencyModel, ScenarioConfig
+from repro.fl.latency import (AggregationConfig, LatencyModel,
+                              ScenarioConfig)
 
 
 class _ListPlan:
@@ -68,13 +69,17 @@ def _spec_to_dict(spec: ExecutionSpec) -> dict:
 
 def _spec_from_dict(d: dict) -> ExecutionSpec:
     """Rebuild an :class:`ExecutionSpec` from :func:`_spec_to_dict`
-    output (re-hydrating a dict-ified ``ScenarioConfig``)."""
+    output (re-hydrating dict-ified ``ScenarioConfig`` /
+    ``AggregationConfig`` values)."""
     d = dict(d)
     scn = d.get("scenario")
     if isinstance(scn, dict):
         scn = dict(scn)
         scn["latency"] = LatencyModel(**scn["latency"])
         d["scenario"] = ScenarioConfig(**scn)
+    agg = d.get("aggregation")
+    if isinstance(agg, dict):
+        d["aggregation"] = AggregationConfig(**agg)
     return ExecutionSpec(**d)
 
 

@@ -41,6 +41,8 @@ def _spec_for(dim, value, backend):
         kw["param_layout"] = value
     elif dim == "scenario":
         kw["scenario"] = value
+    elif dim == "aggregation":
+        kw["aggregation"] = value
     elif dim == "shard_clients":
         kw.update(shard_clients=2, param_layout="flat")
     elif dim == "use_gp_kernel":

@@ -1,0 +1,258 @@
+"""Buffered asynchronous aggregation (``aggregation="buffered"``).
+
+Pins the PR-7 contracts:
+
+* **sync-reduction parity** — buffer M = K, ``staleness_discount=1.0``
+  and a zero-latency model make the event-scan bit-identical to the
+  synchronous round-scan, for all four selectors and both param layouts
+  (the engine's parity contract, also CI-gated via ``BENCH_async.json``);
+* buffered events aggregate exactly M updates and carry a monotone
+  simulated clock; staleness discounting actually changes trajectories;
+* ``gpcb.observe(valid_mask=)`` gates stale feedback (all-True == no
+  mask, all-False freezes the touched arms);
+* chunked snapshot/resume replays a buffered run bit-identically;
+* illegal combinations (buffered × python backend, × shard_clients,
+  × batched seeds, buffer knobs × sync) fail fast with registry-derived
+  messages, and a failing Session names the offending plan cell;
+* the README support-matrix section is generated from the registry
+  (``tools/gen_support_matrix.py --check`` — the anti-drift pin).
+"""
+import dataclasses
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutionSpec, Plan, RunSet, Session, spec_from_kwargs
+from repro.configs.paper import femnist_experiment
+from repro.fl import run_experiment
+from repro.fl.engine import BatchedSeedEngine, ScanEngine
+from repro.fl.latency import (AggregationConfig, LatencyModel,
+                              ScenarioConfig)
+
+SELECTORS = ("gpfl", "random", "powd", "fedcor")
+
+#: a zero-latency model: every client completes instantly, so a full
+#: buffer (M = K) flushes the exact dispatch cohort each event —
+#: the deterministic half of the sync-reduction contract.
+ZERO_LATENCY = ScenarioConfig(kind="full", latency=LatencyModel(
+    local_compute_s=0.0, downlink_s=0.0, uplink_s=0.0,
+    straggler_scale=0.0))
+
+
+def _tiny(selector, rounds=5, seed=0):
+    exp = femnist_experiment("2spc", selector, rounds=rounds)
+    return dataclasses.replace(
+        exp, seed=seed, n_clients=12, clients_per_round=4,
+        samples_per_client_mean=30, samples_per_client_std=8,
+        local_iters=2, local_batch_size=16, eval_size=200)
+
+
+def _sync_reduction(exp, param_layout="tree"):
+    """(sync RunResult, buffered-at-parity RunResult) for one config."""
+    k = exp.clients_per_round
+    sync = ScanEngine(exp, param_layout=param_layout).run()
+    buf = ScanEngine(exp, param_layout=param_layout, scenario=ZERO_LATENCY,
+                     aggregation=AggregationConfig(
+                         kind="buffered", buffer_size=k,
+                         staleness_discount=1.0, events=exp.rounds)).run()
+    return sync, buf
+
+
+# ------------------------------------------------------ sync reduction
+
+@pytest.mark.parametrize("selector", SELECTORS)
+def test_buffered_reduces_to_sync_all_selectors(selector):
+    """M=K + zero latency + discount=1.0 + E=T: the event-scan IS the
+    round-scan, bit for bit — selections, accuracy, loss, coverage."""
+    sync, buf = _sync_reduction(_tiny(selector))
+    assert np.array_equal(sync.selections, buf.selections)
+    assert np.array_equal(sync.accuracy, buf.accuracy)
+    assert np.array_equal(sync.loss, buf.loss)
+    assert np.array_equal(sync.coverage, buf.coverage)
+
+
+@pytest.mark.parametrize("selector", ("gpfl", "fedcor"))
+def test_buffered_reduces_to_sync_flat_layout(selector):
+    """The same reduction holds on the packed flat workspace."""
+    sync, buf = _sync_reduction(_tiny(selector), param_layout="flat")
+    assert np.array_equal(sync.selections, buf.selections)
+    assert np.array_equal(sync.accuracy, buf.accuracy)
+
+
+# --------------------------------------------------- buffered semantics
+
+def test_buffered_event_shapes_and_monotone_clock():
+    """A real async run (M < K, stragglers): exactly M ids land per
+    event, E resolves to rounds*K//M, and the simulated event clock is
+    strictly increasing (events flush in completion order)."""
+    exp = _tiny("gpfl", rounds=4)
+    res = ScanEngine(exp, scenario="stragglers",
+                     aggregation=AggregationConfig(
+                         kind="buffered", buffer_size=2)).run()
+    events = exp.rounds * exp.clients_per_round // 2
+    assert res.selections.shape == (events, 2)
+    assert res.accuracy.shape == (events,)
+    assert res.sim_time_s is not None and res.sim_time_s.shape == (events,)
+    assert np.all(np.diff(res.sim_time_s) > 0)
+    assert np.all(np.isfinite(res.accuracy))
+
+
+def test_staleness_discount_changes_trajectory():
+    """With M < K some kept updates age past version 0, so the discount
+    base must matter: lambda=1.0 and lambda=0.3 runs diverge (the
+    staleness weighting is live, not a no-op branch)."""
+    exp = _tiny("random", rounds=4)
+
+    def run(discount):
+        return ScanEngine(exp, scenario="stragglers",
+                          aggregation=AggregationConfig(
+                              kind="buffered", buffer_size=2,
+                              staleness_discount=discount)).run()
+
+    assert not np.array_equal(run(1.0).accuracy, run(0.3).accuracy)
+
+
+def test_buffer_size_clamps_to_cohort():
+    """buffer_size > K clamps to K (an event can't flush more updates
+    than are in flight)."""
+    agg = AggregationConfig(kind="buffered", buffer_size=64)
+    assert agg.resolved_buffer(4) == 4
+    assert AggregationConfig(kind="buffered").resolved_buffer(4) == 2
+
+
+def test_observe_valid_mask_gates_feedback():
+    """The observe() gate the event body relies on: an all-True mask is
+    bitwise the unmasked path, an all-False mask freezes the touched
+    arms' counts and keeps their C entries."""
+    import jax.numpy as jnp
+    from repro.core.gpcb import init_state, observe
+    n, ids = 8, jnp.array([1, 3, 5])
+    state = init_state(n)
+    latest = jnp.linspace(-1.0, 1.0, n)
+    gp = jnp.array([0.7, -0.2, 0.4])
+    ref_state, ref_gp = observe(state, latest, ids, gp, 0.5, 1.0)
+    all_true, true_gp = observe(state, latest, ids, gp, 0.5, 1.0,
+                                valid_mask=jnp.ones((3,), bool))
+    for a, b in zip(ref_state, all_true):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(ref_gp), np.asarray(true_gp))
+    frozen, froz_gp = observe(state, latest, ids, gp, 0.5, 1.0,
+                              valid_mask=jnp.zeros((3,), bool))
+    assert np.array_equal(np.asarray(froz_gp), np.asarray(latest))
+    assert np.array_equal(np.asarray(frozen.count),
+                          np.asarray(state.count))
+
+
+# ------------------------------------------------- snapshots and resume
+
+def test_buffered_chunked_resume_bit_identical(tmp_path):
+    """Kill a buffered run mid-event-scan, restore from its snapshot in
+    a FRESH engine: the stitched history equals the unsegmented run."""
+    exp = _tiny("gpfl", rounds=4)
+    agg = AggregationConfig(kind="buffered", buffer_size=2,
+                            staleness_discount=0.5)
+    full = ScanEngine(exp, scenario="stragglers", aggregation=agg).run()
+    path = str(tmp_path / "buf.ckpt")
+    first = ScanEngine(exp, scenario="stragglers", aggregation=agg,
+                       snapshot_every=3, snapshot_path=path)
+    assert first.run(until_round=4) is None       # killed after 4 events
+    res = ScanEngine(exp, scenario="stragglers", aggregation=agg,
+                     snapshot_every=3, snapshot_path=path).run(resume=True)
+    assert np.array_equal(full.selections, res.selections)
+    assert np.array_equal(full.accuracy, res.accuracy)
+    assert np.array_equal(full.sim_time_s, res.sim_time_s)
+
+
+def test_runset_roundtrips_sim_time(tmp_path):
+    """sim_time_s survives RunSet JSON persistence; sync records omit
+    the key entirely (old files stay byte-compatible)."""
+    exp = _tiny("random", rounds=2)
+    buf = ScanEngine(exp, scenario="stragglers",
+                     aggregation=AggregationConfig(
+                         kind="buffered", buffer_size=2)).run()
+    sync = ScanEngine(exp).run()
+    path = str(tmp_path / "set.json")
+    RunSet([buf, sync]).save(path)
+    back = RunSet.load(path)
+    assert np.array_equal(back[0].sim_time_s, buf.sim_time_s)
+    assert back[1].sim_time_s is None
+
+
+# ------------------------------------------------------- fail-fast edges
+
+def test_buffered_requires_scan_backend():
+    """The registry row: buffered has no python-loop implementation."""
+    exp = _tiny("gpfl", rounds=2)
+    with pytest.raises(ValueError, match="supported run_experiment"):
+        run_experiment(exp, backend="python", aggregation="buffered")
+
+
+def test_buffered_rejects_client_sharding():
+    exp = _tiny("gpfl", rounds=2)
+    spec = ExecutionSpec(backend="scan", param_layout="flat",
+                         shard_clients=2, aggregation="buffered")
+    with pytest.raises(ValueError, match="shard_clients"):
+        Plan(exp).execute_with(spec).run()
+
+
+def test_buffered_rejects_batched_seed_engine():
+    cells = [_tiny("gpfl", rounds=2, seed=s) for s in range(2)]
+    with pytest.raises(ValueError, match="batched seed axis"):
+        BatchedSeedEngine(cells, aggregation="buffered")
+
+
+def test_buffer_knobs_require_buffered_kind():
+    """buffer_size / staleness_discount with sync aggregation fail
+    loudly instead of being silently ignored."""
+    with pytest.raises(ValueError, match="buffer_size"):
+        spec_from_kwargs(backend="scan", buffer_size=4)
+    with pytest.raises(ValueError, match="staleness_discount"):
+        spec_from_kwargs(backend="scan", staleness_discount=0.9)
+
+
+def test_session_error_names_offending_cell():
+    """A sweep that expands to many cells must say WHICH cell broke:
+    the wrapped ValueError carries the cell name, selector and spec."""
+    plan = (Plan(_tiny("gpfl", rounds=2))
+            .sweep(selector=["gpfl", "random"]))
+    spec = ExecutionSpec(backend="python", aggregation="buffered")
+    with pytest.raises(ValueError) as exc:
+        Session(plan, spec)
+    msg = str(exc.value)
+    assert "plan cell" in msg and "selector=" in msg
+    assert "aggregation" in msg and "backend='python'" in msg
+
+
+# ------------------------------------------------ run_experiment shim
+
+def test_run_experiment_shim_routes_buffered():
+    """The legacy kwarg pile reaches the event-scan: shim output equals
+    a direct ScanEngine run with the same resolved AggregationConfig."""
+    exp = _tiny("random", rounds=3)
+    via_shim = run_experiment(exp, backend="scan", scenario="stragglers",
+                              aggregation="buffered", buffer_size=2,
+                              staleness_discount=0.5)
+    direct = ScanEngine(exp, scenario="stragglers",
+                        aggregation=AggregationConfig(
+                            kind="buffered", buffer_size=2,
+                            staleness_discount=0.5)).run()
+    assert np.array_equal(via_shim.selections, direct.selections)
+    assert np.array_equal(via_shim.accuracy, direct.accuracy)
+    assert np.array_equal(via_shim.sim_time_s, direct.sim_time_s)
+
+
+# ------------------------------------------------------- README drift
+
+def test_readme_support_matrix_not_stale():
+    """README's generated support-matrix section matches the registry —
+    run ``PYTHONPATH=src python tools/gen_support_matrix.py`` after any
+    capability change (the emitter's --check mode is the oracle)."""
+    tool = (pathlib.Path(__file__).resolve().parent.parent
+            / "tools" / "gen_support_matrix.py")
+    spec = importlib.util.spec_from_file_location("gen_support_matrix",
+                                                  tool)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.main(["--check"]) == 0

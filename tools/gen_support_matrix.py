@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Regenerate README.md's support-matrix section from the capability
+registry.
+
+The README embeds the rendered
+``repro.api.capabilities.support_matrix()`` between two HTML-comment
+markers; this tool rewrites (or, with ``--check``, verifies) that
+section so the documented matrix is DERIVED from the same registry rows
+that drive the fail-fast validation — prose that cannot drift from what
+actually runs.  ``tests/test_async.py`` runs the ``--check`` mode as a
+drift test, so a registry change that forgets to re-run this tool fails
+the suite with an actionable message::
+
+    PYTHONPATH=src python tools/gen_support_matrix.py          # rewrite
+    PYTHONPATH=src python tools/gen_support_matrix.py --check  # verify
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+
+#: the markers delimiting the generated README section (the text between
+#: them is owned by this tool — hand edits there WILL be overwritten).
+BEGIN = "<!-- BEGIN GENERATED: support-matrix (tools/gen_support_matrix.py) -->"
+END = "<!-- END GENERATED: support-matrix -->"
+
+
+def render() -> str:
+    """The full generated section: markers + fenced matrix block."""
+    from repro.api.capabilities import support_matrix
+    return f"{BEGIN}\n```text\n{support_matrix().rstrip()}\n```\n{END}"
+
+
+def main(argv=None) -> int:
+    """Rewrite (or ``--check``) README's generated section; 0 = clean."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the README section is stale instead "
+                         "of rewriting it")
+    ap.add_argument("--readme", default=str(_ROOT / "README.md"),
+                    help="README file to rewrite (default: repo root)")
+    args = ap.parse_args(argv)
+
+    path = pathlib.Path(args.readme)
+    text = path.read_text(encoding="utf-8")
+    pattern = re.compile(re.escape(BEGIN) + r".*?" + re.escape(END),
+                         re.DOTALL)
+    if not pattern.search(text):
+        print(f"{path}: generated support-matrix markers not found; "
+              f"add\n  {BEGIN}\n  {END}\nwhere the matrix belongs",
+              file=sys.stderr)
+        return 1
+    # lambda replacement: the rendered matrix may contain regex escapes
+    want = pattern.sub(lambda _m: render(), text)
+    if want == text:
+        print(f"{path}: support-matrix section up to date")
+        return 0
+    if args.check:
+        print(f"{path}: support-matrix section is STALE — the capability "
+              f"registry changed; run\n"
+              f"  PYTHONPATH=src python tools/gen_support_matrix.py",
+              file=sys.stderr)
+        return 1
+    path.write_text(want, encoding="utf-8")
+    print(f"{path}: support-matrix section rewritten")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
