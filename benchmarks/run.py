@@ -16,7 +16,10 @@ recording the chunked-scan snapshot overhead and the kill → resume
 selection parity for all four selectors (see ``_resume_micro``), and the
 ``async`` bench pinning the buffered event-scan's sync-reduction parity
 and its time-to-accuracy vs. sync under stragglers (see
-``_async_micro``).
+``_async_micro``), and the ``robust`` bench pinning the robustness
+layer's clean-path bit-parity (hard CI gate) and recording the
+fault-injection × robust-aggregation head-to-head (see
+``_robust_micro``).
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks everything
 (CI); ``--full`` runs paper-scale rounds; ``--json PATH`` additionally
@@ -676,6 +679,154 @@ def _async_micro(quick: bool = True):
     return rows
 
 
+def _robust_micro(quick: bool = True):
+    """Adversarial faults × robust aggregation (ISSUE 8).
+
+    Three row kinds:
+
+    * ``kind="parity"`` — the clean-path contract: ``faults=None`` +
+      ``aggregator="mean"`` (the spec defaults) must be bit-identical
+      (selections AND accuracy) to an engine built without the
+      robustness knobs, for all four selectors × both param layouts ×
+      sync and buffered aggregation.  ``parity_match`` is a **hard CI
+      gate** — the robustness layer may not perturb clean runs at all.
+    * ``kind="corruption"`` — the headline head-to-head: 20% of clients
+      sign-flip their updates (``signflip_scale=10``) and GPFL vs
+      random selection is run under each of the four aggregators.  Each
+      row records the aggregator's OWN clean-run final accuracy, the
+      corrupted final accuracy, the delta, and the adversaries' share of
+      selections.  ``mean_degrades`` / ``robust_within_margin`` document
+      the acceptance margins (plain mean loses > 5 accuracy points,
+      every robust aggregator stays within 5 points of its clean run) —
+      meaningful in the committed default-mode ``BENCH_robust.json``;
+      ``--quick`` rounds are too few to train and are not gated on.
+    * ``kind="screen"`` / ``kind="quarantine"`` — NaN and noise
+      adversaries under the non-finite screen stay finite end-to-end
+      (``all_finite``), and ``quarantine_after=1`` collapses GPFL's
+      adversary selection share versus the unquarantined run.
+    """
+    import dataclasses
+    from repro.configs.paper import SELECTORS, femnist_experiment
+    from repro.fl.engine import ScanEngine
+    from repro.fl.faults import FaultConfig, adversary_ids
+    from repro.fl.latency import AggregationConfig
+    from repro.fl.robust import RobustConfig
+
+    rows = []
+
+    # ---- clean-path bit-parity (hard gate) ----
+    p_rounds = 8 if quick else 16
+    p_base = dataclasses.replace(
+        femnist_experiment("2spc", "gpfl"), rounds=p_rounds, n_clients=32,
+        clients_per_round=4, samples_per_client_mean=40,
+        samples_per_client_std=10, local_iters=3, local_batch_size=16,
+        eval_size=256)
+    buf = AggregationConfig(kind="buffered", buffer_size=2,
+                            staleness_discount=0.5)
+    for layout in ("tree", "flat"):
+        for sel in SELECTORS:
+            exp = dataclasses.replace(p_base, selector=sel,
+                                      name=f"robust-parity-{sel}")
+            for agg_name, agg_kw in (("sync", {}),
+                                     ("buffered",
+                                      dict(scenario="stragglers",
+                                           aggregation=buf))):
+                plain = ScanEngine(exp, param_layout=layout,
+                                   **agg_kw).run()
+                defaults = ScanEngine(exp, param_layout=layout,
+                                      faults=None, aggregator="mean",
+                                      **agg_kw).run()
+                rows.append({
+                    "name": f"robust_parity_{agg_name}_{layout}_{sel}",
+                    "kind": "parity", "selector": sel,
+                    "param_layout": layout, "aggregation": agg_name,
+                    "rounds": p_rounds,
+                    "parity_match": bool(
+                        np.array_equal(plain.selections,
+                                       defaults.selections)
+                        and np.array_equal(plain.accuracy,
+                                           defaults.accuracy)),
+                })
+
+    # ---- signflip corruption head-to-head (recorded margins) ----
+    c_rounds = 16 if quick else 40
+    last = max(2, c_rounds // 5)
+    flt = FaultConfig(mode="signflip", fraction=0.2, signflip_scale=10.0)
+    aggs = {
+        "mean": RobustConfig("mean"),
+        "trimmed_mean": RobustConfig("trimmed_mean", trim_fraction=0.3),
+        "median": RobustConfig("median"),
+        "norm_clip": RobustConfig("norm_clip", clip_quantile=0.3),
+    }
+
+    def c_exp(sel):
+        return dataclasses.replace(
+            femnist_experiment("2spc", sel), rounds=c_rounds,
+            n_clients=32, clients_per_round=10,
+            samples_per_client_mean=60, samples_per_client_std=10,
+            local_iters=4, local_batch_size=16, eval_size=256,
+            name=f"robust-corrupt-{sel}")
+
+    def final(res):
+        return float(np.mean(res.accuracy[-last:]))
+
+    bad = adversary_ids(
+        np.random.default_rng((c_exp("gpfl").seed, flt.seed, 3)), 32, flt)
+    for sel in ("gpfl", "random"):
+        exp = c_exp(sel)
+        for agg_name, agg in aggs.items():
+            clean = final(ScanEngine(exp, aggregator=agg).run())
+            run = ScanEngine(exp, faults=flt, aggregator=agg).run()
+            corrupt = final(run)
+            delta = clean - corrupt
+            rows.append({
+                "name": f"robust_signflip_{sel}_{agg_name}",
+                "kind": "corruption", "selector": sel,
+                "aggregator": agg_name, "rounds": c_rounds,
+                "fault_fraction": flt.fraction,
+                "signflip_scale": flt.signflip_scale,
+                "clean_final_acc": clean,
+                "corrupt_final_acc": corrupt,
+                "acc_delta": delta,
+                "adversary_share": float(
+                    np.isin(run.selections, bad).mean()),
+                "population_share": float(bad.size / exp.n_clients),
+                "mean_degrades": (delta > 0.05
+                                  if agg_name == "mean" else None),
+                "robust_within_margin": (abs(delta) <= 0.05
+                                         if agg_name != "mean" else None),
+            })
+
+    # ---- non-finite screen + quarantine ----
+    for mode in ("nan", "noise"):
+        exp = c_exp("gpfl")
+        res = ScanEngine(exp, faults=FaultConfig(mode=mode, fraction=0.2),
+                         aggregator="trimmed_mean").run()
+        rows.append({
+            "name": f"robust_screen_{mode}", "kind": "screen",
+            "selector": "gpfl", "fault_mode": mode, "rounds": c_rounds,
+            "final_acc": final(res),
+            "all_finite": bool(np.isfinite(res.accuracy).all()),
+        })
+    nan_flt = FaultConfig(mode="nan", fraction=0.2, prob=1.0)
+    exp = c_exp("gpfl")
+    shares = {}
+    for tag, q in (("open", 0), ("quarantined", 1)):
+        res = ScanEngine(exp, faults=nan_flt,
+                         aggregator=RobustConfig(
+                             "mean", quarantine_after=q)).run()
+        shares[tag] = float(np.isin(res.selections, bad).mean())
+    rows.append({
+        "name": "robust_quarantine_gpfl", "kind": "quarantine",
+        "selector": "gpfl", "fault_mode": "nan", "rounds": c_rounds,
+        "adversary_share_open": shares["open"],
+        "adversary_share_quarantined": shares["quarantined"],
+        "quarantine_reduces_share": shares["quarantined"]
+        < shares["open"],
+    })
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -684,7 +835,7 @@ def main(argv=None) -> None:
                     help="paper-scale rounds (hours)")
     ap.add_argument("--only", default=None,
                     help="comma-list: table2,fig4,fig5,fig6,fig7,kernels,"
-                         "engine,flat,selectors,sweep,resume,async")
+                         "engine,flat,selectors,sweep,resume,async,robust")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write engine/flat/kernel results as JSON "
                          "(e.g. BENCH_engine.json, BENCH_flat.json)")
@@ -695,7 +846,7 @@ def main(argv=None) -> None:
     rounds = 12 if args.quick else 60
     only = set(args.only.split(",")) if args.only else \
         {"table2", "fig4", "fig5", "fig6", "fig7", "kernels", "engine",
-         "flat", "selectors", "sweep", "resume", "async"}
+         "flat", "selectors", "sweep", "resume", "async", "robust"}
     bench_data = {}
 
     print("name,us_per_call,derived")
@@ -805,6 +956,32 @@ def main(argv=None) -> None:
                       f"buf_sim_s={r['buffered_total_sim_s']:.1f};"
                       f"tta_speedup="
                       f"{'n/a' if spd is None else f'{spd:.2f}'}",
+                      flush=True)
+
+    if "robust" in only:
+        robust_rows = _robust_micro(quick=args.quick)
+        bench_data["robust"] = robust_rows
+        for r in robust_rows:
+            if r["kind"] == "parity":
+                print(f"{r['name']},0,"
+                      f"parity_match={int(r['parity_match'])}",
+                      flush=True)
+            elif r["kind"] == "corruption":
+                print(f"{r['name']},0,"
+                      f"clean={r['clean_final_acc']:.4f};"
+                      f"corrupt={r['corrupt_final_acc']:.4f};"
+                      f"delta={r['acc_delta']:+.4f};"
+                      f"adv_share={r['adversary_share']:.3f}",
+                      flush=True)
+            elif r["kind"] == "screen":
+                print(f"{r['name']},0,"
+                      f"final={r['final_acc']:.4f};"
+                      f"all_finite={int(r['all_finite'])}", flush=True)
+            else:
+                print(f"{r['name']},0,"
+                      f"share_open={r['adversary_share_open']:.3f};"
+                      f"share_quarantined="
+                      f"{r['adversary_share_quarantined']:.3f}",
                       flush=True)
 
     if "kernels" in only:

@@ -20,20 +20,21 @@ Four pieces (see ARCHITECTURE.md §API layer):
 ``repro.fl.run_experiment(...)`` remains as a thin shim over a one-cell
 Plan, so the legacy kwarg surface keeps working.
 """
-from repro.api.capabilities import (AGGREGATION_KINDS, BACKENDS,
-                                    CAPABILITIES, PARAM_LAYOUTS,
-                                    SCENARIO_KINDS, SELECTORS, Capability,
-                                    SpecView, support_matrix, validate)
+from repro.api.capabilities import (AGGREGATION_KINDS, AGGREGATORS,
+                                    BACKENDS, CAPABILITIES, FAULT_MODES,
+                                    PARAM_LAYOUTS, SCENARIO_KINDS,
+                                    SELECTORS, Capability, SpecView,
+                                    support_matrix, validate)
 from repro.api.journal import RunJournal, cell_fingerprint
 from repro.api.plan import Plan
-from repro.api.results import RunSet
+from repro.api.results import CellFailure, RunSet
 from repro.api.session import Session
 from repro.api.spec import ExecutionSpec, spec_from_kwargs
 
 __all__ = [
-    "AGGREGATION_KINDS", "BACKENDS", "CAPABILITIES", "PARAM_LAYOUTS",
-    "SCENARIO_KINDS", "SELECTORS", "Capability", "SpecView",
-    "support_matrix", "validate",
-    "Plan", "RunJournal", "RunSet", "Session", "ExecutionSpec",
-    "cell_fingerprint", "spec_from_kwargs",
+    "AGGREGATION_KINDS", "AGGREGATORS", "BACKENDS", "CAPABILITIES",
+    "FAULT_MODES", "PARAM_LAYOUTS", "SCENARIO_KINDS", "SELECTORS",
+    "Capability", "SpecView", "support_matrix", "validate",
+    "Plan", "RunJournal", "CellFailure", "RunSet", "Session",
+    "ExecutionSpec", "cell_fingerprint", "spec_from_kwargs",
 ]

@@ -33,6 +33,12 @@ SCENARIO_KINDS = ("full", "availability", "stragglers")
 #: aggregation backends (see ``repro.fl.latency.AggregationConfig``).
 AGGREGATION_KINDS = ("sync", "buffered")
 
+#: client-fault injection modes (see ``repro.fl.faults.FaultConfig``).
+FAULT_MODES = ("none", "nan", "noise", "signflip", "dropout")
+
+#: robust server aggregators (see ``repro.fl.robust.RobustConfig``).
+AGGREGATORS = ("mean", "trimmed_mean", "median", "norm_clip")
+
 
 @dataclasses.dataclass(frozen=True)
 class Capability:
@@ -42,7 +48,8 @@ class Capability:
         dim: the ``ExecutionSpec``/config dimension (``"selector"``,
             ``"param_layout"``, ``"scenario"``, ``"aggregation"``,
             ``"shard_clients"``, ``"use_gp_kernel"``, ``"batch_seeds"``,
-            ``"snapshot_every"``, ``"resume"``).
+            ``"snapshot_every"``, ``"resume"``, ``"faults"``,
+            ``"aggregator"``, ``"quarantine_after"``).
         value: the display value this row covers (e.g. ``"flat"``,
             ``"> 1"``).
         backends: backend name → support note (``"yes"`` or ``"yes (...)"``).
@@ -82,6 +89,12 @@ class SpecView:
             single unsegmented scan; > 0 segments it into chunked scans).
         resume: restore a ``snapshot_every`` run from its snapshot file
             instead of starting from round 0.
+        fault_mode: resolved client-fault injection mode (``"none"``
+            disables the robustness layer's fault stream).
+        aggregator: resolved robust server aggregator (``"mean"`` is the
+            legacy FedAvg path).
+        quarantine: the robust layer's ``quarantine_after`` strike
+            threshold (0 disables selection quarantine).
     """
     backend: str
     selector: str
@@ -94,6 +107,9 @@ class SpecView:
     batch_seeds: int = 1
     snapshot_every: int = 0
     resume: bool = False
+    fault_mode: str = "none"
+    aggregator: str = "mean"
+    quarantine: int = 0
 
 
 def _shard_constraint(v: SpecView) -> Optional[str]:
@@ -147,6 +163,23 @@ def _resume_constraint(v: SpecView) -> Optional[str]:
     return None
 
 
+def _robust_path_constraint(v: SpecView) -> Optional[str]:
+    """Structural rules shared by every robustness knob (faults /
+    non-mean aggregators / quarantine): unsharded, unbatched."""
+    knob = (f"faults={v.fault_mode!r}" if v.fault_mode != "none"
+            else f"aggregator={v.aggregator!r}" if v.aggregator != "mean"
+            else f"quarantine_after={v.quarantine}")
+    if v.shard_clients > 1:
+        return (f"{knob} cannot combine with shard_clients="
+                f"{v.shard_clients}: the fault screen and robust "
+                f"reductions operate on the unsharded cohort")
+    if v.batch_seeds > 1:
+        return (f"{knob} cannot combine with a batched multi-seed "
+                f"dispatch (batch_seeds={v.batch_seeds}); a Session runs "
+                f"robustness cells sequentially")
+    return None
+
+
 #: The registry.  Order is presentation order in :func:`support_matrix`.
 CAPABILITIES: Tuple[Capability, ...] = (
     Capability("selector", "random",
@@ -182,6 +215,32 @@ CAPABILITIES: Tuple[Capability, ...] = (
     Capability("resume", "True",
                {"scan": "yes (restores snapshot_every checkpoints)"},
                constraint=_resume_constraint),
+    Capability("faults", "'none'", {"python": "yes", "scan": "yes"}),
+    Capability("faults", "'nan'",
+               {"scan": "yes (in-scan corruption stream)"},
+               constraint=_robust_path_constraint),
+    Capability("faults", "'noise'",
+               {"scan": "yes (in-scan corruption stream)"},
+               constraint=_robust_path_constraint),
+    Capability("faults", "'signflip'",
+               {"scan": "yes (in-scan corruption stream)"},
+               constraint=_robust_path_constraint),
+    Capability("faults", "'dropout'",
+               {"scan": "yes (in-scan delivery mask)"},
+               constraint=_robust_path_constraint),
+    Capability("aggregator", "'mean'", {"python": "yes", "scan": "yes"}),
+    Capability("aggregator", "'trimmed_mean'",
+               {"scan": "yes (per-coordinate, screened)"},
+               constraint=_robust_path_constraint),
+    Capability("aggregator", "'median'",
+               {"scan": "yes (per-coordinate, screened)"},
+               constraint=_robust_path_constraint),
+    Capability("aggregator", "'norm_clip'",
+               {"scan": "yes (update-norm quantile clip)"},
+               constraint=_robust_path_constraint),
+    Capability("quarantine_after", "> 0",
+               {"scan": "yes (strike-count selection mask)"},
+               constraint=_robust_path_constraint),
 )
 
 # the per-selector rows ARE the selector registry — a row added or
@@ -193,6 +252,12 @@ assert tuple(c.value for c in CAPABILITIES if c.dim == "selector") \
 # same import-time anti-drift pin for the aggregation axis
 assert tuple(c.value.strip("'") for c in CAPABILITIES
              if c.dim == "aggregation") == AGGREGATION_KINDS
+
+# ... and for the robustness axes (fault modes and robust aggregators)
+assert tuple(c.value.strip("'") for c in CAPABILITIES
+             if c.dim == "faults") == FAULT_MODES
+assert tuple(c.value.strip("'") for c in CAPABILITIES
+             if c.dim == "aggregator") == AGGREGATORS
 
 
 def support_matrix() -> str:
@@ -319,6 +384,44 @@ def validate(view: SpecView) -> None:
         if view.backend not in row.backends:
             fail("resume=True requires backend='scan' (resume restores a "
                  "snapshot_every scan carry).")
+        err = row.constraint(view) if row.constraint else None
+        if err:
+            fail(err + ".")
+
+    flt_rows = _rows_for("faults")
+    if view.fault_mode not in flt_rows:
+        fail(f"unknown fault mode {view.fault_mode!r}; expected one of "
+             f"{FAULT_MODES} or a repro.fl.faults.FaultConfig.")
+    flt_row = flt_rows[view.fault_mode]
+    if view.backend not in flt_row.backends:
+        fail(f"faults={view.fault_mode!r} requires backend='scan' (the "
+             f"fault-hit stream is a scan input corrupting updates "
+             f"in-scan).")
+    err = flt_row.constraint(view) if flt_row.constraint else None
+    if err:
+        fail(err + ".")
+
+    rb_rows = _rows_for("aggregator")
+    if view.aggregator not in rb_rows:
+        fail(f"unknown aggregator {view.aggregator!r}; expected one of "
+             f"{AGGREGATORS} or a repro.fl.robust.RobustConfig.")
+    rb_row = rb_rows[view.aggregator]
+    if view.backend not in rb_row.backends:
+        fail(f"aggregator={view.aggregator!r} requires backend='scan' "
+             f"(the robust reductions run inside the compiled round "
+             f"body).")
+    err = rb_row.constraint(view) if rb_row.constraint else None
+    if err:
+        fail(err + ".")
+
+    if view.quarantine != 0:
+        if view.quarantine < 0:
+            fail(f"quarantine_after must be >= 0; got {view.quarantine}.")
+        row = next(c for c in CAPABILITIES if c.dim == "quarantine_after")
+        if view.backend not in row.backends:
+            fail(f"quarantine_after={view.quarantine} requires "
+                 f"backend='scan' (the strike counter is carried scan "
+                 f"state).")
         err = row.constraint(view) if row.constraint else None
         if err:
             fail(err + ".")

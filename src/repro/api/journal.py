@@ -15,7 +15,15 @@ durable the moment it happens:
 * **torn-line tolerance** — a writer killed mid-``write`` leaves a
   truncated final line; :meth:`records` skips unparseable lines, and the
   next :meth:`append` first terminates any torn tail with a newline so
-  the garbage can never splice into a good record.
+  the garbage can never splice into a good record;
+* **failure records** — :meth:`RunJournal.append_failure` journals a
+  cell that RAISED (``status="failed"`` + the error string, no ``run``
+  payload) so a degraded Session's surviving cells stay durable and the
+  failed ones retry on restart;
+* **compaction** — :meth:`RunJournal.compact` atomically rewrites the
+  file keeping only the latest record per fingerprint (10⁵+-cell studies
+  re-journal cells across restarts; a Session auto-compacts past a line
+  threshold).
 
 A ``Session(..., journal=path)`` appends every finished cell here and,
 on restart, skips cells whose fingerprint is already journaled — the
@@ -78,18 +86,9 @@ class RunJournal:
             # missing or empty file: nothing torn to repair
             return False
 
-    def append(self, result) -> str:
-        """Durably journal one finished run (fsync'd single-line append).
-
-        Args:
-            result: the cell's ``repro.fl.simulation.RunResult``.
-
-        Returns:
-            The appended cell's fingerprint.
-        """
-        key = cell_fingerprint(result.config)
-        rec = {"v": JOURNAL_VERSION, "key": key,
-               "name": result.config.name, "run": run_to_record(result)}
+    def _append_record(self, rec: dict) -> None:
+        """The shared fsync'd O_APPEND write path (torn-tail repair
+        included) behind :meth:`append` and :meth:`append_failure`."""
         payload = (json.dumps(rec, separators=(",", ":")) + "\n").encode()
         if self._tail_is_torn():
             # terminate the torn tail: the garbage becomes one complete,
@@ -106,6 +105,41 @@ class RunJournal:
             os.fsync(fd)
         finally:
             os.close(fd)
+
+    def append(self, result) -> str:
+        """Durably journal one finished run (fsync'd single-line append).
+
+        Args:
+            result: the cell's ``repro.fl.simulation.RunResult``.
+
+        Returns:
+            The appended cell's fingerprint.
+        """
+        key = cell_fingerprint(result.config)
+        self._append_record({"v": JOURNAL_VERSION, "key": key,
+                             "name": result.config.name,
+                             "run": run_to_record(result)})
+        return key
+
+    def append_failure(self, config, error: str) -> str:
+        """Durably journal one FAILED cell (graceful-degradation path).
+
+        The record carries ``status="failed"`` plus the error string and
+        deliberately has no ``"run"`` payload — journal readers that
+        predate failure records skip it as unknown, and a restarted
+        Session does NOT treat the key as done (failed cells retry).
+
+        Args:
+            config: the failed cell's ``FLExperimentConfig``.
+            error: a one-line description of what raised.
+
+        Returns:
+            The appended cell's fingerprint.
+        """
+        key = cell_fingerprint(config)
+        self._append_record({"v": JOURNAL_VERSION, "key": key,
+                             "name": config.name, "status": "failed",
+                             "error": str(error)})
         return key
 
     # -------------------------------------------------------------- read
@@ -130,19 +164,79 @@ class RunJournal:
                 except json.JSONDecodeError:
                     continue
                 if not isinstance(rec, dict) or rec.get("v") != \
-                        JOURNAL_VERSION or "key" not in rec or "run" not in rec:
+                        JOURNAL_VERSION or "key" not in rec:
+                    continue
+                if "run" not in rec and rec.get("status") != "failed":
                     continue
                 yield rec
 
     def keys(self) -> Set[str]:
-        """The set of journaled cell fingerprints."""
-        return {rec["key"] for rec in self.records()}
+        """The set of journaled COMPLETED cell fingerprints (failure
+        records don't count — a restarted Session retries those cells)."""
+        return {rec["key"] for rec in self.records() if "run" in rec}
 
     def results_by_key(self) -> Dict[str, object]:
         """Journaled runs as ``{fingerprint: RunResult}`` (last wins)."""
         return {rec["key"]: run_from_record(rec["run"])
-                for rec in self.records()}
+                for rec in self.records() if "run" in rec}
+
+    def failures_by_key(self) -> Dict[str, dict]:
+        """Journaled failures as ``{fingerprint: record}``.
+
+        A later SUCCESS for the same cell supersedes its earlier failure
+        (the key is dropped) — the dict holds only cells whose latest
+        outcome is a failure.
+        """
+        out: Dict[str, dict] = {}
+        for rec in self.records():
+            if rec.get("status") == "failed":
+                out[rec["key"]] = rec
+            else:
+                out.pop(rec["key"], None)
+        return out
 
     def results(self) -> List:
         """Journaled ``RunResult``s in append order."""
-        return [run_from_record(rec["run"]) for rec in self.records()]
+        return [run_from_record(rec["run"]) for rec in self.records()
+                if "run" in rec]
+
+    def line_count(self) -> int:
+        """Number of journal lines on disk (parseable or not) — the
+        Session's auto-compaction trigger reads this cheaply instead of
+        parsing every record."""
+        try:
+            with open(self.path, "rb") as fh:
+                return sum(1 for _ in fh)
+        except FileNotFoundError:
+            return 0
+
+    def compact(self) -> int:
+        """Rewrite the journal keeping only the LATEST record per cell
+        fingerprint (atomic tmp-write + fsync + ``os.replace``).
+
+        A long-running or restarted study re-journals cells (and layers
+        failure records under their eventual successes); at 10⁵+ cells
+        the re-parse on every restart dominates.  Compaction preserves
+        exactly the journal's read semantics — ``records()`` over the
+        compacted file yields the same last-wins state — while dropping
+        superseded lines and torn garbage.
+
+        Returns:
+            Number of lines dropped (0 when the journal was already
+            compact or does not exist).
+        """
+        keep: Dict[str, dict] = {}
+        for rec in self.records():  # file order → last wins, order kept
+            keep.pop(rec["key"], None)
+            keep[rec["key"]] = rec
+        before = self.line_count()
+        if not before:
+            return 0
+        tmp = self.path + ".compact.tmp"
+        with open(tmp, "w") as fh:
+            for rec in keep.values():
+                fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, self.path)
+        return before - len(keep)

@@ -73,16 +73,43 @@ def run_from_record(rec: dict):
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class CellFailure:
+    """One plan cell that raised instead of finishing.
+
+    A gracefully-degrading :class:`repro.api.Session` records these on
+    the returned :class:`RunSet` instead of crashing the whole study —
+    the surviving cells' results stay usable, and the failure list says
+    exactly what to rerun.
+
+    Attributes:
+        config: the failed cell's ``FLExperimentConfig``.
+        error: one-line description of what raised (type + message).
+        exception: the original exception object when the failure
+            happened in-process (``None`` after a save/load round-trip
+            or a cross-process journal merge — only ``error`` survives
+            serialization).  Lets one-cell callers like
+            ``repro.fl.run_experiment`` re-raise faithfully.
+    """
+    config: object
+    error: str
+    exception: Optional[BaseException] = dataclasses.field(
+        default=None, compare=False)
+
+
 class RunSet:
     """An ordered collection of run histories (one per plan cell).
 
     Args:
         runs: ``repro.fl.simulation.RunResult`` objects, in plan order.
+        failures: optional :class:`CellFailure` list — cells the Session
+            could not complete (graceful degradation; empty by default).
     """
 
-    def __init__(self, runs: List):
+    def __init__(self, runs: List, failures: Optional[List] = None):
         """Wrap the runs (kept by reference, in the given order)."""
         self.runs = list(runs)
+        self.failures: List[CellFailure] = list(failures or [])
 
     def __len__(self) -> int:
         """Number of runs in the set."""
@@ -188,6 +215,12 @@ class RunSet:
         """
         payload = {"schema_version": SCHEMA_VERSION,
                    "runs": [run_to_record(r) for r in self.runs]}
+        if self.failures:
+            # optional key: failure-free sets stay byte-compatible with
+            # old readers (schema version 1 unchanged)
+            payload["failures"] = [
+                {"config": _config_to_dict(f.config), "error": f.error}
+                for f in self.failures]
         with open(path, "w") as fh:
             json.dump(payload, fh)
 
@@ -211,4 +244,8 @@ class RunSet:
             raise ValueError(
                 f"unknown RunSet schema_version "
                 f"{payload.get('schema_version')!r} in {path}")
-        return cls([run_from_record(rec) for rec in payload["runs"]])
+        failures = [CellFailure(config=_config_from_dict(f["config"]),
+                                error=f["error"])
+                    for f in payload.get("failures", [])]
+        return cls([run_from_record(rec) for rec in payload["runs"]],
+                   failures=failures)

@@ -27,6 +27,12 @@ The Session owns execution strategy so the Plan can stay declarative:
   carry every N rounds to ``spec.snapshot_dir`` and ``spec.resume=True``
   restores mid-training cells bit-identically (see
   ``repro.fl.engine.ScanEngine.run``).
+* **Graceful degradation** — a cell that raises is journaled as
+  ``status="failed"`` (with the error string) and surfaced on
+  ``RunSet.failures`` instead of crashing the study; the remaining
+  cells still run, and a restarted Session retries exactly the failed
+  ones.  Past ``auto_compact`` journal lines, ``run()`` first compacts
+  the journal to the latest record per cell.
 
 Results come back as a :class:`repro.api.RunSet` in plan order.
 """
@@ -70,6 +76,11 @@ class Session:
             :class:`repro.api.RunJournal`.  Finished cells are fsync'd
             there as they complete, and ``run()`` skips cells the
             journal already records — restart-safe sweeps.
+        auto_compact: journal line-count threshold above which ``run()``
+            compacts the journal before executing (keeps only the latest
+            record per cell — 10⁵+-cell studies re-journal cells across
+            restarts and the startup re-parse starts to dominate).
+            0 disables auto-compaction.
 
     Raises:
         ValueError: some cell × spec combination is not registered as
@@ -77,12 +88,14 @@ class Session:
     """
 
     def __init__(self, plan, spec: ExecutionSpec, *, log_every: int = 0,
-                 journal: Optional[str] = None):
+                 journal: Optional[str] = None,
+                 auto_compact: int = 100_000):
         """Expand the plan and fail fast on unsupported combinations."""
         self.plan = plan
         self.spec = spec
         self.log_every = log_every
         self.journal = RunJournal(journal) if journal else None
+        self.auto_compact = int(auto_compact)
         self.cells = plan.cells()
         self._groups = self._group_cells()
         for idxs, base in self._groups:
@@ -116,11 +129,13 @@ class Session:
         """Can this group collapse into one vmapped multi-seed dispatch?
         Buffered-aggregation cells never batch (the event-scan is not
         seed-vmappable) — they run sequentially, like snapshotting
-        cells."""
+        cells and robustness cells (fault injection / robust
+        aggregation / quarantine)."""
         return (self.spec.backend == "scan" and self.spec.batch_seeds
                 and self.spec.shard_clients == 1
                 and self.spec.aggregation_kind == "sync"
-                and self.spec.snapshot_every == 0 and len(idxs) > 1)
+                and self.spec.snapshot_every == 0
+                and not self.spec.robust_active and len(idxs) > 1)
 
     def _data_for(self, exp):
         """Build (or reuse) the cell's dataset; cached by data key."""
@@ -143,6 +158,20 @@ class Session:
         if self.journal is not None:
             self.journal.append(res)
 
+    def _fail(self, i: int, failures: List, err: BaseException) -> None:
+        """Record a raising cell (graceful degradation): a CellFailure
+        for the returned RunSet plus a durable ``status="failed"``
+        journal line (which a restarted Session does NOT skip — failed
+        cells retry)."""
+        from repro.api.results import CellFailure
+        cell = self.cells[i]
+        msg = f"{type(err).__name__}: {err}"
+        failures.append(CellFailure(config=cell, error=msg, exception=err))
+        if self.journal is not None:
+            self.journal.append_failure(cell, msg)
+        print(f"[session] cell {cell.name!r} FAILED ({msg}); continuing "
+              f"with the remaining cells")
+
     def run(self) -> RunSet:
         """Execute every cell and return the results in plan order.
 
@@ -151,15 +180,27 @@ class Session:
         returned set, and only the remaining cells execute (each one
         journaled the moment it finishes).
 
+        A cell that RAISES does not crash the study: its error is
+        journaled (``status="failed"``) and surfaced on
+        ``RunSet.failures``, and every other cell still runs — rerunning
+        the same Session retries exactly the failed cells.
+
         Returns:
             A :class:`repro.api.RunSet` with one
-            ``repro.fl.simulation.RunResult`` per plan cell.
+            ``repro.fl.simulation.RunResult`` per COMPLETED plan cell
+            (plan order), plus any failures on ``.failures``.
         """
         from repro.fl.engine import BatchedSeedEngine, ScanEngine
         from repro.fl.simulation import run_python_loop
 
+        if (self.journal is not None and self.auto_compact > 0
+                and self.journal.line_count() > self.auto_compact):
+            dropped = self.journal.compact()
+            print(f"[session] journal {self.journal.path}: compacted, "
+                  f"dropped {dropped} superseded line(s)")
         done = self.journal.results_by_key() if self.journal else {}
         results = [None] * len(self.cells)
+        failures: List = []
         skipped = 0
         for idxs, _ in self._groups:
             pending = []
@@ -174,39 +215,52 @@ class Session:
                 continue
             if self._batchable(idxs) and len(pending) > 1:
                 cells = [self.cells[i] for i in pending]
-                eng = BatchedSeedEngine(
-                    cells, data_provider=self._data_for,
-                    **self.spec.engine_kwargs())
-                for i, res in zip(pending, eng.run()):
-                    self._finish(i, results, res)
+                try:
+                    eng = BatchedSeedEngine(
+                        cells, data_provider=self._data_for,
+                        **self.spec.engine_kwargs())
+                    for i, res in zip(pending, eng.run()):
+                        self._finish(i, results, res)
+                except Exception as err:
+                    # one dispatch covers the whole seed group — record
+                    # every still-unfinished cell of it as failed
+                    for i in pending:
+                        if results[i] is None:
+                            self._fail(i, failures, err)
                 continue
             shared_jit = None
             for i in pending:
                 cell = self.cells[i]
-                if self.spec.backend == "python":
-                    self._finish(i, results, run_python_loop(
-                        cell, log_every=self.log_every,
-                        use_gp_kernel=self.spec.use_gp_kernel,
-                        data=self._data_for(cell)))
-                    continue
-                kwargs = self.spec.engine_kwargs()
-                if self.spec.snapshot_every:
-                    kwargs.update(snapshot_every=self.spec.snapshot_every,
-                                  snapshot_path=self._snapshot_path(cell))
-                eng = ScanEngine(cell, log_every=self.log_every,
-                                 data=self._data_for(cell), **kwargs)
-                # the scan body never reads exp.seed and takes the
-                # tables as arguments, so one compiled scan (full or
-                # chunked) serves every cell of this
-                # config-modulo-seed group — engines share the lazily
-                # filled jit cache
-                if shared_jit is None:
-                    shared_jit = eng._jit
-                else:
-                    eng._jit = shared_jit
-                self._finish(i, results, eng.run(resume=self.spec.resume))
+                try:
+                    if self.spec.backend == "python":
+                        self._finish(i, results, run_python_loop(
+                            cell, log_every=self.log_every,
+                            use_gp_kernel=self.spec.use_gp_kernel,
+                            data=self._data_for(cell)))
+                        continue
+                    kwargs = self.spec.engine_kwargs()
+                    if self.spec.snapshot_every:
+                        kwargs.update(
+                            snapshot_every=self.spec.snapshot_every,
+                            snapshot_path=self._snapshot_path(cell))
+                    eng = ScanEngine(cell, log_every=self.log_every,
+                                     data=self._data_for(cell), **kwargs)
+                    # the scan body never reads exp.seed and takes the
+                    # tables as arguments, so one compiled scan (full or
+                    # chunked) serves every cell of this
+                    # config-modulo-seed group — engines share the lazily
+                    # filled jit cache
+                    if shared_jit is None:
+                        shared_jit = eng._jit
+                    else:
+                        eng._jit = shared_jit
+                    self._finish(i, results,
+                                 eng.run(resume=self.spec.resume))
+                except Exception as err:
+                    self._fail(i, failures, err)
         if self.journal is not None and skipped:
             print(f"[session] journal {self.journal.path}: skipped "
                   f"{skipped} completed cell(s), ran "
                   f"{len(self.cells) - skipped}")
-        return RunSet(results)
+        return RunSet([r for r in results if r is not None],
+                      failures=failures)

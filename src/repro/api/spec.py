@@ -56,6 +56,18 @@ class ExecutionSpec:
         resume: restore each cell from its snapshot file when one
             exists (a fresh run otherwise) — makes restart scripts
             idempotent.
+        faults: adversarial-client fault injection — ``None`` (off), a
+            mode name from ``repro.api.capabilities.FAULT_MODES`` or a
+            full ``repro.fl.faults.FaultConfig`` pinning the adversary
+            fraction / noise scale / activation probability.  Coerced
+            into a ``FaultConfig`` at construction.
+        aggregator: robust server aggregation —
+            ``"mean"``/``"trimmed_mean"``/``"median"``/``"norm_clip"``
+            or a full ``repro.fl.robust.RobustConfig`` (which also
+            carries the ``quarantine_after`` selection-quarantine knob).
+            Coerced into a ``RobustConfig`` at construction; anything
+            but the plain-mean default routes the engine through the
+            screened robust path.
     """
     backend: str = "python"
     param_layout: str = "tree"
@@ -67,18 +79,26 @@ class ExecutionSpec:
     snapshot_every: int = 0
     snapshot_dir: Optional[str] = None
     resume: bool = False
+    faults: Any = None
+    aggregator: Any = "mean"
 
     def __post_init__(self):
-        """Coerce scenario/aggregation shorthands into their full config
-        values (``ScenarioConfig`` / ``AggregationConfig``) — unknown
-        names fail HERE, at spec construction, not mid-sweep."""
+        """Coerce scenario/aggregation/faults/aggregator shorthands into
+        their full config values (``ScenarioConfig`` /
+        ``AggregationConfig`` / ``FaultConfig`` / ``RobustConfig``) —
+        unknown names fail HERE, at spec construction, not mid-sweep."""
         # local import: repro.fl.latency is numpy-only, but importing it
         # at module level would pull the whole repro.fl package (and
         # jax) into this leaf-adjacent layer
+        from repro.fl.faults import make_faults
         from repro.fl.latency import make_aggregation, make_scenario
+        from repro.fl.robust import make_robust
         object.__setattr__(self, "scenario", make_scenario(self.scenario))
         object.__setattr__(self, "aggregation",
                            make_aggregation(self.aggregation))
+        object.__setattr__(self, "faults", make_faults(self.faults))
+        object.__setattr__(self, "aggregator",
+                           make_robust(self.aggregator))
 
     @property
     def scenario_kind(self) -> str:
@@ -92,6 +112,25 @@ class ExecutionSpec:
         shorthand)."""
         kind = getattr(self.aggregation, "kind", self.aggregation)
         return "sync" if kind is None else kind
+
+    @property
+    def fault_mode(self) -> str:
+        """The resolved fault-injection mode string (``"none"`` = off)."""
+        return self.faults.mode
+
+    @property
+    def aggregator_kind(self) -> str:
+        """The resolved robust-aggregator name string."""
+        return self.aggregator.aggregator
+
+    @property
+    def robust_active(self) -> bool:
+        """Whether ANY robustness knob routes the engine off its legacy
+        bit-parity path (faults on, a non-mean aggregator, or selection
+        quarantine) — such cells never seed-batch."""
+        return (self.fault_mode != "none"
+                or self.aggregator_kind != "mean"
+                or self.aggregator.quarantine_after > 0)
 
     def view(self, exp, n_seeds: int = 1) -> caps.SpecView:
         """Flatten this spec × ``exp`` into the registry's plain-data view.
@@ -113,7 +152,10 @@ class ExecutionSpec:
             clients_per_round=exp.clients_per_round,
             batch_seeds=n_seeds if self.batch_seeds else 1,
             snapshot_every=self.snapshot_every,
-            resume=self.resume)
+            resume=self.resume,
+            fault_mode=self.fault_mode,
+            aggregator=self.aggregator_kind,
+            quarantine=int(self.aggregator.quarantine_after))
 
     def validate(self, exp, n_seeds: int = 1) -> None:
         """Fail fast (before anything compiles) on unsupported combos.
@@ -137,7 +179,8 @@ class ExecutionSpec:
         return dict(param_layout=self.param_layout, scenario=self.scenario,
                     aggregation=self.aggregation,
                     shard_clients=self.shard_clients,
-                    use_gp_kernel=self.use_gp_kernel)
+                    use_gp_kernel=self.use_gp_kernel,
+                    faults=self.faults, aggregator=self.aggregator)
 
 
 def spec_from_kwargs(backend: str = "python", param_layout: str = "tree",

@@ -13,7 +13,10 @@ streams precomputed into scan inputs), optional client-sharded cohorts
 backend additionally offers buffered asynchronous aggregation
 (``aggregation="buffered"``; :class:`repro.fl.latency.AggregationConfig`)
 — a FedBuff-style scan over aggregation events with
-staleness-discounted weights.  The
+staleness-discounted weights — and a robustness axis: adversarial-client
+fault injection (``faults=``; ``repro.fl.faults``) with robust server
+aggregation plus a non-finite screen and selection quarantine
+(``aggregator=``; ``repro.fl.robust``).  The
 combination matrix (``repro.fl.simulation.SUPPORT_MATRIX``) is derived
 from the capability registry in ``repro.api.capabilities``; sweeps
 should go through the declarative ``repro.api`` layer
@@ -21,22 +24,28 @@ should go through the declarative ``repro.api`` layer
 shim."""
 from repro.fl.client import make_cohort_trainer, make_cohort_loss_eval
 from repro.fl.server import (fedavg, make_evaluator, make_table_evaluator,
-                             update_global_direction)
+                             masked_fedavg, update_global_direction)
 from repro.fl.simulation import (RunResult, SUPPORT_MATRIX, init_gp_phase,
                                  run_experiment, run_python_loop)
 from repro.fl.engine import (BatchedSeedEngine, ScanEngine,
                              run_batched_seeds, run_experiment_scan)
+from repro.fl.faults import (FaultConfig, corrupt_cohort, fault_stream,
+                             make_faults)
 from repro.fl.latency import (AggregationConfig, LatencyModel,
-                              ScenarioConfig, compare_selectors)
+                              ScenarioConfig, cell_rng, compare_selectors)
+from repro.fl.robust import (RobustConfig, finite_rows, make_robust,
+                             robust_aggregate)
 
 __all__ = [
     "make_cohort_trainer", "make_cohort_loss_eval",
-    "fedavg", "make_evaluator", "make_table_evaluator",
+    "fedavg", "make_evaluator", "make_table_evaluator", "masked_fedavg",
     "update_global_direction",
     "RunResult", "SUPPORT_MATRIX", "init_gp_phase", "run_experiment",
     "run_python_loop",
     "BatchedSeedEngine", "ScanEngine", "run_batched_seeds",
     "run_experiment_scan",
-    "AggregationConfig", "LatencyModel", "ScenarioConfig",
+    "FaultConfig", "corrupt_cohort", "fault_stream", "make_faults",
+    "AggregationConfig", "LatencyModel", "ScenarioConfig", "cell_rng",
     "compare_selectors",
+    "RobustConfig", "finite_rows", "make_robust", "robust_aggregate",
 ]

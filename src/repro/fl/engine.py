@@ -170,11 +170,16 @@ from repro.core.selector import (fedcor_cov_update, fedcor_greedy,
 from repro.data import ClientStore
 from repro.dist.sharding import cohort_axis_rules, cohort_specs
 from repro.fl.client import make_cohort_loss_eval, make_cohort_trainer
+from repro.fl.faults import (FaultConfig, corrupt_cohort, fault_stream,
+                             make_faults)
 from repro.fl.latency import (AggregationConfig, ScenarioConfig,
                               availability_stream, completion_time_stream,
                               make_aggregation, make_scenario)
+from repro.fl.robust import (RobustConfig, finite_rows, make_robust,
+                             robust_aggregate)
 from repro.fl.server import (fedavg, make_table_evaluator, server_update_flat,
-                             update_global_direction)
+                             update_global_direction,
+                             update_global_direction_flat)
 from repro.fl.simulation import (INIT_CHUNK, RunResult, _build_data,
                                  init_gp_phase)
 from repro.models import small
@@ -218,6 +223,10 @@ class RoundCarry(NamedTuple):
     pool_ready: jnp.ndarray   # (K,) f32 completion time of each slot
     pool_ver: jnp.ndarray     # (K,) i32 model version each slot trained on
     clock: jnp.ndarray        # () f32 simulated server time
+    pool_ok: jnp.ndarray      # (K,) bool delivery mask of each slot
+    #: (N,) i32 per-client corruption strike counts, driving the
+    #: ``quarantine_after`` selection mask ((1,) stub when quarantine off)
+    strikes: jnp.ndarray
 
 
 def _copy_carry(c: RoundCarry) -> RoundCarry:
@@ -259,7 +268,9 @@ def _sync_pool_stubs() -> dict:
                 pool_ids=jnp.zeros((1,), jnp.int32),
                 pool_ready=jnp.zeros((1,), jnp.float32),
                 pool_ver=jnp.zeros((1,), jnp.int32),
-                clock=jnp.zeros((), jnp.float32))
+                clock=jnp.zeros((), jnp.float32),
+                pool_ok=jnp.zeros((1,), bool),
+                strikes=jnp.zeros((1,), jnp.int32))
 
 
 def _resolve_gp_impl(gp_impl: str, use_gp_kernel: bool) -> str:
@@ -310,6 +321,18 @@ class ScanEngine:
             at every chunk boundary — resumable, bit-identical runs.
         snapshot_path: the snapshot file (required iff
             ``snapshot_every > 0``).
+        faults: adversarial-client fault injection — ``None``, a mode
+            name or a ``repro.fl.faults.FaultConfig``.  The per-round
+            hit mask rides in as a precomputed scan input (independent
+            host rng), and selected adversaries' updates are corrupted
+            in-scan between local training and aggregation.
+        aggregator: robust server aggregation — an aggregator name or a
+            ``repro.fl.robust.RobustConfig``.  Anything but the plain
+            ``"mean"`` default routes both scan bodies through the
+            screened robust path: non-finite updates are masked out of
+            aggregation AND out of GPFL's bandit feedback, and
+            ``quarantine_after > 0`` masks repeat offenders out of
+            in-scan selection through the availability plumbing.
     """
 
     def __init__(self, exp: FLExperimentConfig, *,
@@ -321,7 +344,9 @@ class ScanEngine:
                  shard_clients: int = 1, data=None,
                  defer_init: bool = False,
                  snapshot_every: int = 0,
-                 snapshot_path: Optional[str] = None):
+                 snapshot_path: Optional[str] = None,
+                 faults: Union[str, FaultConfig, None] = None,
+                 aggregator: Union[str, RobustConfig, None] = "mean"):
         """Validate the combination against the capability registry, build
         data/trainer/streams (see the class docstring for every knob;
         ``data`` optionally injects a prebuilt ``(store, eval_x, eval_y)``
@@ -334,13 +359,25 @@ class ScanEngine:
         seed-vmapped init — such an engine cannot ``run()`` itself."""
         self.aggregation = make_aggregation(aggregation)
         self.buffered = self.aggregation.kind == "buffered"
+        # the robustness axis: fault injection + robust aggregation.
+        # ``robust_active`` is THE gate for every robust-path branch in
+        # the scan bodies — with it False the engine traces (and so runs)
+        # bit-identically to an engine built before this layer existed.
+        self.faults = make_faults(faults)
+        self.robust = make_robust(aggregator)
+        self.has_faults = self.faults.mode != "none"
+        self.robust_active = (self.has_faults
+                              or self.robust.aggregator != "mean"
+                              or self.robust.quarantine_after > 0)
         validate_capabilities(SpecView(
             backend="scan", selector=exp.selector, param_layout=param_layout,
             scenario_kind=getattr(scenario, "kind", scenario or "full"),
             aggregation_kind=self.aggregation.kind,
             shard_clients=int(shard_clients), use_gp_kernel=use_gp_kernel,
             clients_per_round=exp.clients_per_round,
-            snapshot_every=int(snapshot_every)))
+            snapshot_every=int(snapshot_every),
+            fault_mode=self.faults.mode, aggregator=self.robust.aggregator,
+            quarantine=int(self.robust.quarantine_after)))
         # buffered: buffer size M (updates per aggregation event) and the
         # event count E — at M = K every event is a full sync round
         self.buffer_m = self.aggregation.resolved_buffer(
@@ -447,6 +484,9 @@ class ScanEngine:
         deadline = scn.resolved_deadline() if has_lat else 0.0
         spec = self.spec
         shard = self.shard_clients
+        faults, robust = self.faults, self.robust
+        has_faults, robust_active = self.has_faults, self.robust_active
+        quarantine = int(robust.quarantine_after)
 
         if is_flat:
             if use_kernel:
@@ -493,9 +533,18 @@ class ScanEngine:
 
         def body(tabs, carry: RoundCarry, xs):
             x_tab, y_tab, sz_tab, eval_x, eval_y = tabs
-            t, jitter, sel_ids, cand_ids, avail, lat = xs
+            t, jitter, sel_ids, cand_ids, avail, lat, flt = xs
             key, kt = jax.random.split(carry.key)
             avail_arg = avail if has_avail else None
+            if quarantine > 0 and (is_gpfl or is_fedcor):
+                # quarantine repeat offenders out of in-scan selection
+                # via the avail plumbing — but never starve the cohort:
+                # if masking leaves fewer than K candidates, fall back
+                # to the unquarantined base set for this round
+                base = avail if has_avail else jnp.ones((N,), bool)
+                cand = base & (carry.strikes < quarantine)
+                enough = jnp.sum(cand.astype(jnp.int32)) >= K
+                avail_arg = jnp.where(enough, cand, base)
             params_in = flat_mod.unpack(spec, carry.params) if is_flat \
                 else carry.params
 
@@ -532,6 +581,17 @@ class ScanEngine:
             else:
                 w_i, d_i, _ = trainer(params_in, x, y, sizes, rngs)
 
+            # ---- adversarial corruption of the cohort's updates ----
+            delivered = None
+            if has_faults:
+                # corrupt the trainer's TREE output before any packing,
+                # so one corruption path serves both layouts (the robust
+                # constraint rejects shard_clients > 1, so w_i is live)
+                hit = jnp.take(flt, ids)
+                fkey = jax.random.fold_in(kt, 0x0F17)
+                w_i, d_i, delivered = corrupt_cohort(
+                    faults, fkey, hit, w_i, d_i, params_in)
+
             # ---- straggler deadlines: late clients miss aggregation ----
             if has_lat:
                 done = jnp.take(lat, ids) <= deadline
@@ -546,7 +606,34 @@ class ScanEngine:
                 done, weights = None, None
 
             # ---- server update + evaluation ----
-            if is_flat:
+            valid = None
+            if robust_active:
+                # the non-finite screen: diverged/poisoned rows are
+                # masked out of aggregation entirely; dropped-out and
+                # straggler rows fold into the same validity mask (a
+                # masked mean over valid rows ≡ the legacy done-weighted
+                # FedAvg; an all-invalid round keeps params unchanged)
+                valid = finite_rows(w_i)
+                if delivered is not None:
+                    valid = valid & delivered
+                if done is not None:
+                    valid = valid & done
+                cohort = flat_mod.pack_stacked(spec, w_i) if is_flat \
+                    else w_i
+                params = robust_aggregate(robust, cohort, carry.params,
+                                          valid)
+                if is_flat:
+                    direction = update_global_direction_flat(
+                        carry.direction, carry.params, params, exp.lr,
+                        exp.momentum)
+                    acc, gl_loss = evaluate(flat_mod.unpack(spec, params),
+                                            eval_x, eval_y)
+                else:
+                    direction = update_global_direction(
+                        carry.direction, carry.params, params, exp.lr,
+                        exp.momentum)
+                    acc, gl_loss = evaluate(params, eval_x, eval_y)
+            elif is_flat:
                 if w_mat is None:
                     # one (K, Dp) pack out of the trainer, then contiguous
                     # vector passes (or the fused Pallas server kernel)
@@ -572,9 +659,14 @@ class ScanEngine:
                     grads_in = flat_mod.pack_stacked(spec, d_i) if is_flat \
                         else d_i
                     gp_scores = score_fn(grads_in, carry.direction)
+                # robust path: corrupted rows must not write the bandit
+                # (their Eq. 3 scores are poisoned) — mask them out like
+                # straggler-dropped clients, plus any non-finite score
+                vm = valid & jnp.isfinite(gp_scores) if robust_active \
+                    else done
                 bandit, latest_gp = gpcb.observe(
                     carry.bandit, carry.latest_gp, ids, gp_scores, acc,
-                    gl_loss, valid_mask=done)
+                    gl_loss, valid_mask=vm)
             else:
                 bandit, latest_gp = carry.bandit, carry.latest_gp
 
@@ -602,10 +694,18 @@ class ScanEngine:
                     (t, acc, gl_loss, cov))
 
             out = {"ids": ids, "acc": acc, "loss": gl_loss, "coverage": cov}
-            return carry._replace(
-                params=params, direction=direction, bandit=bandit,
-                latest_gp=latest_gp, seen=seen, key=key, fc_cov=fc_cov,
-                fc_prev=fc_prev), out
+            rep = dict(params=params, direction=direction, bandit=bandit,
+                       latest_gp=latest_gp, seen=seen, key=key,
+                       fc_cov=fc_cov, fc_prev=fc_prev)
+            if quarantine > 0:
+                # a strike = a DETECTABLY corrupt update that arrived
+                # (dropout rows never arrive, so they cannot offend)
+                offense = ~finite_rows(w_i)
+                if delivered is not None:
+                    offense = offense & delivered
+                rep["strikes"] = carry.strikes.at[ids].add(
+                    offense.astype(jnp.int32))
+            return carry._replace(**rep), out
 
         return body
 
@@ -613,17 +713,21 @@ class ScanEngine:
         """The full-T dispatcher: builds round-0 carry, scans all rounds."""
         body = self._build_body()
         N, T = self.store.n_clients, self.exp.rounds
+        quarantine = int(self.robust.quarantine_after)
 
         def run_scan(params, direction, bandit, latest_gp, fc_cov, fc_prev,
                      key, streams, tables, eval_tabs):
-            jitter, sel_ids, cand_ids, avail, lat = streams
+            jitter, sel_ids, cand_ids, avail, lat, flt = streams
             tabs = tables + eval_tabs
+            pool = _sync_pool_stubs()
+            if quarantine > 0:
+                pool["strikes"] = jnp.zeros((N,), jnp.int32)
             carry0 = RoundCarry(params, direction, bandit, latest_gp,
                                 jnp.zeros((N,), bool), key, fc_cov, fc_prev,
-                                **_sync_pool_stubs())
+                                **pool)
             return jax.lax.scan(
                 functools.partial(body, tabs), carry0,
-                (jnp.arange(T), jitter, sel_ids, cand_ids, avail, lat))
+                (jnp.arange(T), jitter, sel_ids, cand_ids, avail, lat, flt))
 
         return run_scan
 
@@ -645,10 +749,12 @@ class ScanEngine:
         has_avail = scn.kind == "availability"
         use_ee = self.use_ee
         spec = self.spec
+        faults, has_faults = self.faults, self.has_faults
+        quarantine = int(self.robust.quarantine_after)
 
         def prefill(params, direction, bandit, latest_gp, fc_cov, fc_prev,
                     key, streams, tables):
-            jitter, sel_ids, cand_ids, avail, lat = streams
+            jitter, sel_ids, cand_ids, avail, lat, flt = streams
             x_tab, y_tab, sz_tab = tables
             key, kt = jax.random.split(key)
             avail_arg = avail[0] if has_avail else None
@@ -676,6 +782,16 @@ class ScanEngine:
                                                     ids)
             rngs = jax.random.split(kt, K)
             w_i, d_i, _ = trainer(params_in, x, y, sizes, rngs)
+            pool_ok = jnp.ones((K,), bool)
+            if has_faults:
+                # stream row 0 belongs to the prefill (event e consumes
+                # row e+1) — same row discipline as the selector streams
+                hit = jnp.take(flt[0], ids)
+                fkey = jax.random.fold_in(kt, 0x0F17)
+                w_i, d_i, pool_ok = corrupt_cohort(
+                    faults, fkey, hit, w_i, d_i, params_in)
+            strikes = jnp.zeros((N,) if quarantine > 0 else (1,),
+                                jnp.int32)
             return RoundCarry(
                 params=params, direction=direction, bandit=bandit,
                 latest_gp=latest_gp, seen=jnp.zeros((N,), bool), key=key,
@@ -684,7 +800,8 @@ class ScanEngine:
                 pool_d=flat_mod.pack_stacked(spec, d_i) if is_flat else d_i,
                 pool_ids=ids, pool_ready=jnp.take(lat[0], ids),
                 pool_ver=jnp.zeros((K,), jnp.int32),
-                clock=jnp.zeros((), jnp.float32))
+                clock=jnp.zeros((), jnp.float32),
+                pool_ok=pool_ok, strikes=strikes)
 
         return prefill
 
@@ -711,6 +828,9 @@ class ScanEngine:
         use_kernel = self.gp_impl == "kernel"
         has_avail = scn.kind == "availability"
         spec = self.spec
+        faults, robust = self.faults, self.robust
+        has_faults, robust_active = self.has_faults, self.robust_active
+        quarantine = int(robust.quarantine_after)
 
         if is_flat:
             if use_kernel:
@@ -729,7 +849,7 @@ class ScanEngine:
 
         def body(tabs, carry: RoundCarry, xs):
             x_tab, y_tab, sz_tab, eval_x, eval_y = tabs
-            e, jitter, sel_row, cand_row, avail, lat = xs
+            e, jitter, sel_row, cand_row, avail, lat, flt = xs
             key, kt = jax.random.split(carry.key)
             t = e + 1   # the dispatch slot: sync round t's stream row
             avail_arg = avail if has_avail else None
@@ -752,10 +872,29 @@ class ScanEngine:
             # so the clock is monotone
             clock = jnp.take(carry.pool_ready, order[M - 1])
 
+            valid = None
+            if robust_active:
+                # the flush's validity mask: undelivered (dropout) slots
+                # plus non-finite rows are screened out of aggregation
+                valid = jnp.take(carry.pool_ok, flush) \
+                    & finite_rows(w_flush)
+                params = robust_aggregate(robust, w_flush, carry.params,
+                                          valid, weights=lam)
+                if is_flat:
+                    direction = update_global_direction_flat(
+                        carry.direction, carry.params, params, exp.lr,
+                        exp.momentum)
+                    acc, gl_loss = evaluate(flat_mod.unpack(spec, params),
+                                            eval_x, eval_y)
+                else:
+                    direction = update_global_direction(
+                        carry.direction, carry.params, params, exp.lr,
+                        exp.momentum)
+                    acc, gl_loss = evaluate(params, eval_x, eval_y)
             # an all-fresh buffer takes the sync engine's weights=None
             # reduction (jnp.mean is NOT bitwise a uniform tensordot),
             # so discount=1.0 + zero latency is bit-identical to sync
-            if is_flat:
+            elif is_flat:
                 params, direction = jax.lax.cond(
                     all_fresh,
                     lambda: server_update_flat(
@@ -785,19 +924,37 @@ class ScanEngine:
             # like straggler-dropped clients in the sync backend)
             if is_gpfl:
                 gp_scores = score_fn(d_flush, carry.direction)
+                vm = staleness == 0
+                if robust_active:
+                    # corrupted flushes must not write the bandit either
+                    vm = vm & valid & jnp.isfinite(gp_scores)
                 bandit, latest_gp = gpcb.observe(
                     carry.bandit, carry.latest_gp, f_ids, gp_scores, acc,
-                    gl_loss, valid_mask=(staleness == 0))
+                    gl_loss, valid_mask=vm)
             else:
                 bandit, latest_gp = carry.bandit, carry.latest_gp
 
             seen = carry.seen.at[f_ids].set(True)
             cov = jnp.mean(seen.astype(jnp.float32))
 
+            # strike accounting happens at FLUSH time (when corruption
+            # becomes observable), before this event's dispatch selection
+            strikes = carry.strikes
+            if quarantine > 0:
+                offense = jnp.take(carry.pool_ok, flush) \
+                    & ~finite_rows(w_flush)
+                strikes = strikes.at[f_ids].add(offense.astype(jnp.int32))
+
             # ---- dispatch M replacements against the new model ----
             params_in = flat_mod.unpack(spec, params) if is_flat \
                 else params
             fc_cov, fc_prev = carry.fc_cov, carry.fc_prev
+            if quarantine > 0 and (is_gpfl or is_fedcor):
+                # same starvation guard as the sync body, at need = M
+                base = avail if has_avail else jnp.ones((N,), bool)
+                cand = base & (strikes < quarantine)
+                enough = jnp.sum(cand.astype(jnp.int32)) >= M
+                avail_arg = jnp.where(enough, cand, base)
             if is_gpfl:
                 scores = gpcb.selection_scores(
                     bandit, latest_gp, jitter, t, E, rho=exp.rho,
@@ -829,6 +986,15 @@ class ScanEngine:
                                                     n_ids)
             rngs = jax.random.split(kt, M)
             w_i, d_i, _ = trainer(params_in, x, y, sizes, rngs)
+            new_ok = jnp.ones((M,), bool)
+            if has_faults:
+                # this xs row is stream row t = e + 1 (the event scan
+                # slices row 0 off for the prefill), i.e. the dispatch
+                # slot's row — the sync body's round-t discipline
+                hit = jnp.take(flt, n_ids)
+                fkey = jax.random.fold_in(kt, 0x0F17)
+                w_i, d_i, new_ok = corrupt_cohort(
+                    faults, fkey, hit, w_i, d_i, params_in)
             new_w = flat_mod.pack_stacked(spec, w_i) if is_flat else w_i
             new_d = flat_mod.pack_stacked(spec, d_i) if is_flat else d_i
 
@@ -860,12 +1026,18 @@ class ScanEngine:
 
             out = {"ids": f_ids, "acc": acc, "loss": gl_loss,
                    "coverage": cov, "sim_time": clock}
-            return carry._replace(
-                params=params, direction=direction, bandit=bandit,
-                latest_gp=latest_gp, seen=seen, key=key, fc_cov=fc_cov,
-                fc_prev=fc_prev, pool_w=pool_w, pool_d=pool_d,
-                pool_ids=pool_ids, pool_ready=pool_ready,
-                pool_ver=pool_ver, clock=clock), out
+            rep = dict(params=params, direction=direction, bandit=bandit,
+                       latest_gp=latest_gp, seen=seen, key=key,
+                       fc_cov=fc_cov, fc_prev=fc_prev, pool_w=pool_w,
+                       pool_d=pool_d, pool_ids=pool_ids,
+                       pool_ready=pool_ready, pool_ver=pool_ver,
+                       clock=clock)
+            if robust_active:
+                rep["pool_ok"] = jnp.concatenate(
+                    [jnp.take(carry.pool_ok, keep), new_ok])
+            if quarantine > 0:
+                rep["strikes"] = strikes
+            return carry._replace(**rep), out
 
         return body
 
@@ -884,11 +1056,12 @@ class ScanEngine:
             tabs = tables + eval_tabs
             carry0 = prefill(params, direction, bandit, latest_gp, fc_cov,
                              fc_prev, key, streams, tables)
-            jitter, sel_ids, cand_ids, avail, lat = \
+            jitter, sel_ids, cand_ids, avail, lat, flt = \
                 (s[1:] for s in streams)
             return jax.lax.scan(
                 functools.partial(body, tabs), carry0,
-                (jnp.arange(E), jitter, sel_ids, cand_ids, avail, lat))
+                (jnp.arange(E), jitter, sel_ids, cand_ids, avail, lat,
+                 flt))
 
         return run_scan
 
@@ -901,11 +1074,11 @@ class ScanEngine:
             else self._build_body()
 
         def run_chunk(carry, ts, streams, tables, eval_tabs):
-            jitter, sel_ids, cand_ids, avail, lat = streams
+            jitter, sel_ids, cand_ids, avail, lat, flt = streams
             tabs = tables + eval_tabs
             return jax.lax.scan(
                 functools.partial(body, tabs), carry,
-                (ts, jitter, sel_ids, cand_ids, avail, lat))
+                (ts, jitter, sel_ids, cand_ids, avail, lat, flt))
 
         return run_chunk
 
@@ -949,6 +1122,13 @@ class ScanEngine:
             srng = np.random.default_rng((exp.seed, scn.seed, 2))
             lat_np = completion_time_stream(
                 dataclasses.replace(scn.latency, n_clients=N), srng, R)
+        flt_np = None
+        if self.has_faults:
+            # fault stream: tag 3 of the tuple-seeded scenario rng family
+            # (availability is 1, latency 2) — enabling faults never
+            # shifts the selector or scenario streams
+            frng = np.random.default_rng((exp.seed, self.faults.seed, 3))
+            flt_np = fault_stream(frng, R, N, self.faults)
 
         # -- selector streams: replay the host loop's rng consumption --
         jitter = np.zeros((R, 1), np.float32)
@@ -1005,6 +1185,8 @@ class ScanEngine:
             else jnp.zeros((R, 1), bool),
             jnp.asarray(lat_np) if lat_np is not None
             else jnp.zeros((R, 1), jnp.float32),
+            jnp.asarray(flt_np) if flt_np is not None
+            else jnp.zeros((R, 1), bool),
         )
         return (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
                 streams)
@@ -1028,6 +1210,14 @@ class ScanEngine:
             "aggregation": (self.aggregation.kind, int(self.buffer_m),
                             int(self.events),
                             float(self.aggregation.staleness_discount)),
+            "faults": (self.faults.mode, float(self.faults.fraction),
+                       float(self.faults.noise_sigma),
+                       float(self.faults.signflip_scale),
+                       float(self.faults.prob), int(self.faults.seed)),
+            "robust": (self.robust.aggregator,
+                       float(self.robust.trim_fraction),
+                       float(self.robust.clip_quantile),
+                       int(self.robust.quarantine_after)),
         }
         return hashlib.sha1(
             json.dumps(payload, sort_keys=True).encode()).hexdigest()
@@ -1051,9 +1241,13 @@ class ScanEngine:
                         pool_ids=jnp.zeros((K,), jnp.int32),
                         pool_ready=jnp.zeros((K,), jnp.float32),
                         pool_ver=jnp.zeros((K,), jnp.int32),
-                        clock=jnp.zeros((), jnp.float32))
+                        clock=jnp.zeros((), jnp.float32),
+                        pool_ok=jnp.ones((K,), bool),
+                        strikes=jnp.zeros((1,), jnp.int32))
         else:
             pool = _sync_pool_stubs()
+        if self.robust.quarantine_after > 0:
+            pool["strikes"] = jnp.zeros((self.store.n_clients,), jnp.int32)
         return RoundCarry(params, direction, bandit, latest_gp,
                           jnp.zeros((self.store.n_clients,), bool), key,
                           fc_cov, fc_prev, **pool)
@@ -1293,6 +1487,10 @@ class BatchedSeedEngine:
         shard_clients: accepted for signature parity with ``ScanEngine``
             but must be 1 — the vmapped seed axis and the shard_map
             cohort mesh would nest.
+        faults / aggregator: accepted for signature parity with
+            ``ScanEngine`` but must resolve inert (``mode="none"`` /
+            plain ``"mean"``, no quarantine) — robustness cells run
+            sequentially (a Session routes them that way).
 
     Raises:
         ValueError: cells disagree on anything but seed/name, or the
@@ -1305,10 +1503,19 @@ class BatchedSeedEngine:
                  param_layout: str = "tree", use_ee: bool = True,
                  scenario: Union[str, ScenarioConfig, None] = "full",
                  aggregation: Union[str, AggregationConfig, None] = "sync",
-                 shard_clients: int = 1):
+                 shard_clients: int = 1,
+                 faults: Union[str, FaultConfig, None] = None,
+                 aggregator: Union[str, RobustConfig, None] = "mean"):
         """Build per-seed state, stack it, and jit the vmapped scan."""
         if not cells:
             raise ValueError("BatchedSeedEngine needs at least one cell")
+        flt, rb = make_faults(faults), make_robust(aggregator)
+        if (flt.mode != "none" or rb.aggregator != "mean"
+                or rb.quarantine_after > 0):
+            raise ValueError(
+                "fault injection / robust aggregation cannot combine with "
+                "the batched seed axis; run robustness cells sequentially "
+                "(a Session does this automatically)")
         if int(shard_clients) != 1:
             raise ValueError(
                 f"shard_clients={shard_clients} cannot combine with the "
@@ -1489,7 +1696,10 @@ def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                         scenario: Union[str, ScenarioConfig, None] = "full",
                         aggregation: Union[str, AggregationConfig,
                                            None] = "sync",
-                        shard_clients: int = 1) -> RunResult:
+                        shard_clients: int = 1,
+                        faults: Union[str, FaultConfig, None] = None,
+                        aggregator: Union[str, RobustConfig,
+                                          None] = "mean") -> RunResult:
     """One-shot convenience over ``ScanEngine`` — the ``backend="scan"``
     entry point of ``repro.fl.run_experiment`` (see that function and the
     ``ScanEngine`` docstring for every knob)."""
@@ -1497,4 +1707,5 @@ def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                       param_layout=param_layout, use_ee=use_ee,
                       log_every=log_every, scenario=scenario,
                       aggregation=aggregation,
-                      shard_clients=shard_clients).run()
+                      shard_clients=shard_clients, faults=faults,
+                      aggregator=aggregator).run()

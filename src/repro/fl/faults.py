@@ -1,0 +1,223 @@
+"""Adversarial-client fault injection for the compiled round engine.
+
+The engine's scenario axis (``repro.fl.latency``) models *infrastructure*
+heterogeneity — clients that are unreachable or slow.  This module models
+clients whose **updates themselves are harmful**: a persistent adversary
+set is drawn once per run and, on each round it is active, the updates of
+any selected adversary are corrupted *in-scan*, right between local
+training and aggregation.  Fault modes (:data:`FAULT_MODES` minus the
+``"none"`` default):
+
+* ``"nan"`` — the update's params and momentum become non-finite (a
+  diverged or byzantine client).  Detectable: the robust layer's
+  non-finite screen (``repro.fl.robust.finite_rows``) masks these rows
+  out of aggregation and out of GPFL's bandit feedback.
+* ``"noise"`` — additive Gaussian noise at scale ``noise_sigma`` on
+  params and momentum (a faulty-but-finite client).
+* ``"signflip"`` — the classic model-poisoning proxy: the client reports
+  ``w_prev − signflip_scale · (w − w_prev)`` (its descent direction
+  negated and scaled) and ``−signflip_scale · d`` as its momentum, so
+  its Eq. 3 projection score anti-aligns with the global direction —
+  the corruption GPFL's gradient-projection value should down-weight.
+* ``"dropout"`` — the update silently never arrives mid-round
+  (values untouched, the delivery mask goes ``False``) — distinct from
+  a straggler because no deadline or latency model is involved.
+
+Like the availability/latency streams, the per-round hit mask is
+precomputed host-side into a ``(R, N)`` scan input
+(:func:`fault_stream`) from an *independent* tuple-seeded RNG
+(``np.random.default_rng((exp.seed, cfg.seed, 3))`` in the engine), so
+enabling faults never perturbs the selector streams' host-parity
+contract — and ``FaultConfig(mode="none")`` (the default) leaves the
+engine's trace untouched entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api.capabilities import FAULT_MODES
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """One adversarial-client fault scenario.
+
+    Attributes:
+        mode: one of :data:`repro.api.capabilities.FAULT_MODES`
+            (``"none"`` disables the layer entirely — the engine's trace
+            is bit-identical to an engine built without faults).
+        fraction: fraction of the client population drawn (once, without
+            replacement) as the persistent adversary set.
+        noise_sigma: Gaussian scale for ``mode="noise"``.
+        signflip_scale: negation scale for ``mode="signflip"`` — the
+            reported update is ``w_prev − scale·(w − w_prev)``.
+        prob: per-round probability that an adversary is *active* (1.0 =
+            it corrupts every round it is selected).
+        seed: host RNG seed of the fault stream — independent of the
+            experiment seed so fault draws never shift selector streams.
+    """
+    mode: str = "nan"
+    fraction: float = 0.2
+    noise_sigma: float = 1.0
+    signflip_scale: float = 1.0
+    prob: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        """Validate the mode name and the probability/fraction ranges."""
+        if self.mode not in FAULT_MODES:
+            raise ValueError(f"fault mode must be one of {FAULT_MODES}; "
+                             f"got {self.mode!r}")
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in [0, 1]; "
+                             f"got {self.fraction}")
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"prob must be in [0, 1]; got {self.prob}")
+
+
+def make_faults(faults: Union[str, FaultConfig, None]) -> FaultConfig:
+    """Coerce the ``faults=`` argument into a :class:`FaultConfig`.
+
+    Args:
+        faults: ``None`` (no faults), a mode name from
+            :data:`repro.api.capabilities.FAULT_MODES` (string shorthand
+            with default knobs), or an explicit config.
+
+    Returns:
+        The resolved :class:`FaultConfig` (``None`` → ``mode="none"``).
+
+    Raises:
+        ValueError: unknown mode name (listing the supported modes).
+    """
+    if faults is None:
+        return FaultConfig(mode="none")
+    if isinstance(faults, FaultConfig):
+        return faults
+    if faults in FAULT_MODES:
+        return FaultConfig(mode=faults)
+    raise ValueError(f"unknown faults {faults!r}; expected one of "
+                     f"{FAULT_MODES} or a FaultConfig")
+
+
+def adversary_ids(rng, n_clients: int, cfg: FaultConfig) -> np.ndarray:
+    """The persistent adversary set — the stream's FIRST rng draw.
+
+    Exposed so tests (and the bench) can reconstruct which clients a
+    :func:`fault_stream` corrupted by re-seeding the same rng.
+
+    Args:
+        rng: host ``np.random.Generator`` (the fault stream's rng, fresh).
+        n_clients: population size N.
+        cfg: the fault scenario.
+
+    Returns:
+        (round(fraction·N),) sorted int64 client ids.
+    """
+    n_bad = int(round(cfg.fraction * n_clients))
+    if n_bad == 0:
+        return np.zeros((0,), np.int64)
+    return np.sort(rng.choice(n_clients, size=n_bad, replace=False))
+
+
+def fault_stream(rng, rounds: int, n_clients: int,
+                 cfg: FaultConfig) -> np.ndarray:
+    """Precompute the per-(round, client) fault-hit mask.
+
+    The adversary set is drawn once (:func:`adversary_ids` — persistent
+    across the run, the model-poisoning threat model); each adversary is
+    then independently active per round with probability ``cfg.prob``.
+    Honest clients are never hit.
+
+    Args:
+        rng: host ``np.random.Generator`` (the fault stream, NOT the
+            experiment rng — see :class:`FaultConfig.seed`).
+        rounds: number of stream rows R (sync rounds, or buffered
+            prefill + events).
+        n_clients: population size N.
+        cfg: the fault scenario.
+
+    Returns:
+        (R, N) bool mask, ``True`` = this client's update is corrupted
+        this round (if selected).
+    """
+    bad = adversary_ids(rng, n_clients, cfg)
+    mask = np.zeros((rounds, n_clients), bool)
+    if bad.size:
+        mask[:, bad] = rng.random((rounds, bad.size)) < cfg.prob
+    return mask
+
+
+def _bcast(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a (K,) mask so it broadcasts against a (K, ...) leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def corrupt_cohort(cfg: FaultConfig, key, hit: jnp.ndarray, w, d,
+                   w_prev) -> Tuple:
+    """Apply one round's corruption to the cohort's trained updates.
+
+    Trace-safe and layout-generic: ``w``/``d`` are stacked cohort pytrees
+    with a leading (K,) axis on every leaf — a packed ``(K, Dp)`` matrix
+    is simply a one-leaf pytree, so both engine layouts share this code
+    (the engine corrupts the trainer's TREE output before any packing).
+
+    Args:
+        cfg: the fault scenario (``mode != "none"``).
+        key: PRNG key for the ``"noise"`` mode's Gaussian draws (folded
+            off the round key, so the clean path's key sequence is
+            untouched).
+        hit: (K,) bool — which cohort rows this round's stream corrupts.
+        w: stacked trained params, leading (K,) axis per leaf.
+        d: stacked local momenta (GPFL's Eq. 3 input), same shape.
+        w_prev: the round's GLOBAL params (no cohort axis) — the
+            ``"signflip"`` pivot.
+
+    Returns:
+        ``(w, d, delivered)`` — corrupted copies plus a (K,) bool
+        delivery mask (all-``True`` except under ``mode="dropout"``,
+        where hit rows silently never arrive).
+
+    Raises:
+        ValueError: called with ``mode="none"`` (the engine never does;
+            a no-op call is a wiring bug, not a scenario).
+    """
+    k = hit.shape[0]
+    delivered = jnp.ones((k,), bool)
+    if cfg.mode == "nan":
+        bad = jnp.float32(jnp.nan)
+        w = jax.tree.map(
+            lambda a: jnp.where(_bcast(hit, a), bad.astype(a.dtype), a), w)
+        d = jax.tree.map(
+            lambda a: jnp.where(_bcast(hit, a), bad.astype(a.dtype), a), d)
+    elif cfg.mode == "noise":
+        kw, kd = jax.random.split(key)
+
+        def add_noise(tree, base):
+            leaves, treedef = jax.tree.flatten(tree)
+            keys = jax.random.split(base, len(leaves))
+            noisy = [
+                jnp.where(_bcast(hit, a),
+                          a + cfg.noise_sigma
+                          * jax.random.normal(ki, a.shape, a.dtype), a)
+                for a, ki in zip(leaves, keys)]
+            return jax.tree.unflatten(treedef, noisy)
+
+        w = add_noise(w, kw)
+        d = add_noise(d, kd)
+    elif cfg.mode == "signflip":
+        s = jnp.float32(cfg.signflip_scale)
+        w = jax.tree.map(
+            lambda a, p: jnp.where(_bcast(hit, a), p - s * (a - p), a),
+            w, w_prev)
+        d = jax.tree.map(
+            lambda a: jnp.where(_bcast(hit, a), -s * a, a), d)
+    elif cfg.mode == "dropout":
+        delivered = jnp.logical_not(hit)
+    else:
+        raise ValueError(f"corrupt_cohort called with mode={cfg.mode!r}")
+    return w, d, delivered

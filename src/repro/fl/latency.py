@@ -94,6 +94,12 @@ class LatencyModel:
                 cohort's straggler-dominated train time.
             k: cohort size.
             rng: host ``np.random.Generator`` (speeds + cohort draw).
+                Callers that need cross-process reproducibility must
+                pass a generator with a state-independent seed — e.g.
+                :func:`cell_rng`, which ``compare_selectors`` uses so
+                two sweep workers pricing the same cell draw identical
+                streams (never a generator inherited from loop order or
+                module-global state).
             d_probe: Pow-d candidate-pool size (0 → the 2k default).
             all_probe: unused; kept for call-site compatibility.
 
@@ -121,6 +127,36 @@ class LatencyModel:
                 + self.local_compute_s * self.probe_fraction / 3 * speeds[cand]
             t += probes.max()
         return float(t)
+
+
+def cell_rng(config, salt: int = 0) -> np.random.Generator:
+    """A host RNG derived from a cell's config fingerprint — not from
+    process state.
+
+    Host-side draws that must reproduce across the multi-process sweep
+    executor (``repro.launch.sweep``) cannot come from a generator whose
+    seed depends on loop order, global RNG state or ``PYTHONHASHSEED``:
+    two workers replaying the same cell would diverge.  This seeds a
+    fresh ``np.random.Generator`` from the cell's
+    ``repro.api.journal.cell_fingerprint`` (a sha1 over the config's
+    sorted-JSON dict — stable across processes and sessions), so any
+    worker pricing or simulating the same cell draws the identical
+    stream.
+
+    Args:
+        config: the cell's ``FLExperimentConfig`` (any dataclass the
+            journal can fingerprint).
+        salt: optional stream-splitting salt (two independent streams
+            for one cell → two salts).
+
+    Returns:
+        A freshly seeded ``np.random.Generator``.
+    """
+    # local import: repro.api.journal ← repro.fl.latency would otherwise
+    # be a package cycle at import time (api.spec lazily imports here)
+    from repro.api.journal import cell_fingerprint
+    return np.random.default_rng(
+        (int(cell_fingerprint(config)[:16], 16), int(salt)))
 
 
 def compare_selectors(rounds: int = 200, k: int = 5, seed: int = 0,
@@ -179,7 +215,15 @@ def compare_selectors(rounds: int = 200, k: int = 5, seed: int = 0,
 
     out = {}
     for cell in plan.cells():
-        rng = np.random.default_rng(seed)
+        # paired draws: every selector's cell re-seeds from the SAME
+        # selector-independent base fingerprint, so all four selectors
+        # price the identical speed/cohort draws (the Fig. 6 ordering is
+        # a protocol-overhead argument, not a sampling artifact) — and
+        # the fingerprint seeding makes the stream reproducible under
+        # the multi-process sweep executor, where loop order and global
+        # RNG state differ between workers
+        base = dataclasses.replace(cell, selector="random", name="")
+        rng = cell_rng(base)
         ts = [model.round_time(cell.selector, k, rng) for _ in range(rounds)]
         out[cell.selector] = float(np.mean(ts))
     return out

@@ -1,0 +1,278 @@
+"""Robust server aggregation: the engine's ``aggregator=`` spec axis.
+
+Plain FedAvg is a weighted mean — one NaN row poisons every coordinate
+of the global model, and one sign-flipped update drags the model
+backwards in proportion to its weight.  This module provides the
+robust-aggregation layer the fault scenarios (``repro.fl.faults``) are
+benched against:
+
+* a **non-finite screen** (:func:`finite_rows`) — any update row with a
+  NaN/Inf coordinate is masked out of aggregation entirely (and the
+  engine masks the same rows out of ``gpcb.observe(valid_mask=)``, so
+  the bandit never ingests poisoned rewards);
+* four **aggregators** (:data:`repro.api.capabilities.AGGREGATORS`),
+  all trace-safe jnp over EITHER layout — a stacked parameter pytree or
+  the packed ``(K, Dp)`` cohort matrix (which is just a one-leaf
+  pytree, so one implementation serves both):
+
+  - ``"mean"`` — the screened weighted mean (plain FedAvg over the
+    valid rows; identical to today's server when every row is valid);
+  - ``"trimmed_mean"`` — per-coordinate: sort the valid rows, drop the
+    ``trim_fraction`` highest and lowest, average the rest;
+  - ``"median"`` — per-coordinate median of the valid rows;
+  - ``"norm_clip"`` — clip each valid update's global delta norm to the
+    ``clip_quantile`` quantile of the cohort's norms, then take the
+    screened weighted mean of the clipped deltas (bounds what any
+    single client can move the model, without per-coordinate sorting);
+
+* a **quarantine** knob (``quarantine_after``) — the engine counts a
+  strike every time a client's *delivered* update fails the non-finite
+  screen and, once a client reaches ``quarantine_after`` strikes, masks
+  it out of selection through the same ``avail=`` plumbing the
+  availability scenario uses (score-based in-scan selectors only —
+  gpfl / fedcor; random / pow-d replay precomputed host streams and
+  stay oblivious, which is exactly the head-to-head the bench runs).
+
+Everything here runs under ``jit`` with fixed shapes: masked order
+statistics push invalid rows to ``+inf`` before a full-height
+``jnp.sort`` and then select traced index windows with where-then-sum
+(never a tensordot against zero weights — ``0·inf`` is NaN).  When NO
+row is valid the aggregate falls back to the previous global params
+(the server skips the round), which is the only behavioural difference
+from the legacy uniform-fallback straggler path — and it exists only on
+the robust path; ``aggregator="mean"`` with no faults and no quarantine
+never routes through this module at all (the engine's bit-parity
+contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.capabilities import AGGREGATORS
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """One robust-aggregation policy.
+
+    Attributes:
+        aggregator: one of
+            :data:`repro.api.capabilities.AGGREGATORS`.  ``"mean"``
+            (with ``quarantine_after=0``) is the engine's default and
+            keeps the legacy FedAvg path — this module is never entered.
+        trim_fraction: per-side trim for ``"trimmed_mean"``:
+            ``floor(trim_fraction · n_valid)`` rows are dropped from
+            each end of every coordinate's sorted column.
+        clip_quantile: for ``"norm_clip"``: update-norm clipping
+            threshold as a quantile of the valid rows' delta norms
+            (0.5 = clip to the median norm).
+        quarantine_after: > 0 masks clients out of in-scan selection
+            once their delivered updates have failed the non-finite
+            screen this many times (0 disables the knob).
+    """
+    aggregator: str = "mean"
+    trim_fraction: float = 0.2
+    clip_quantile: float = 0.5
+    quarantine_after: int = 0
+
+    def __post_init__(self):
+        """Validate the aggregator name and the fraction/quantile ranges."""
+        if self.aggregator not in AGGREGATORS:
+            raise ValueError(f"aggregator must be one of {AGGREGATORS}; "
+                             f"got {self.aggregator!r}")
+        if not 0.0 <= self.trim_fraction < 0.5:
+            raise ValueError(f"trim_fraction must be in [0, 0.5); "
+                             f"got {self.trim_fraction}")
+        if not 0.0 <= self.clip_quantile <= 1.0:
+            raise ValueError(f"clip_quantile must be in [0, 1]; "
+                             f"got {self.clip_quantile}")
+        if self.quarantine_after < 0:
+            raise ValueError(f"quarantine_after must be >= 0; "
+                             f"got {self.quarantine_after}")
+
+
+def make_robust(agg: Union[str, RobustConfig, None]) -> RobustConfig:
+    """Coerce the ``aggregator=`` argument into a :class:`RobustConfig`.
+
+    Args:
+        agg: ``None`` (plain mean), an aggregator name from
+            :data:`repro.api.capabilities.AGGREGATORS` (string shorthand
+            with default knobs), or an explicit config.
+
+    Returns:
+        The resolved :class:`RobustConfig`.
+
+    Raises:
+        ValueError: unknown aggregator name (listing the supported ones).
+    """
+    if agg is None:
+        return RobustConfig(aggregator="mean")
+    if isinstance(agg, RobustConfig):
+        return agg
+    if agg in AGGREGATORS:
+        return RobustConfig(aggregator=agg)
+    raise ValueError(f"unknown aggregator {agg!r}; expected one of "
+                     f"{AGGREGATORS} or a RobustConfig")
+
+
+def _bcast(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a (K,) mask so it broadcasts against a (K, ...) leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def finite_rows(cohort) -> jnp.ndarray:
+    """The non-finite screen: which cohort rows are wholly finite.
+
+    Args:
+        cohort: stacked update pytree (or a single ``(K, Dp)`` matrix),
+            leading (K,) axis on every leaf.
+
+    Returns:
+        (K,) bool — ``True`` iff every coordinate of every leaf of that
+        row is finite (no NaN, no ±Inf).
+    """
+    leaves = jax.tree.leaves(cohort)
+    k = leaves[0].shape[0]
+    ok = jnp.ones((k,), bool)
+    for leaf in leaves:
+        ok = ok & jnp.all(jnp.isfinite(leaf).reshape(k, -1), axis=1)
+    return ok
+
+
+def _norm_weights(valid: jnp.ndarray,
+                  weights: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Screened aggregation weights: ``weights·valid`` renormalized to
+    sum 1 (uniform over the valid rows when ``weights`` is ``None``);
+    all-zero when nothing is valid (the caller's skip-round guard)."""
+    v = valid.astype(jnp.float32)
+    wv = v if weights is None else weights.astype(jnp.float32) * v
+    return wv / jnp.maximum(jnp.sum(wv), 1e-12)
+
+
+def _masked_mean(cohort, valid, weights):
+    """Screened weighted mean — ``repro.fl.server.masked_fedavg`` (one
+    shared implementation; invalid rows are zeroed BEFORE the multiply,
+    because a NaN coordinate times a zero weight is still NaN)."""
+    from repro.fl.server import masked_fedavg
+    return masked_fedavg(cohort, valid, weights)
+
+
+def _sorted_valid(leaf: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Per-coordinate sort with the invalid rows pushed to the +inf
+    tail — rows [0, n_valid) of the result are the sorted valid values."""
+    return jnp.sort(jnp.where(_bcast(valid, leaf), leaf.astype(jnp.float32),
+                              jnp.inf), axis=0)
+
+
+def _trimmed_mean(cohort, valid, trim: float):
+    """Per-coordinate trimmed mean over the valid rows (where-then-sum
+    window selection; ``g`` clamps so at least one row survives)."""
+    nv = jnp.sum(valid.astype(jnp.int32))
+    g = jnp.clip(jnp.floor(trim * nv.astype(jnp.float32)).astype(jnp.int32),
+                 0, jnp.maximum((nv - 1) // 2, 0))
+    cnt = jnp.maximum(nv - 2 * g, 1).astype(jnp.float32)
+
+    def leafwise(leaf):
+        s = _sorted_valid(leaf, valid)
+        idx = jnp.arange(s.shape[0])
+        inwin = (idx >= g) & (idx < nv - g)
+        return jnp.sum(jnp.where(_bcast(inwin, s), s, 0.0), axis=0) / cnt
+
+    return jax.tree.map(leafwise, cohort)
+
+
+def _median(cohort, valid):
+    """Per-coordinate median of the valid rows (mean of the two middle
+    order statistics for even counts, matching ``np.median``)."""
+    nv = jnp.sum(valid.astype(jnp.int32))
+    lo = jnp.maximum((nv - 1) // 2, 0)
+    hi = jnp.maximum(nv // 2, 0)
+
+    def leafwise(leaf):
+        s = _sorted_valid(leaf, valid)
+        return 0.5 * (jnp.take(s, lo, axis=0) + jnp.take(s, hi, axis=0))
+
+    return jax.tree.map(leafwise, cohort)
+
+
+def _delta_norms(cohort, w_prev, valid) -> jnp.ndarray:
+    """Each row's global update norm ‖w_i − w_prev‖₂ across ALL leaves
+    (invalid rows contribute 0 and are never read downstream)."""
+    k = jax.tree.leaves(cohort)[0].shape[0]
+    sq = jnp.zeros((k,), jnp.float32)
+    for leaf, prev in zip(jax.tree.leaves(cohort), jax.tree.leaves(w_prev)):
+        delta = jnp.where(_bcast(valid, leaf),
+                          leaf.astype(jnp.float32)
+                          - prev.astype(jnp.float32), 0.0)
+        sq = sq + jnp.sum(delta.reshape(k, -1) ** 2, axis=1)
+    return jnp.sqrt(sq)
+
+
+def _norm_clip(cohort, w_prev, valid, weights, quantile: float):
+    """Norm-clipped screened mean: scale every valid delta down to the
+    valid cohort's ``quantile`` delta-norm, then weighted-mean the
+    clipped deltas onto ``w_prev``."""
+    nv = jnp.sum(valid.astype(jnp.int32))
+    norms = _delta_norms(cohort, w_prev, valid)
+    sn = jnp.sort(jnp.where(valid, norms, jnp.inf))
+    qi = jnp.clip(
+        jnp.floor(quantile * jnp.maximum(nv - 1, 0).astype(jnp.float32))
+        .astype(jnp.int32), 0, jnp.maximum(nv - 1, 0))
+    tau = jnp.take(sn, qi)
+    scale = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
+    lam = _norm_weights(valid, weights)
+    return jax.tree.map(
+        lambda a, p: p.astype(jnp.float32) + jnp.sum(
+            _bcast(lam * scale, a)
+            * jnp.where(_bcast(valid, a),
+                        a.astype(jnp.float32) - p.astype(jnp.float32), 0.0),
+            axis=0),
+        cohort, w_prev)
+
+
+def robust_aggregate(cfg: RobustConfig, cohort, w_prev,
+                     valid: jnp.ndarray,
+                     weights: Optional[jnp.ndarray] = None):
+    """Aggregate a (possibly corrupted) cohort under ``cfg.aggregator``.
+
+    Layout-generic and trace-safe: ``cohort`` is a stacked pytree with a
+    leading (K,) axis per leaf — the flat engine passes its packed
+    ``(K, Dp)`` matrix, the tree engine its stacked params pytree, and
+    both get back an aggregate with the cohort axis reduced away.
+
+    Args:
+        cfg: the robust-aggregation policy.
+        cohort: the K trained updates (stacked, leading cohort axis).
+        w_prev: the previous global params (same structure, no cohort
+            axis) — the ``"norm_clip"`` pivot and the empty-cohort
+            fallback.
+        valid: (K,) bool — rows that passed delivery + the non-finite
+            screen (and, sync stragglers, the deadline).  Invalid rows
+            never touch the output, whatever their values.
+        weights: optional (K,) unnormalized aggregation weights (the
+            buffered backend's staleness discounts); renormalized over
+            the valid rows.  Order-statistic aggregators
+            (``trimmed_mean`` / ``median``) are unweighted by
+            construction and ignore this.
+
+    Returns:
+        The aggregated global params (cohort axis reduced), falling back
+        to ``w_prev`` bitwise when no row is valid (skip-round).
+    """
+    if cfg.aggregator == "mean":
+        agg = _masked_mean(cohort, valid, weights)
+    elif cfg.aggregator == "trimmed_mean":
+        agg = _trimmed_mean(cohort, valid, cfg.trim_fraction)
+    elif cfg.aggregator == "median":
+        agg = _median(cohort, valid)
+    else:  # norm_clip (the config validated the name already)
+        agg = _norm_clip(cohort, w_prev, valid, weights, cfg.clip_quantile)
+    any_valid = jnp.any(valid)
+    return jax.tree.map(
+        lambda a, p: jnp.where(any_valid, a,
+                               p.astype(jnp.float32)).astype(p.dtype),
+        agg, w_prev)

@@ -48,6 +48,43 @@ def fedavg(cohort_params, weights=None):
         cohort_params)
 
 
+def masked_fedavg(cohort_params, valid, weights=None):
+    """FedAvg restricted to the ``valid`` cohort rows.
+
+    The screened aggregation primitive of the robustness layer
+    (``repro.fl.robust``): invalid rows — non-finite updates flagged by
+    ``repro.fl.robust.finite_rows``, dropped-out deliveries, straggler
+    deadline misses — contribute exactly zero, and the remaining weights
+    renormalise over the valid subset.  With all rows valid and
+    ``weights=None`` this is a uniform masked mean, NOT bitwise the
+    ``jnp.mean`` reduction of :func:`fedavg` (association order differs),
+    which is why the engine only routes through masked aggregation when
+    a robustness knob is active.
+
+    Args:
+        cohort_params: stacked parameter pytree, leading (K,) cohort axis.
+        valid: (K,) bool — rows that may contribute.
+        weights: optional (K,) unnormalised aggregation weights.
+
+    Returns:
+        The aggregated global parameter pytree (zeros if nothing is
+        valid — callers that need skip-round semantics guard on
+        ``jnp.any(valid)``, as ``repro.fl.robust.robust_aggregate``
+        does).
+    """
+    v = valid.astype(jnp.float32)
+    wv = v if weights is None else weights.astype(jnp.float32) * v
+    lam = wv / jnp.maximum(jnp.sum(wv), 1e-12)
+
+    def _one(leaf):
+        lam_b = lam.reshape(lam.shape + (1,) * (leaf.ndim - 1))
+        val_b = valid.reshape(valid.shape + (1,) * (leaf.ndim - 1))
+        safe = jnp.where(val_b, leaf.astype(jnp.float32), 0.0)
+        return jnp.sum(lam_b * safe, axis=0)
+
+    return jax.tree.map(_one, cohort_params)
+
+
 def update_global_direction(direction, w_prev, w_new, lr: float,
                             gamma: float):
     """Server-side momentum-based gradient (the projection target of Eq. 3):

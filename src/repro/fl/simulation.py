@@ -175,6 +175,13 @@ def run_experiment(exp: FLExperimentConfig, *, log_every: int = 0,
                             aggregation=aggregation, buffer_size=buffer_size,
                             staleness_discount=staleness_discount)
     runset = Plan(exp).execute_with(spec, log_every=log_every).run()
+    if not runset.runs and runset.failures:
+        # a one-cell run has no sweep to degrade gracefully for: surface
+        # the original error instead of an empty RunSet
+        failure = runset.failures[0]
+        if failure.exception is not None:
+            raise failure.exception
+        raise RuntimeError(failure.error)
     return runset[0]
 
 

@@ -42,11 +42,14 @@ import time
 from typing import Dict, List, Optional
 
 from repro.api.journal import RunJournal, cell_fingerprint
-from repro.api.results import RunSet, _config_from_dict, _config_to_dict
+from repro.api.results import (CellFailure, RunSet, _config_from_dict,
+                               _config_to_dict)
 from repro.api.session import Session
 from repro.api.spec import ExecutionSpec
+from repro.fl.faults import FaultConfig
 from repro.fl.latency import (AggregationConfig, LatencyModel,
                               ScenarioConfig)
+from repro.fl.robust import RobustConfig
 
 
 class _ListPlan:
@@ -70,7 +73,7 @@ def _spec_to_dict(spec: ExecutionSpec) -> dict:
 def _spec_from_dict(d: dict) -> ExecutionSpec:
     """Rebuild an :class:`ExecutionSpec` from :func:`_spec_to_dict`
     output (re-hydrating dict-ified ``ScenarioConfig`` /
-    ``AggregationConfig`` values)."""
+    ``AggregationConfig`` / ``FaultConfig`` / ``RobustConfig`` values)."""
     d = dict(d)
     scn = d.get("scenario")
     if isinstance(scn, dict):
@@ -80,6 +83,12 @@ def _spec_from_dict(d: dict) -> ExecutionSpec:
     agg = d.get("aggregation")
     if isinstance(agg, dict):
         d["aggregation"] = AggregationConfig(**agg)
+    flt = d.get("faults")
+    if isinstance(flt, dict):
+        d["faults"] = FaultConfig(**flt)
+    rb = d.get("aggregator")
+    if isinstance(rb, dict):
+        d["aggregator"] = RobustConfig(**rb)
     return ExecutionSpec(**d)
 
 
@@ -204,20 +213,51 @@ def run_plan_processes(plan, spec: ExecutionSpec, *, workers: int,
         json.dump({"workers": workers, "cells": len(cells),
                    "restarts": restarts}, fh, indent=2)
 
+    return merge_shard_journals(cells, journal_dir, workers)
+
+
+def merge_shard_journals(cells: List, journal_dir: str,
+                         workers: int) -> RunSet:
+    """Stitch the per-shard journals back into plan order.
+
+    Failure-tolerant: a cell whose latest journal outcome is a
+    ``status="failed"`` record (a worker Session degraded gracefully)
+    becomes a :class:`repro.api.results.CellFailure` on the returned
+    set's ``.failures`` instead of aborting the merge — only a cell with
+    NO record at all (the sweep genuinely never got to it) raises.
+
+    Args:
+        cells: the plan's cells, in plan order.
+        journal_dir: directory holding ``worker{w}.jsonl`` journals.
+        workers: shard count (which journals to read).
+
+    Returns:
+        A :class:`repro.api.RunSet` of the completed cells in plan
+        order, failed cells on ``.failures``.
+
+    Raises:
+        RuntimeError: some cell appears in no journal (sweep incomplete).
+    """
     by_key: Dict[str, object] = {}
+    failed_by_key: Dict[str, dict] = {}
     for shard in range(workers):
-        by_key.update(RunJournal(
-            _worker_journal(journal_dir, shard)).results_by_key())
-    results = []
+        journal = RunJournal(_worker_journal(journal_dir, shard))
+        by_key.update(journal.results_by_key())
+        failed_by_key.update(journal.failures_by_key())
+    results, failures = [], []
     for i, cell in enumerate(cells):
         key = cell_fingerprint(cell)
-        if key not in by_key:
+        if key in by_key:
+            results.append(by_key[key])
+        elif key in failed_by_key:
+            failures.append(CellFailure(
+                config=cell, error=failed_by_key[key].get("error", "")))
+        else:
             raise RuntimeError(
                 f"cell {i} ({cell.name!r}, fingerprint {key[:10]}) missing "
                 f"from the worker journals in {journal_dir} — sweep "
                 f"incomplete")
-        results.append(by_key[key])
-    return RunSet(results)
+    return RunSet(results, failures=failures)
 
 
 def _main(argv: Optional[List[str]] = None) -> None:

@@ -52,6 +52,14 @@ def _spec_for(dim, value, backend):
     elif dim == "resume":
         kw.update(snapshot_every=2, snapshot_dir=tempfile.mkdtemp(),
                   resume=True)
+    elif dim == "faults":
+        if value != "none":
+            kw["faults"] = value
+    elif dim == "aggregator":
+        kw["aggregator"] = value
+    elif dim == "quarantine_after":
+        from repro.fl.robust import RobustConfig
+        kw["aggregator"] = RobustConfig(quarantine_after=1)
     return ExecutionSpec(**kw), sel
 
 
@@ -79,10 +87,16 @@ def test_registered_combinations_run_or_raise_as_declared(cap, backend):
             Plan(exp).execute_with(spec).run()
         else:
             # registry says yes, but this host lacks the devices: the
-            # engine must still fail fast with a clear ValueError
+            # engine still fails with a clear ValueError — surfaced on
+            # the RunSet's failure list (a Session degrades gracefully),
+            # and re-raised verbatim by the one-cell run_experiment shim
             exp = dataclasses.replace(exp, clients_per_round=4)
+            res = Plan(exp).execute_with(spec).run()
+            assert len(res) == 0 and len(res.failures) == 1
+            assert "device" in res.failures[0].error
             with pytest.raises(ValueError, match="device"):
-                Plan(exp).execute_with(spec).run()
+                run_experiment(exp, backend="scan", param_layout="flat",
+                               shard_clients=2)
         return
     res = Plan(exp).execute_with(spec).run()
     assert len(res) == 1 and np.all(np.isfinite(res[0].accuracy))

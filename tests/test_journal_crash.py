@@ -209,19 +209,40 @@ def test_executor_respawns_dead_workers_and_merges(tmp_path, reference):
 
 def test_executor_gives_up_after_max_restarts(tmp_path):
     """A shard that keeps dying past max_restarts fails the sweep with a
-    clear error instead of looping forever."""
+    clear error instead of looping forever.
+
+    A cell that merely RAISES no longer kills a worker (its Session
+    degrades gracefully), so the death here is environmental: the
+    shard's journal path is a directory the worker cannot open — every
+    attempt dies at startup, before any cell runs.
+    """
     cells = _sweep_child.make_cells()
     jdir = str(tmp_path / "exec_fail")
-    os.makedirs(jdir)
-    # a payload the worker cannot even load → every attempt dies at once
+    os.makedirs(os.path.join(jdir, "worker0.jsonl"))
     with pytest.raises(RuntimeError, match="died with exit code"):
         run_plan_processes(
-            _BrokenPlan(cells), _sweep_child.SPEC, workers=1,
+            _ListPlan(cells), _sweep_child.SPEC, workers=1,
             journal_dir=jdir, max_restarts=1)
 
 
+def test_executor_surfaces_failed_cells_without_dying(tmp_path):
+    """A cell that raises inside a worker degrades gracefully end to
+    end: the worker journals the failure and exits cleanly (no restart
+    burned), and the merged RunSet carries one CellFailure per bad cell
+    instead of the executor aborting."""
+    cells = _sweep_child.make_cells()
+    jdir = str(tmp_path / "exec_degrade")
+    rs = run_plan_processes(_BrokenPlan(cells), _sweep_child.SPEC,
+                            workers=2, journal_dir=jdir, max_restarts=1)
+    assert len(rs) == 0
+    assert len(rs.failures) == len(cells)
+    assert all("bogus" in f.error for f in rs.failures)
+    stats = json.load(open(os.path.join(jdir, "executor_stats.json")))
+    assert all(n == 0 for n in stats["restarts"].values()), stats
+
+
 class _BrokenPlan(_ListPlan):
-    """Cells whose configs serialize fine but crash every worker: an
+    """Cells whose configs serialize fine but raise in every worker: an
     unknown partition name KeyErrors at the child's dataset build."""
 
     def cells(self):

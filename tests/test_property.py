@@ -177,3 +177,44 @@ def test_momentum_kernel_property(seed):
     np.testing.assert_allclose(np.asarray(pn), np.asarray(p - 0.1 * g),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(mn), np.asarray(g), rtol=1e-6)
+
+
+@given(st.integers(3, 8), st.integers(1, 4), st.integers(0, 10 ** 6),
+       st.sampled_from(["mean", "trimmed_mean", "median", "norm_clip"]),
+       st.booleans())
+def test_robust_aggregation_screens_nonfinite_rows(k, n_bad, seed, agg,
+                                                   packed):
+    """Corrupt any subset of cohort rows with NaN/Inf: after the
+    non-finite screen, every robust aggregator yields FINITE params that
+    match the same aggregator run on the clean rows alone — for the
+    stacked-pytree layout and the packed (K, Dp) matrix alike."""
+    from repro.fl.robust import RobustConfig, finite_rows, robust_aggregate
+    n_bad = min(n_bad, k - 1)  # keep at least one clean row
+    rng = np.random.default_rng(seed)
+    if packed:
+        shapes = {"m": (37,)}
+    else:
+        shapes = {"a": (3, 2), "b": (5,)}
+    cohort = {n: jnp.asarray(rng.normal(size=(k,) + s), jnp.float32)
+              for n, s in shapes.items()}
+    w_prev = {n: jnp.asarray(rng.normal(size=s), jnp.float32)
+              for n, s in shapes.items()}
+    bad = rng.choice(k, size=n_bad, replace=False)
+    poison = [np.nan, np.inf, -np.inf]
+    for j, row in enumerate(bad):
+        name = list(shapes)[j % len(shapes)]
+        flat_idx = (row,) + tuple(0 for _ in shapes[name])
+        cohort[name] = cohort[name].at[flat_idx].set(poison[j % 3])
+
+    valid = finite_rows(cohort)
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  ~np.isin(np.arange(k), bad))
+    cfg = RobustConfig(agg)
+    out = robust_aggregate(cfg, cohort, w_prev, valid)
+    clean = {n: v[jnp.asarray(valid)] for n, v in cohort.items()}
+    ref = robust_aggregate(cfg, clean, w_prev,
+                           jnp.ones((k - n_bad,), bool))
+    for n in shapes:
+        assert np.isfinite(np.asarray(out[n])).all()
+        np.testing.assert_allclose(np.asarray(out[n]), np.asarray(ref[n]),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,528 @@
+"""Adversarial-client faults + robust server aggregation (PR 8).
+
+Pins the robustness-layer contracts:
+
+* **clean-path bit-parity** — ``faults=None`` + ``aggregator="mean"``
+  (the defaults) trace and run bit-identically to an engine built
+  without the knobs, sync and buffered (the hard CI gate lives in
+  ``BENCH_robust.json``; this is the fast pin);
+* the fault stream is deterministic, scoped to the persistent adversary
+  set, and each ``corrupt_cohort`` mode does exactly what its formula
+  says — hit rows only, honest rows bitwise untouched;
+* every robust aggregator matches a numpy reference computed on the
+  valid subset, the non-finite screen keeps NaN cohorts out of the
+  global model AND out of the bandit, and ``quarantine_after`` actually
+  removes repeat offenders from in-scan selection;
+* the spec/registry plumbing round-trips (sweep payloads, fingerprints,
+  capability rejections) and a Session degrades gracefully: a raising
+  cell becomes a journaled ``CellFailure``, the rest of the study runs,
+  and a restart retries exactly the failed cells.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import ExecutionSpec, Plan, RunJournal, RunSet, Session
+from repro.api import capabilities as caps
+from repro.api.journal import cell_fingerprint
+from repro.api.results import CellFailure
+from repro.configs.paper import femnist_experiment
+from repro.fl import run_experiment
+from repro.fl.engine import ScanEngine
+from repro.fl.faults import (FaultConfig, adversary_ids, corrupt_cohort,
+                             fault_stream, make_faults)
+from repro.fl.latency import AggregationConfig, cell_rng
+from repro.fl.robust import (RobustConfig, finite_rows, make_robust,
+                             robust_aggregate)
+from repro.launch.sweep import _spec_from_dict, _spec_to_dict
+
+
+def _tiny(selector, rounds=4, seed=0):
+    exp = femnist_experiment("2spc", selector, rounds=rounds)
+    return dataclasses.replace(
+        exp, seed=seed, n_clients=12, clients_per_round=4,
+        samples_per_client_mean=30, samples_per_client_std=8,
+        local_iters=2, local_batch_size=16, eval_size=200)
+
+
+def _data(exp):
+    from repro.fl.simulation import _build_data
+    return _build_data(exp, exp.seed)
+
+
+def _cohort(rng, k=6, shapes=((3, 2), (4,))):
+    """A stacked synthetic update pytree with a leading (k,) axis."""
+    return {f"l{i}": jnp.asarray(rng.normal(size=(k,) + s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+# ------------------------------------------------------- fault stream
+
+def test_fault_stream_deterministic_and_scoped():
+    """Same rng seed → identical stream; hits land ONLY on the adversary
+    columns; the adversary count is round(fraction·N)."""
+    cfg = FaultConfig(mode="nan", fraction=0.25, prob=0.7, seed=3)
+    a = fault_stream(np.random.default_rng(9), 20, 16, cfg)
+    b = fault_stream(np.random.default_rng(9), 20, 16, cfg)
+    np.testing.assert_array_equal(a, b)
+    bad = adversary_ids(np.random.default_rng(9), 16, cfg)
+    assert bad.size == round(0.25 * 16)
+    honest = np.setdiff1d(np.arange(16), bad)
+    assert not a[:, honest].any()
+    assert a[:, bad].any()
+
+
+def test_fault_stream_edge_fractions():
+    """fraction=0 → no adversaries, no hits; prob=0 → adversaries exist
+    but never activate."""
+    none = fault_stream(np.random.default_rng(0), 8, 10,
+                        FaultConfig(fraction=0.0))
+    assert not none.any()
+    idle = fault_stream(np.random.default_rng(0), 8, 10,
+                        FaultConfig(fraction=0.5, prob=0.0))
+    assert not idle.any()
+
+
+def test_make_faults_and_make_robust_coercion():
+    """None / string shorthand / passthrough; unknown names raise."""
+    assert make_faults(None).mode == "none"
+    assert make_faults("signflip").mode == "signflip"
+    cfg = FaultConfig(mode="noise", noise_sigma=2.0)
+    assert make_faults(cfg) is cfg
+    with pytest.raises(ValueError, match="unknown faults"):
+        make_faults("bitrot")
+    assert make_robust(None).aggregator == "mean"
+    assert make_robust("median").aggregator == "median"
+    rb = RobustConfig(aggregator="norm_clip")
+    assert make_robust(rb) is rb
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        make_robust("krum")
+
+
+def test_config_validation():
+    """Both config dataclasses reject out-of-range knobs."""
+    with pytest.raises(ValueError, match="fault mode"):
+        FaultConfig(mode="bitrot")
+    with pytest.raises(ValueError, match="fraction"):
+        FaultConfig(fraction=1.5)
+    with pytest.raises(ValueError, match="prob"):
+        FaultConfig(prob=-0.1)
+    with pytest.raises(ValueError, match="aggregator"):
+        RobustConfig(aggregator="krum")
+    with pytest.raises(ValueError, match="trim_fraction"):
+        RobustConfig(trim_fraction=0.5)
+    with pytest.raises(ValueError, match="clip_quantile"):
+        RobustConfig(clip_quantile=1.1)
+    with pytest.raises(ValueError, match="quarantine_after"):
+        RobustConfig(quarantine_after=-1)
+
+
+# ----------------------------------------------------- corrupt_cohort
+
+def test_corrupt_cohort_nan_and_noise_touch_only_hit_rows():
+    rng = np.random.default_rng(0)
+    w, d = _cohort(rng), _cohort(rng)
+    w_prev = {k: v[0] * 0.5 for k, v in _cohort(rng, k=1).items()}
+    hit = jnp.asarray([True, False, True, False, False, False])
+    key = jax.random.key(0)
+
+    wn, dn, deliv = corrupt_cohort(FaultConfig(mode="nan"), key, hit,
+                                   w, d, w_prev)
+    assert bool(deliv.all())
+    for leaf, orig in zip(jax.tree.leaves(wn) + jax.tree.leaves(dn),
+                          jax.tree.leaves(w) + jax.tree.leaves(d)):
+        assert np.isnan(np.asarray(leaf[hit])).all()
+        np.testing.assert_array_equal(np.asarray(leaf[~hit]),
+                                      np.asarray(orig[~hit]))
+
+    wg, dg, deliv = corrupt_cohort(FaultConfig(mode="noise",
+                                               noise_sigma=0.5),
+                                   key, hit, w, d, w_prev)
+    assert bool(deliv.all())
+    for leaf, orig in zip(jax.tree.leaves(wg) + jax.tree.leaves(dg),
+                          jax.tree.leaves(w) + jax.tree.leaves(d)):
+        assert np.isfinite(np.asarray(leaf)).all()
+        assert not np.array_equal(np.asarray(leaf[hit]),
+                                  np.asarray(orig[hit]))
+        np.testing.assert_array_equal(np.asarray(leaf[~hit]),
+                                      np.asarray(orig[~hit]))
+
+
+def test_corrupt_cohort_signflip_exact_formula():
+    """Hit rows report w_prev − s·(w − w_prev) and −s·d, exactly."""
+    rng = np.random.default_rng(1)
+    w, d = _cohort(rng), _cohort(rng)
+    w_prev = {k: v[0] for k, v in _cohort(rng, k=1).items()}
+    hit = jnp.asarray([True, False, False, True, False, False])
+    s = 3.0
+    wf, df, deliv = corrupt_cohort(
+        FaultConfig(mode="signflip", signflip_scale=s),
+        jax.random.key(0), hit, w, d, w_prev)
+    assert bool(deliv.all())
+    for name in w:
+        a, p = np.asarray(w[name]), np.asarray(w_prev[name])
+        exp = np.where(hit.reshape((-1,) + (1,) * (a.ndim - 1)),
+                       p - s * (a - p), a)
+        np.testing.assert_allclose(np.asarray(wf[name]), exp, rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(df[name][hit]), -s * np.asarray(d[name][hit]),
+            rtol=1e-6)
+
+
+def test_corrupt_cohort_dropout_and_none():
+    """dropout: values bitwise untouched, delivery mask flips; calling
+    with mode='none' is a wiring bug and raises."""
+    rng = np.random.default_rng(2)
+    w, d = _cohort(rng), _cohort(rng)
+    w_prev = {k: v[0] for k, v in _cohort(rng, k=1).items()}
+    hit = jnp.asarray([False, True, False, False, True, False])
+    wd, dd, deliv = corrupt_cohort(FaultConfig(mode="dropout"),
+                                   jax.random.key(0), hit, w, d, w_prev)
+    np.testing.assert_array_equal(np.asarray(deliv), ~np.asarray(hit))
+    for a, b in zip(jax.tree.leaves(wd), jax.tree.leaves(w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="mode='none'"):
+        corrupt_cohort(FaultConfig(mode="none"), jax.random.key(0), hit,
+                       w, d, w_prev)
+
+
+# -------------------------------------------------- robust aggregation
+
+def test_finite_rows_screens_every_leaf():
+    rng = np.random.default_rng(3)
+    c = _cohort(rng)
+    c["l0"] = c["l0"].at[1, 0, 0].set(jnp.nan)
+    c["l1"] = c["l1"].at[4, 2].set(jnp.inf)
+    np.testing.assert_array_equal(
+        np.asarray(finite_rows(c)), [True, False, True, True, False, True])
+
+
+def test_aggregators_match_numpy_reference_on_valid_subset():
+    """Each aggregator over (cohort, valid) equals the numpy reference
+    computed on the valid rows alone — for a stacked pytree and for the
+    packed single-matrix layout alike."""
+    rng = np.random.default_rng(4)
+    k = 7
+    valid = jnp.asarray([True, False, True, True, False, True, True])
+    vi = np.asarray(valid)
+
+    for cohort in (_cohort(rng, k=k), {"m": jnp.asarray(
+            rng.normal(size=(k, 10)), jnp.float32)}):
+        w_prev = {n: v[0] * 0.1 for n, v in cohort.items()}
+        sub = {n: np.asarray(v)[vi] for n, v in cohort.items()}
+
+        mean = robust_aggregate(RobustConfig("mean"), cohort, w_prev, valid)
+        for n in cohort:
+            np.testing.assert_allclose(np.asarray(mean[n]),
+                                       sub[n].mean(axis=0), rtol=1e-5)
+
+        med = robust_aggregate(RobustConfig("median"), cohort, w_prev,
+                               valid)
+        for n in cohort:
+            np.testing.assert_allclose(np.asarray(med[n]),
+                                       np.median(sub[n], axis=0),
+                                       rtol=1e-5)
+
+        tm = robust_aggregate(RobustConfig("trimmed_mean",
+                                           trim_fraction=0.25),
+                              cohort, w_prev, valid)
+        g = int(np.floor(0.25 * vi.sum()))  # = 1 of 5 per side
+        for n in cohort:
+            ref = np.sort(sub[n], axis=0)[g:vi.sum() - g].mean(axis=0)
+            np.testing.assert_allclose(np.asarray(tm[n]), ref, rtol=1e-5)
+
+        nc = robust_aggregate(RobustConfig("norm_clip",
+                                           clip_quantile=0.5),
+                              cohort, w_prev, valid)
+        deltas = {n: sub[n] - np.asarray(w_prev[n]) for n in cohort}
+        norms = np.sqrt(sum((deltas[n].reshape(vi.sum(), -1) ** 2)
+                            .sum(axis=1) for n in cohort))
+        tau = np.sort(norms)[int(np.floor(0.5 * (vi.sum() - 1)))]
+        scale = np.minimum(1.0, tau / norms)
+        for n in cohort:
+            bc = scale.reshape((-1,) + (1,) * (deltas[n].ndim - 1))
+            ref = np.asarray(w_prev[n]) + (bc * deltas[n]).mean(axis=0)
+            np.testing.assert_allclose(np.asarray(nc[n]), ref, rtol=1e-5)
+
+
+def test_mean_honours_staleness_weights():
+    """The buffered backend's discounts renormalize over the VALID rows."""
+    rng = np.random.default_rng(5)
+    cohort = {"m": jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)}
+    w_prev = {"m": cohort["m"][0] * 0.0}
+    valid = jnp.asarray([True, True, False, True])
+    weights = jnp.asarray([1.0, 0.5, 9.0, 0.25])
+    out = robust_aggregate(RobustConfig("mean"), cohort, w_prev, valid,
+                           weights=weights)
+    lam = np.asarray([1.0, 0.5, 0.0, 0.25])
+    lam = lam / lam.sum()
+    ref = (lam[:, None] * np.asarray(cohort["m"])).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(out["m"]), ref, rtol=1e-5)
+
+
+def test_all_invalid_skips_the_round():
+    """No valid row → the aggregate is w_prev, bitwise, even when every
+    cohort value is NaN."""
+    cohort = {"m": jnp.full((3, 5), jnp.nan, jnp.float32)}
+    w_prev = {"m": jnp.arange(5, dtype=jnp.float32)}
+    for agg in caps.AGGREGATORS:
+        out = robust_aggregate(RobustConfig(agg), cohort, w_prev,
+                               jnp.zeros((3,), bool))
+        np.testing.assert_array_equal(np.asarray(out["m"]),
+                                      np.asarray(w_prev["m"]))
+
+
+# ------------------------------------------------ engine integration
+
+def test_clean_path_bit_parity_sync_and_buffered():
+    """Defaults (faults=None, aggregator='mean') must be bit-identical
+    to an engine that never heard of the robustness layer."""
+    exp = _tiny("gpfl")
+    data = _data(exp)
+    plain = ScanEngine(exp, data=data).run()
+    robust = ScanEngine(exp, data=data, faults=None,
+                        aggregator="mean").run()
+    np.testing.assert_array_equal(plain.selections, robust.selections)
+    np.testing.assert_array_equal(plain.accuracy, robust.accuracy)
+
+    agg = AggregationConfig(kind="buffered", buffer_size=2)
+    b_plain = ScanEngine(exp, data=data, scenario="stragglers",
+                         aggregation=agg).run()
+    b_robust = ScanEngine(exp, data=data, scenario="stragglers",
+                          aggregation=agg, faults=None,
+                          aggregator="mean").run()
+    np.testing.assert_array_equal(b_plain.selections, b_robust.selections)
+    np.testing.assert_array_equal(b_plain.accuracy, b_robust.accuracy)
+
+
+@pytest.mark.parametrize("agg", caps.AGGREGATORS)
+def test_nan_faults_stay_finite_under_every_aggregator(agg):
+    """Half the population emitting NaN every round: the screen keeps
+    the global model (and the reported accuracy) finite under all four
+    aggregators — including plain screened mean."""
+    exp = _tiny("gpfl")
+    res = ScanEngine(exp, data=_data(exp),
+                     faults=FaultConfig(mode="nan", fraction=0.5),
+                     aggregator=agg).run()
+    assert np.isfinite(res.accuracy).all()
+    assert np.isfinite(res.loss).all()
+
+
+def test_robust_runs_flat_layout_and_buffered():
+    """The same fault scenario runs on the packed (K, Dp) layout and on
+    the buffered event-scan, and stays finite."""
+    exp = _tiny("fedcor")
+    data = _data(exp)
+    flat = ScanEngine(exp, data=data, param_layout="flat",
+                      faults="nan", aggregator="median").run()
+    assert np.isfinite(flat.accuracy).all()
+    buf = ScanEngine(exp, data=data, scenario="stragglers",
+                     aggregation=AggregationConfig(kind="buffered",
+                                                   buffer_size=2),
+                     faults="nan", aggregator="trimmed_mean").run()
+    assert np.isfinite(buf.accuracy).all()
+
+
+def test_quarantine_excludes_repeat_offenders():
+    """quarantine_after=1 + always-on NaN adversaries: each adversary is
+    selected at most once by gpfl (one strike and it is masked out of
+    selection); without quarantine the screened bandit keeps exploring
+    the silent arms and re-selects them."""
+    exp = _tiny("gpfl", rounds=8)
+    data = _data(exp)
+    flt = FaultConfig(mode="nan", fraction=0.25, prob=1.0)
+    bad = adversary_ids(
+        np.random.default_rng((exp.seed, flt.seed, 3)),
+        exp.n_clients, flt)
+    assert bad.size == 3
+
+    guarded = ScanEngine(exp, data=data, faults=flt,
+                         aggregator=RobustConfig(
+                             "mean", quarantine_after=1)).run()
+    open_run = ScanEngine(exp, data=data, faults=flt,
+                          aggregator="mean").run()
+    for b in bad:
+        assert (guarded.selections == b).sum() <= 1
+    n_guarded = int(np.isin(guarded.selections, bad).sum())
+    n_open = int(np.isin(open_run.selections, bad).sum())
+    assert n_guarded <= bad.size
+    assert n_open > n_guarded
+
+
+# ------------------------------------------------ spec / registry / api
+
+def test_registry_rejects_robust_knobs_off_the_scan_path():
+    """Faults, non-mean aggregators and quarantine are scan-only and
+    incompatible with sharding and seed-batching."""
+    def view(**kw):
+        base = dict(backend="scan", selector="gpfl", param_layout="tree",
+                    scenario_kind="full")
+        base.update(kw)
+        return caps.SpecView(**base)
+
+    with pytest.raises(ValueError, match="backend='scan'"):
+        caps.validate(view(backend="python", fault_mode="nan"))
+    with pytest.raises(ValueError, match="backend='scan'"):
+        caps.validate(view(backend="python", aggregator="median"))
+    with pytest.raises(ValueError, match="backend='scan'"):
+        caps.validate(view(backend="python", quarantine=1))
+    with pytest.raises(ValueError, match="shard_clients"):
+        caps.validate(view(fault_mode="signflip", shard_clients=2,
+                           param_layout="flat", clients_per_round=4))
+    with pytest.raises(ValueError, match="batch"):
+        caps.validate(view(aggregator="norm_clip", batch_seeds=3))
+    # the clean defaults still pass everywhere
+    caps.validate(view())
+    caps.validate(view(backend="python"))
+
+
+def test_spec_roundtrip_with_robust_knobs():
+    """The multi-process sweep payload re-hydrates FaultConfig and
+    RobustConfig values exactly."""
+    spec = ExecutionSpec(
+        backend="scan",
+        faults=FaultConfig(mode="signflip", fraction=0.3,
+                           signflip_scale=4.0, seed=7),
+        aggregator=RobustConfig(aggregator="norm_clip",
+                                clip_quantile=0.4, quarantine_after=2))
+    back = _spec_from_dict(json.loads(json.dumps(_spec_to_dict(spec))))
+    assert back.faults == spec.faults
+    assert back.aggregator == spec.aggregator
+    assert back.robust_active and back.fault_mode == "signflip"
+
+
+def test_engine_fingerprint_tracks_robust_knobs():
+    """Snapshot fingerprints must key on the fault/robust configs —
+    resuming a clean run's snapshot into a faulted run is a mismatch."""
+    exp = _tiny("gpfl")
+    data = _data(exp)
+    fps = {ScanEngine(exp, data=data).fingerprint(),
+           ScanEngine(exp, data=data, faults="nan").fingerprint(),
+           ScanEngine(exp, data=data, aggregator="median").fingerprint(),
+           ScanEngine(exp, data=data, aggregator=RobustConfig(
+               "mean", quarantine_after=2)).fingerprint()}
+    assert len(fps) == 4
+
+
+# ------------------------------------- graceful degradation (Session)
+
+def _boom_for(selector, real):
+    """A ``run_python_loop`` stand-in that fails exactly one selector."""
+
+    def fake(exp, **kw):
+        if exp.selector == selector:
+            raise RuntimeError("injected cell failure")
+        return real(exp, **kw)
+
+    return fake
+
+
+def test_session_degrades_gracefully_and_retries_failed_cells(
+        tmp_path, monkeypatch):
+    """One cell raising mid-study: the others finish, the failure is
+    journaled (status='failed') and surfaced on RunSet.failures, and a
+    restarted Session reruns ONLY the failed cell."""
+    import repro.fl.simulation as sim
+    real = sim.run_python_loop
+    plan = Plan(_tiny("gpfl", rounds=2)).sweep(
+        selector=["random", "gpfl", "powd"])
+    spec = ExecutionSpec(backend="python")
+    journal = str(tmp_path / "j.jsonl")
+
+    monkeypatch.setattr(sim, "run_python_loop", _boom_for("gpfl", real))
+    res = Session(plan, spec, journal=journal).run()
+    assert len(res) == 2 and len(res.failures) == 1
+    assert res.failures[0].config.selector == "gpfl"
+    assert "injected cell failure" in res.failures[0].error
+    jr = RunJournal(journal)
+    assert len(jr.keys()) == 2 and len(jr.failures_by_key()) == 1
+
+    monkeypatch.setattr(sim, "run_python_loop", real)
+    res2 = Session(plan, spec, journal=journal).run()
+    assert len(res2) == 3 and not res2.failures
+    # the retry superseded the failure record
+    assert not RunJournal(journal).failures_by_key()
+
+
+def test_one_cell_run_experiment_reraises(monkeypatch):
+    """The legacy shim must not swallow a failure into an empty RunSet —
+    the original exception propagates."""
+    import repro.fl.simulation as sim
+    monkeypatch.setattr(sim, "run_python_loop",
+                        _boom_for("gpfl", sim.run_python_loop))
+    with pytest.raises(RuntimeError, match="injected cell failure"):
+        run_experiment(_tiny("gpfl", rounds=2))
+
+
+# --------------------------------------------- journal compaction
+
+def test_journal_failure_records_and_compaction(tmp_path):
+    """append_failure keys never count as done; compact() keeps exactly
+    the latest record per cell and preserves read semantics."""
+    path = str(tmp_path / "j.jsonl")
+    jr = RunJournal(path)
+    a, b = _tiny("gpfl", rounds=2), _tiny("random", rounds=2)
+    jr.append_failure(a, "ValueError: boom")
+    jr.append_failure(a, "ValueError: boom again")
+    jr.append_failure(b, "RuntimeError: dead")
+    assert jr.keys() == set()
+    fails = jr.failures_by_key()
+    assert len(fails) == 2
+    assert fails[cell_fingerprint(a)]["error"] == "ValueError: boom again"
+
+    assert jr.line_count() == 3
+    dropped = jr.compact()
+    assert dropped == 1 and jr.line_count() == 2
+    assert jr.failures_by_key().keys() == fails.keys()
+    assert jr.compact() == 0  # idempotent
+
+
+def test_session_auto_compacts_oversized_journals(tmp_path, capsys):
+    """run() compacts the journal first when it exceeds the threshold."""
+    path = str(tmp_path / "j.jsonl")
+    jr = RunJournal(path)
+    cell = _tiny("random", rounds=2)
+    for _ in range(4):
+        jr.append_failure(cell, "X: transient")
+    plan = Plan(cell)
+    Session(plan, ExecutionSpec(backend="python"), journal=path,
+            auto_compact=2).run()
+    out = capsys.readouterr().out
+    assert "compacted" in out
+    # latest record per key: 1 old failure line + the new success
+    assert RunJournal(path).line_count() == 2
+
+
+def test_runset_failures_save_load_roundtrip(tmp_path):
+    """RunSet persistence carries the failure list (schema v1 kept)."""
+    cell = _tiny("gpfl", rounds=2)
+    rs = RunSet([], failures=[CellFailure(config=cell, error="E: x")])
+    p = str(tmp_path / "rs.json")
+    rs.save(p)
+    back = RunSet.load(p)
+    assert len(back.failures) == 1
+    assert back.failures[0].config == cell
+    assert back.failures[0].error == "E: x"
+    assert back.failures[0].exception is None
+    # failure-free sets keep the old byte shape (no "failures" key)
+    RunSet([]).save(p)
+    assert "failures" not in json.load(open(p))
+
+
+# ----------------------------------------------------- host RNG fix
+
+def test_cell_rng_is_reproducible_and_salted():
+    """cell_rng draws depend only on the cell fingerprint (+ salt) —
+    NOT on process state — so multi-process sweeps replay single-process
+    latency draws exactly."""
+    cell = _tiny("gpfl")
+    a = cell_rng(cell).random(8)
+    b = cell_rng(cell).random(8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, cell_rng(cell, salt=1).random(8))
+    other = dataclasses.replace(cell, seed=5)
+    assert not np.array_equal(a, cell_rng(other).random(8))
