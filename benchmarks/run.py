@@ -19,7 +19,11 @@ and its time-to-accuracy vs. sync under stragglers (see
 ``_async_micro``), and the ``robust`` bench pinning the robustness
 layer's clean-path bit-parity (hard CI gate) and recording the
 fault-injection × robust-aggregation head-to-head (see
-``_robust_micro``).
+``_robust_micro``), and the ``preselect`` bench pinning tiered
+pre-selection's oracle parity (pool >= N bit-identity, hard CI gate)
+and recording the large-K streamed scaling rows — rounds/sec and
+device-resident table bytes bounded by the pool, not the population
+(see ``_preselect_micro``).
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks everything
 (CI); ``--full`` runs paper-scale rounds; ``--json PATH`` additionally
@@ -827,6 +831,136 @@ def _robust_micro(quick: bool = True):
     return rows
 
 
+def _preselect_micro(quick: bool = True):
+    """Tiered pre-selection (ISSUE 9): parity gate + large-K scaling.
+
+    Three row kinds:
+
+    * ``kind="parity"`` — the oracle-parity contract: with
+      ``pool_size >= n_clients`` the tier-1 pool is the identity filter,
+      so the pooled engine must replay the plain engine BIT-IDENTICALLY
+      (selections AND accuracy) for all four selectors × both param
+      layouts × sync and buffered aggregation.  ``parity_match`` is a
+      **hard CI gate** — 16 rows, all must pass.
+    * ``kind="subset"`` — with a small pool the selected cohort stays
+      inside the recorded tier-1 pool every round (gpfl/random/fedcor;
+      powd's population-wide candidate draw falls back by design) and a
+      same-config rerun reproduces pools + selections bit-identically.
+    * ``kind="scale"`` — the reason the tier exists: streamed pooled
+      runs at K ∈ {10³, 10⁴, 10⁵} clients (pool 10³) where client
+      tables stay HOST-resident and only the double-buffered candidate
+      slabs ever reach the device.  ``device_table_bytes`` (analytic:
+      2 × pool rows — the two in-flight slabs) vs ``full_table_bytes``
+      (what the non-streamed engine would device_put) documents the
+      bounded-memory claim; rounds/sec is recorded for the throughput
+      trajectory.  ``--quick`` drops the 10⁵ row (CI smoke); the
+      committed ``BENCH_preselect.json`` carries the full set.
+    """
+    import dataclasses
+    from repro.configs.paper import SELECTORS, femnist_experiment
+    from repro.fl.engine import ScanEngine
+    from repro.fl.latency import AggregationConfig
+    from repro.fl.preselect import PreselectConfig
+    from repro.fl.simulation import _build_data
+
+    rows = []
+
+    # ---- oracle parity at pool >= N (hard gate, 16 rows) ----
+    p_rounds = 8 if quick else 16
+    p_base = dataclasses.replace(
+        femnist_experiment("2spc", "gpfl"), rounds=p_rounds, n_clients=32,
+        clients_per_round=4, samples_per_client_mean=40,
+        samples_per_client_std=10, local_iters=3, local_batch_size=16,
+        eval_size=256)
+    data = _build_data(p_base, p_base.seed)
+    covering = PreselectConfig(pool_size=64)      # >= N ⇒ identity filter
+    buf = AggregationConfig(kind="buffered", buffer_size=2,
+                            staleness_discount=0.5)
+    for layout in ("tree", "flat"):
+        for sel in SELECTORS:
+            exp = dataclasses.replace(p_base, selector=sel,
+                                      name=f"preselect-parity-{sel}")
+            for agg_name, agg_kw in (("sync", {}),
+                                     ("buffered",
+                                      dict(scenario="stragglers",
+                                           aggregation=buf))):
+                plain = ScanEngine(exp, param_layout=layout, data=data,
+                                   **agg_kw).run()
+                pooled = ScanEngine(exp, param_layout=layout, data=data,
+                                    pre_selection=covering, **agg_kw).run()
+                rows.append({
+                    "name": f"preselect_parity_{agg_name}_{layout}_{sel}",
+                    "kind": "parity", "selector": sel,
+                    "param_layout": layout, "aggregation": agg_name,
+                    "rounds": p_rounds, "pool_size": 64,
+                    "parity_match": bool(
+                        np.array_equal(plain.selections, pooled.selections)
+                        and np.array_equal(plain.accuracy,
+                                           pooled.accuracy)),
+                })
+
+    # ---- small-pool subset + determinism ----
+    small = PreselectConfig(pool_size=8)
+    for sel in ("gpfl", "random", "fedcor"):
+        exp = dataclasses.replace(p_base, selector=sel,
+                                  name=f"preselect-subset-{sel}")
+        res = ScanEngine(exp, data=data, pre_selection=small).run()
+        again = ScanEngine(exp, data=data, pre_selection=small).run()
+        subset_ok = all(
+            set(res.selections[t]) <= set(res.pools[t])
+            for t in range(exp.rounds))
+        rows.append({
+            "name": f"preselect_subset_{sel}", "kind": "subset",
+            "selector": sel, "rounds": p_rounds, "pool_size": 8,
+            "subset_ok": bool(subset_ok),
+            "deterministic": bool(
+                np.array_equal(res.pools, again.pools)
+                and np.array_equal(res.selections, again.selections)),
+        })
+
+    # ---- large-K streamed scaling (bounded device memory) ----
+    pool = 1_000
+    scale_ns = (1_000, 10_000) if quick else (1_000, 10_000, 100_000)
+    s_rounds = 3
+    for n in scale_ns:
+        exp = dataclasses.replace(
+            femnist_experiment("2spc", "random"), rounds=s_rounds,
+            n_clients=n, clients_per_round=8, samples_per_client_mean=2,
+            samples_per_client_std=0, local_iters=1, local_batch_size=8,
+            eval_size=64, name=f"preselect-scale-{n}")
+        sdata = _build_data(exp, exp.seed, host_tables=True)
+        store = sdata[0]
+        pre = PreselectConfig(pool_size=pool, streamed=True)
+        t0 = time.perf_counter()
+        res = ScanEngine(exp, data=sdata, pre_selection=pre).run()
+        wall = time.perf_counter() - t0
+        # one client row in the streamed candidate slab: features +
+        # labels + size (what _fetch device_puts per pool member)
+        cap = int(store.capacity)
+        feat = int(np.prod(store.x.shape[2:]))
+        row_bytes = (cap * feat * store.x.dtype.itemsize
+                     + cap * store.y.dtype.itemsize
+                     + store.sizes.dtype.itemsize)
+        p_eff = min(pool, n)
+        subset_ok = all(
+            set(res.selections[t]) <= set(res.pools[t])
+            for t in range(s_rounds))
+        rows.append({
+            "name": f"preselect_scale_{n}", "kind": "scale",
+            "selector": "random", "n_clients": n, "pool_size": p_eff,
+            "rounds": s_rounds, "streamed": True,
+            "wall_s": wall, "rounds_per_s": s_rounds / wall,
+            # double-buffered: at most two pool slabs in flight on device
+            "device_table_bytes": 2 * p_eff * row_bytes,
+            "full_table_bytes": n * row_bytes,
+            "device_bytes_over_full": 2 * p_eff / n,
+            "subset_ok": bool(subset_ok),
+            "all_finite": bool(np.isfinite(res.accuracy).all()),
+        })
+        del sdata, store, res
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -835,7 +969,8 @@ def main(argv=None) -> None:
                     help="paper-scale rounds (hours)")
     ap.add_argument("--only", default=None,
                     help="comma-list: table2,fig4,fig5,fig6,fig7,kernels,"
-                         "engine,flat,selectors,sweep,resume,async,robust")
+                         "engine,flat,selectors,sweep,resume,async,robust,"
+                         "preselect")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write engine/flat/kernel results as JSON "
                          "(e.g. BENCH_engine.json, BENCH_flat.json)")
@@ -846,7 +981,8 @@ def main(argv=None) -> None:
     rounds = 12 if args.quick else 60
     only = set(args.only.split(",")) if args.only else \
         {"table2", "fig4", "fig5", "fig6", "fig7", "kernels", "engine",
-         "flat", "selectors", "sweep", "resume", "async", "robust"}
+         "flat", "selectors", "sweep", "resume", "async", "robust",
+         "preselect"}
     bench_data = {}
 
     print("name,us_per_call,derived")
@@ -982,6 +1118,28 @@ def main(argv=None) -> None:
                       f"share_open={r['adversary_share_open']:.3f};"
                       f"share_quarantined="
                       f"{r['adversary_share_quarantined']:.3f}",
+                      flush=True)
+
+    if "preselect" in only:
+        pre_rows = _preselect_micro(quick=args.quick)
+        bench_data["preselect"] = pre_rows
+        for r in pre_rows:
+            if r["kind"] == "parity":
+                print(f"{r['name']},0,"
+                      f"parity_match={int(r['parity_match'])}",
+                      flush=True)
+            elif r["kind"] == "subset":
+                print(f"{r['name']},0,"
+                      f"subset_ok={int(r['subset_ok'])};"
+                      f"deterministic={int(r['deterministic'])}",
+                      flush=True)
+            else:
+                print(f"{r['name']},"
+                      f"{r['wall_s'] / r['rounds'] * 1e6:.0f},"
+                      f"rps={r['rounds_per_s']:.2f};"
+                      f"dev_bytes={r['device_table_bytes']};"
+                      f"full_bytes={r['full_table_bytes']};"
+                      f"subset_ok={int(r['subset_ok'])}",
                       flush=True)
 
     if "kernels" in only:

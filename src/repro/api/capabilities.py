@@ -39,6 +39,9 @@ FAULT_MODES = ("none", "nan", "noise", "signflip", "dropout")
 #: robust server aggregators (see ``repro.fl.robust.RobustConfig``).
 AGGREGATORS = ("mean", "trimmed_mean", "median", "norm_clip")
 
+#: tiered pre-selection kinds (see ``repro.fl.preselect.PreselectConfig``).
+PRESELECT_KINDS = ("none", "pooled")
+
 
 @dataclasses.dataclass(frozen=True)
 class Capability:
@@ -95,6 +98,15 @@ class SpecView:
             legacy FedAvg path).
         quarantine: the robust layer's ``quarantine_after`` strike
             threshold (0 disables selection quarantine).
+        preselect_kind: resolved tiered pre-selection kind (``"none"``
+            scores the full population every round; ``"pooled"`` runs a
+            cheap tier-1 pass narrowing N clients to a candidate pool
+            before the exact tier-2 selector).
+        preselect_pool: the tier-1 candidate-pool size P (clamped to N
+            at engine time; must cover the cohort, P >= K).
+        preselect_streamed: large-population mode — client tables stay
+            host-resident and only each round's pool streams to device
+            (double-buffered one round ahead).
     """
     backend: str
     selector: str
@@ -110,6 +122,9 @@ class SpecView:
     fault_mode: str = "none"
     aggregator: str = "mean"
     quarantine: int = 0
+    preselect_kind: str = "none"
+    preselect_pool: int = 0
+    preselect_streamed: bool = False
 
 
 def _shard_constraint(v: SpecView) -> Optional[str]:
@@ -180,6 +195,53 @@ def _robust_path_constraint(v: SpecView) -> Optional[str]:
     return None
 
 
+def _preselect_constraint(v: SpecView) -> Optional[str]:
+    """Structural rules for tiered pre-selection (``kind="pooled"``).
+
+    The tier-1 pool must cover the cohort, cells never seed-batch (the
+    pool stream is per-cell carried state), and the ``"availability"``
+    scenario is excluded: its host-RNG selection streams (random ids /
+    FedCor warm-up draws) are precomputed against the availability
+    masks, which the in-scan pool cannot be folded into without
+    breaking stream-replay parity.  The ``streamed`` large-population
+    mode additionally pins the configuration to the host-paced runner's
+    supported slice (sync, tree, unsharded, no snapshots, gpfl/random).
+    """
+    if v.preselect_pool < v.clients_per_round:
+        return (f"pre_selection='pooled' needs pool_size >= "
+                f"clients_per_round (the tier-2 cohort is drawn from the "
+                f"pool); got pool_size={v.preselect_pool} < "
+                f"K={v.clients_per_round}")
+    if v.scenario_kind == "availability":
+        return ("pre_selection='pooled' cannot combine with "
+                "scenario='availability': the availability-masked host "
+                "selection streams cannot see the in-scan tier-1 pool")
+    if v.batch_seeds > 1:
+        return (f"pre_selection='pooled' cannot combine with a batched "
+                f"multi-seed dispatch (batch_seeds={v.batch_seeds}); a "
+                f"Session runs pooled cells sequentially")
+    if v.preselect_streamed:
+        if v.selector not in ("gpfl", "random"):
+            return (f"pre_selection streamed=True supports selector "
+                    f"'gpfl' or 'random' (the host-paced runner has no "
+                    f"powd/fedcor twin); got {v.selector!r}")
+        if v.aggregation_kind != "sync":
+            return ("pre_selection streamed=True requires "
+                    "aggregation='sync' (the host-paced runner has no "
+                    "event scan)")
+        if v.param_layout != "tree":
+            return ("pre_selection streamed=True requires "
+                    "param_layout='tree'")
+        if v.shard_clients > 1:
+            return (f"pre_selection streamed=True cannot combine with "
+                    f"shard_clients={v.shard_clients}")
+        if v.snapshot_every > 0:
+            return (f"pre_selection streamed=True cannot combine with "
+                    f"snapshot_every={v.snapshot_every}: the host-paced "
+                    f"runner has no scan carry to snapshot")
+    return None
+
+
 #: The registry.  Order is presentation order in :func:`support_matrix`.
 CAPABILITIES: Tuple[Capability, ...] = (
     Capability("selector", "random",
@@ -241,6 +303,12 @@ CAPABILITIES: Tuple[Capability, ...] = (
     Capability("quarantine_after", "> 0",
                {"scan": "yes (strike-count selection mask)"},
                constraint=_robust_path_constraint),
+    Capability("pre_selection", "'none'",
+               {"python": "yes", "scan": "yes"}),
+    Capability("pre_selection", "'pooled'",
+               {"scan": "yes (tier-1 pool pass; pool >= K, no "
+                        "availability)"},
+               constraint=_preselect_constraint),
 )
 
 # the per-selector rows ARE the selector registry — a row added or
@@ -258,6 +326,10 @@ assert tuple(c.value.strip("'") for c in CAPABILITIES
              if c.dim == "faults") == FAULT_MODES
 assert tuple(c.value.strip("'") for c in CAPABILITIES
              if c.dim == "aggregator") == AGGREGATORS
+
+# ... and for the tiered pre-selection axis
+assert tuple(c.value.strip("'") for c in CAPABILITIES
+             if c.dim == "pre_selection") == PRESELECT_KINDS
 
 
 def support_matrix() -> str:
@@ -425,3 +497,17 @@ def validate(view: SpecView) -> None:
         err = row.constraint(view) if row.constraint else None
         if err:
             fail(err + ".")
+
+    pre_rows = _rows_for("pre_selection")
+    if view.preselect_kind not in pre_rows:
+        fail(f"unknown pre_selection {view.preselect_kind!r}; expected "
+             f"one of {PRESELECT_KINDS} or a "
+             f"repro.fl.preselect.PreselectConfig.")
+    pre_row = pre_rows[view.preselect_kind]
+    if view.backend not in pre_row.backends:
+        fail(f"pre_selection={view.preselect_kind!r} requires "
+             f"backend='scan' (the tier-1 pool pass runs inside the "
+             f"compiled round body).")
+    err = pre_row.constraint(view) if pre_row.constraint else None
+    if err:
+        fail(err + ".")

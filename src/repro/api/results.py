@@ -52,6 +52,10 @@ def run_to_record(run) -> dict:
     # (schema version 1 unchanged)
     if getattr(run, "sim_time_s", None) is not None:
         rec["sim_time_s"] = np.asarray(run.sim_time_s).tolist()
+    # pooled pre-selection runs carry the (T, P) tier-1 pool history;
+    # non-pooled runs omit the key (same byte-compatibility contract)
+    if getattr(run, "pools", None) is not None:
+        rec["pools"] = np.asarray(run.pools).tolist()
     return rec
 
 
@@ -70,6 +74,8 @@ def run_from_record(rec: dict):
         coverage=np.asarray(rec["coverage"], np.float32),
         sim_time_s=None if rec.get("sim_time_s") is None
         else np.asarray(rec["sim_time_s"], np.float32),
+        pools=None if rec.get("pools") is None
+        else np.asarray(rec["pools"], np.int32),
     )
 
 

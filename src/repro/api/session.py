@@ -129,20 +129,27 @@ class Session:
         """Can this group collapse into one vmapped multi-seed dispatch?
         Buffered-aggregation cells never batch (the event-scan is not
         seed-vmappable) — they run sequentially, like snapshotting
-        cells and robustness cells (fault injection / robust
-        aggregation / quarantine)."""
+        cells, robustness cells (fault injection / robust aggregation /
+        quarantine) and pooled pre-selection cells (the tier-1 pool
+        stream is per-cell carried state)."""
         return (self.spec.backend == "scan" and self.spec.batch_seeds
                 and self.spec.shard_clients == 1
                 and self.spec.aggregation_kind == "sync"
                 and self.spec.snapshot_every == 0
+                and self.spec.preselect_kind == "none"
                 and not self.spec.robust_active and len(idxs) > 1)
 
     def _data_for(self, exp):
-        """Build (or reuse) the cell's dataset; cached by data key."""
+        """Build (or reuse) the cell's dataset; cached by data key.
+        Streamed pre-selection cells get HOST-resident tables — the
+        whole point of streaming is never materialising the full
+        population table on device."""
         from repro.fl.simulation import _build_data
         key = _data_key(exp)
         if key not in self._data_cache:
-            self._data_cache[key] = _build_data(exp, exp.seed)
+            self._data_cache[key] = _build_data(
+                exp, exp.seed,
+                host_tables=bool(self.spec.pre_selection.streamed))
         return self._data_cache[key]
 
     def _snapshot_path(self, cell) -> str:

@@ -68,6 +68,13 @@ class ExecutionSpec:
             Coerced into a ``RobustConfig`` at construction; anything
             but the plain-mean default routes the engine through the
             screened robust path.
+        pre_selection: tiered pre-selection — ``None`` (off, every
+            selector scores all N clients), ``"pooled"`` or a full
+            ``repro.fl.preselect.PreselectConfig`` pinning the tier-1
+            ``pool_size`` / ``seed`` / ``streamed`` knobs.  Coerced into
+            a ``PreselectConfig`` at construction; pooled cells never
+            seed-batch and at ``pool_size >= N`` run bit-identical to
+            the full-population engine.
     """
     backend: str = "python"
     param_layout: str = "tree"
@@ -81,6 +88,7 @@ class ExecutionSpec:
     resume: bool = False
     faults: Any = None
     aggregator: Any = "mean"
+    pre_selection: Any = None
 
     def __post_init__(self):
         """Coerce scenario/aggregation/faults/aggregator shorthands into
@@ -92,6 +100,7 @@ class ExecutionSpec:
         # jax) into this leaf-adjacent layer
         from repro.fl.faults import make_faults
         from repro.fl.latency import make_aggregation, make_scenario
+        from repro.fl.preselect import make_preselect
         from repro.fl.robust import make_robust
         object.__setattr__(self, "scenario", make_scenario(self.scenario))
         object.__setattr__(self, "aggregation",
@@ -99,6 +108,8 @@ class ExecutionSpec:
         object.__setattr__(self, "faults", make_faults(self.faults))
         object.__setattr__(self, "aggregator",
                            make_robust(self.aggregator))
+        object.__setattr__(self, "pre_selection",
+                           make_preselect(self.pre_selection))
 
     @property
     def scenario_kind(self) -> str:
@@ -122,6 +133,11 @@ class ExecutionSpec:
     def aggregator_kind(self) -> str:
         """The resolved robust-aggregator name string."""
         return self.aggregator.aggregator
+
+    @property
+    def preselect_kind(self) -> str:
+        """The resolved tiered pre-selection kind (``"none"`` = off)."""
+        return self.pre_selection.kind
 
     @property
     def robust_active(self) -> bool:
@@ -155,7 +171,10 @@ class ExecutionSpec:
             resume=self.resume,
             fault_mode=self.fault_mode,
             aggregator=self.aggregator_kind,
-            quarantine=int(self.aggregator.quarantine_after))
+            quarantine=int(self.aggregator.quarantine_after),
+            preselect_kind=self.preselect_kind,
+            preselect_pool=int(self.pre_selection.pool_size),
+            preselect_streamed=bool(self.pre_selection.streamed))
 
     def validate(self, exp, n_seeds: int = 1) -> None:
         """Fail fast (before anything compiles) on unsupported combos.
@@ -180,7 +199,8 @@ class ExecutionSpec:
                     aggregation=self.aggregation,
                     shard_clients=self.shard_clients,
                     use_gp_kernel=self.use_gp_kernel,
-                    faults=self.faults, aggregator=self.aggregator)
+                    faults=self.faults, aggregator=self.aggregator,
+                    pre_selection=self.pre_selection)
 
 
 def spec_from_kwargs(backend: str = "python", param_layout: str = "tree",

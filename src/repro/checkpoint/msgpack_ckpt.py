@@ -85,6 +85,19 @@ def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
     return path
 
 
+def peek_meta(path: str):
+    """Read a checkpoint's ``(step, meta)`` WITHOUT rebuilding arrays.
+
+    Lets a resume validate its config fingerprint before attempting the
+    structural restore — a mismatched run then fails with the clear
+    fingerprint error rather than a tree-structure mismatch (e.g. a
+    pooled pre-selection engine reading a plain engine's snapshot)."""
+    with open(path, "rb") as f:
+        blob = _decompress(f.read())
+    obj = msgpack.unpackb(blob)
+    return obj.get("step"), obj.get("meta")
+
+
 def restore_checkpoint(path: str, like, *, shardings=None,
                        return_meta: bool = False):
     """Restore into the structure of ``like``.  When ``shardings`` (a matching

@@ -124,6 +124,87 @@ def selection_scores(state: BanditState, latest_gp, jitter, t,
     return scores
 
 
+#: tier-1 pool bonus for never-selected arms (replaces their +inf UCB —
+#: exploration pressure without the infinity swallowing every other term).
+POOL_EXPLORE_BONUS = 1.0
+
+#: tier-1 weight on normalised selection recency ((t − last_sel)/T).
+POOL_STALENESS_WEIGHT = 0.5
+
+
+def pool_scores(u, gp_term, last_sel, t, total_rounds: int, jitter,
+                avail=None):
+    """Tier-1 pre-selection scores: cheap, per-client, pool-rankable.
+
+    The paper's pre-selection narrows the population before the exact
+    (expensive) selector runs; this is our heuristic for it — pure
+    elementwise arithmetic over (N,) vectors (the only global reduction,
+    the Eq. 5 softmax inside ``gp_term``, is computed by the CALLER so
+    the rest shards trivially over a ``("clients",)`` mesh):
+
+    * exploitation — the finite GPCB value (Eq. 6) of arms selected
+      before;
+    * exploration — never-selected arms (``u == +inf``) trade their
+      infinite UCB for a flat :data:`POOL_EXPLORE_BONUS`;
+    * recency — :data:`POOL_STALENESS_WEIGHT` × normalised rounds since
+      last selection (``last_sel = -1`` for never-selected arms);
+    * calibrated GP — ``gp_term``, the caller-supplied
+      ``normalize_gp(latest_gp)``;
+    * determinism — ``jitter`` (a seeded host stream) × 1e-6 breaks
+      ties reproducibly.
+
+    Args:
+        u: (N,) GPCB values from :func:`gpcb_values` (+inf = never
+            selected).
+        gp_term: (N,) ``normalize_gp(latest_gp)`` — computed outside so
+            sharded callers keep this function reduction-free.
+        last_sel: (N,) float round each client was last selected
+            (−1 = never).
+        t: current round (traced scalar is fine).
+        total_rounds: horizon T (normalises the recency term).
+        jitter: (N,) seeded tie-break draw in [0, 1).
+        avail: optional (N,) bool mask; excluded clients score −inf and
+            only enter the pool when fewer than ``pool_size`` clients
+            remain.
+
+    Returns:
+        (N,) float32 scores; the pool is their top-``pool_size``
+        (see :func:`pool_topk`).
+    """
+    u = jnp.asarray(u, jnp.float32)
+    never = jnp.isinf(u)
+    exploit = jnp.where(never, 0.0, u)
+    staleness = (jnp.asarray(t, jnp.float32) - last_sel) \
+        / jnp.maximum(1.0, float(total_rounds))
+    scores = (exploit + POOL_EXPLORE_BONUS * never.astype(jnp.float32)
+              + POOL_STALENESS_WEIGHT * staleness
+              + jnp.asarray(gp_term, jnp.float32)
+              + jnp.asarray(jitter, jnp.float32) * 1e-6)
+    if avail is not None:
+        scores = jnp.where(avail, scores, -jnp.inf)
+    return scores
+
+
+def pool_topk(scores, pool_size: int):
+    """The tier-1 candidate pool: top-``pool_size`` score ids, ASCENDING.
+
+    Sorting the ids makes the pool order canonical: at
+    ``pool_size == N`` the pool is exactly ``arange(N)`` regardless of
+    the scores, which is what makes pool-restricted tier-2 selection
+    bit-identical to the full-population engine (the oracle-parity
+    contract of ``tests/test_preselect.py``).
+
+    Args:
+        scores: (N,) tier-1 scores from :func:`pool_scores`.
+        pool_size: pool size P (static, <= N).
+
+    Returns:
+        (P,) int32 client ids, sorted ascending.
+    """
+    _, idx = jax.lax.top_k(scores, pool_size)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
 def observe(state: BanditState, latest_gp, selected_ids, gp_scores, acc,
             loss, valid_mask=None):
     """Pure-jnp mirror of ``GPFLSelector.observe``: fold one round's

@@ -120,6 +120,53 @@ def random_id_stream(rng: np.random.Generator, rounds: int, n_clients: int,
     return _choice_stream(rng, rounds, n_clients, k, avail=avail)
 
 
+def pool_rank_stream(rng: np.random.Generator, rounds: int, pool_size: int,
+                     k: int, upto=None) -> np.ndarray:
+    """Precompute per-round RANK draws into a tier-1 candidate pool.
+
+    Pooled runs replace the Random/FedCor-warm-up id streams with rank
+    streams: row t holds K distinct positions in [0, P) and the scan maps
+    them through the round's pool ids (``ids = pool[ranks]``) — the pool
+    itself is in-scan carried state the host cannot see.  Because
+    :func:`repro.core.gpcb.pool_topk` returns the FULL ascending id range
+    at ``P == N``, this stream consumes ``rng`` exactly as
+    :func:`random_id_stream` / :func:`fedcor_warmup_stream` (availability
+    unmasked) do at that size — the oracle-parity contract.
+
+    Args:
+        rng: host RNG — seeded like the host loop's.
+        rounds: number of FL rounds T.
+        pool_size: tier-1 pool size P (already clamped to N).
+        k: cohort size K.
+        upto: draw only rounds ``t < upto`` (FedCor warm-up); later rows
+            stay zero.
+
+    Returns:
+        (T, K) int64 rank matrix, values in [0, pool_size).
+    """
+    return _choice_stream(rng, rounds, pool_size, k, upto=upto)
+
+
+def pool_jitter_stream(rng: np.random.Generator, rounds: int,
+                       n_clients: int) -> np.ndarray:
+    """Seeded tier-1 tie-break draws: one ``rng.random(n)`` row per round.
+
+    Seeded from its own tuple stream ``(exp.seed, pre.seed, 4)`` —
+    mirroring the availability/latency/fault streams — so pooled runs
+    never perturb the legacy host-RNG consumption order and pool
+    membership is reproducible from the config alone.
+
+    Args:
+        rng: the dedicated pool-stream RNG.
+        rounds: number of FL rounds T (or events + 1 when buffered).
+        n_clients: number of clients N.
+
+    Returns:
+        (T, N) float64 jitter matrix in [0, 1).
+    """
+    return rng.random((rounds, n_clients))
+
+
 class GPFLSelector:
     """The paper's method: GP rewards + GPCB bandit (Algorithm 1)."""
 

@@ -5,11 +5,18 @@ loops — the FL round is a single compiled computation).
 Clients are padded to the max client size; per-client ``sizes`` drive
 replacement-sampling of local batches, so padding never leaks into training.
 
-The store is a **device-resident fixed-shape table**: ``x``/``y``/``sizes``
-live on device, every client row has the same shape, and ``gather`` accepts
-traced index arrays — so a cohort gather is legal inside ``jit`` and inside
-a ``lax.scan`` body (the compiled round engine closes over ``tables()`` and
-gathers by the round's selected ids entirely on device).
+The store is a **device-resident fixed-shape table** by default:
+``x``/``y``/``sizes`` live on device, every client row has the same shape,
+and ``gather`` accepts traced index arrays — so a cohort gather is legal
+inside ``jit`` and inside a ``lax.scan`` body (the compiled round engine
+closes over ``tables()`` and gathers by the round's selected ids entirely
+on device).
+
+``host_tables=True`` keeps the tables as HOST numpy arrays instead — the
+large-population mode of tiered pre-selection
+(``repro.fl.preselect.run_pooled_stream``) gathers only each round's
+candidate pool and streams those rows to device, so populations far
+beyond device memory stay addressable.
 """
 from __future__ import annotations
 
@@ -23,9 +30,11 @@ from repro.data.synthetic import Dataset
 
 
 class ClientStore:
-    def __init__(self, data: Dataset, client_indices: Sequence[np.ndarray]):
+    def __init__(self, data: Dataset, client_indices: Sequence[np.ndarray],
+                 host_tables: bool = False):
         self.n_clients = len(client_indices)
         self.num_classes = data.num_classes
+        self.host_tables = bool(host_tables)
         sizes = np.array([len(ix) for ix in client_indices], np.int32)
         cap = int(sizes.max())
         feat_shape = data.x.shape[1:]
@@ -38,9 +47,12 @@ class ClientStore:
                 reps = ix[np.arange(cap - len(ix)) % len(ix)]
                 x[c, len(ix):] = data.x[reps]
                 y[c, len(ix):] = data.y[reps]
-        self.x = jnp.asarray(x)
-        self.y = jnp.asarray(y)
-        self.sizes = jnp.asarray(sizes)
+        if self.host_tables:
+            self.x, self.y, self.sizes = x, y, sizes
+        else:
+            self.x = jnp.asarray(x)
+            self.y = jnp.asarray(y)
+            self.sizes = jnp.asarray(sizes)
         self.capacity = cap
 
     def client_label_histogram(self) -> np.ndarray:
@@ -53,11 +65,14 @@ class ClientStore:
         return out
 
     def tables(self):
-        """The device-resident fixed-shape tables ``(x, y, sizes)``.
+        """The fixed-shape tables ``(x, y, sizes)``.
 
-        Close over these inside a jitted/scanned computation and index with
-        ``gather_tables`` — they are ordinary device arrays, so XLA keeps
-        them resident instead of re-transferring per round."""
+        In the default device-resident mode, close over these inside a
+        jitted/scanned computation and index with ``gather_tables`` —
+        they are ordinary device arrays, so XLA keeps them resident
+        instead of re-transferring per round.  In ``host_tables`` mode
+        these are numpy arrays (index subsets on host; never feed the
+        full table to a jitted computation)."""
         return self.x, self.y, self.sizes
 
     @staticmethod
@@ -69,5 +84,12 @@ class ClientStore:
                 jnp.take(sizes, ids, axis=0))
 
     def gather(self, client_ids):
-        """Select a cohort: returns (x, y, sizes) with leading cohort dim."""
+        """Select a cohort: returns (x, y, sizes) with leading cohort dim.
+
+        Host-table stores gather on host (numpy fancy indexing) so only
+        the cohort's rows — never the full population table — reach a
+        downstream jitted computation."""
+        if self.host_tables:
+            ids = np.asarray(client_ids)
+            return self.x[ids], self.y[ids], self.sizes[ids]
         return self.gather_tables(self.x, self.y, self.sizes, client_ids)

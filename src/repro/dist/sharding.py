@@ -79,6 +79,40 @@ def cohort_axis_rules(clients_per_round: int, n_shards: int) -> dict:
     return {"clients": "clients"}
 
 
+def population_axis_rules(n_clients: int, n_shards: int) -> dict:
+    """Logical-axis → mesh-axis rules for PER-CLIENT population state.
+
+    The tiered pre-selection pass (``repro.fl.engine``, pooled runs)
+    scores all N clients with cheap elementwise arithmetic; on a
+    multi-device ``("clients",)`` mesh the N axis of the GPCB / recency
+    vectors shards client-parallel, and an order-preserving tiled
+    all-gather reassembles the (N,) score vector for the global top-P
+    pool cut.  Same dict convention as :func:`cohort_axis_rules` so the
+    engine reuses :func:`cohort_specs` for the PartitionSpecs.
+
+    Args:
+        n_clients: population size N.
+        n_shards: devices on the ``clients`` mesh axis (1 → no mesh).
+
+    Returns:
+        ``{"clients": "clients" | None}``.
+
+    Raises:
+        ValueError: N does not divide evenly over the shards — an uneven
+            population shard would give devices different (N/shards,)
+            block shapes inside the scanned round body.
+    """
+    if n_shards <= 1:
+        return {"clients": None}
+    if n_clients % n_shards:
+        raise ValueError(
+            f"n_clients={n_clients} does not divide across {n_shards} "
+            f"client shards; the tier-1 pre-selection pass shards the "
+            "(N,) bandit state block-even (pick N a multiple of the "
+            "clients mesh axis or shard_clients=1)")
+    return {"clients": "clients"}
+
+
 def cohort_specs(rules: dict):
     """PartitionSpecs for the cohort rules: ``(cohort_spec, replicated)``.
 

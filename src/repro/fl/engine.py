@@ -157,7 +157,7 @@ import jax.numpy as jnp
 
 from repro.api.capabilities import PARAM_LAYOUTS, SELECTORS, SpecView
 from repro.api.capabilities import validate as validate_capabilities
-from repro.checkpoint.msgpack_ckpt import (restore_checkpoint,
+from repro.checkpoint.msgpack_ckpt import (peek_meta, restore_checkpoint,
                                            save_checkpoint)
 from repro.configs.paper import FLExperimentConfig
 from repro.core import flat as flat_mod
@@ -165,16 +165,20 @@ from repro.core import gp as gp_mod
 from repro.core import gpcb
 from repro.core.selector import (fedcor_cov_update, fedcor_greedy,
                                  fedcor_warmup_stream, gpfl_jitter_stream,
+                                 pool_jitter_stream, pool_rank_stream,
                                  powd_candidate_stream, powd_default_d,
                                  random_id_stream)
 from repro.data import ClientStore
-from repro.dist.sharding import cohort_axis_rules, cohort_specs
+from repro.dist.sharding import (cohort_axis_rules, cohort_specs,
+                                 population_axis_rules)
 from repro.fl.client import make_cohort_loss_eval, make_cohort_trainer
 from repro.fl.faults import (FaultConfig, corrupt_cohort, fault_stream,
                              make_faults)
 from repro.fl.latency import (AggregationConfig, ScenarioConfig,
                               availability_stream, completion_time_stream,
                               make_aggregation, make_scenario)
+from repro.fl.preselect import (PreselectConfig, compose_selection_mask,
+                                make_preselect, run_pooled_stream)
 from repro.fl.robust import (RobustConfig, finite_rows, make_robust,
                              robust_aggregate)
 from repro.fl.server import (fedavg, make_table_evaluator, server_update_flat,
@@ -227,6 +231,9 @@ class RoundCarry(NamedTuple):
     #: (N,) i32 per-client corruption strike counts, driving the
     #: ``quarantine_after`` selection mask ((1,) stub when quarantine off)
     strikes: jnp.ndarray
+    #: (N,) f32 round each client was last selected (−1 = never), feeding
+    #: the tier-1 pool recency term ((1,) stub when pre-selection is off)
+    last_sel: jnp.ndarray
 
 
 def _copy_carry(c: RoundCarry) -> RoundCarry:
@@ -270,7 +277,8 @@ def _sync_pool_stubs() -> dict:
                 pool_ver=jnp.zeros((1,), jnp.int32),
                 clock=jnp.zeros((), jnp.float32),
                 pool_ok=jnp.zeros((1,), bool),
-                strikes=jnp.zeros((1,), jnp.int32))
+                strikes=jnp.zeros((1,), jnp.int32),
+                last_sel=jnp.zeros((1,), jnp.float32))
 
 
 def _resolve_gp_impl(gp_impl: str, use_gp_kernel: bool) -> str:
@@ -333,6 +341,17 @@ class ScanEngine:
             aggregation AND out of GPFL's bandit feedback, and
             ``quarantine_after > 0`` masks repeat offenders out of
             in-scan selection through the availability plumbing.
+        pre_selection: tiered pre-selection — ``None`` (off), ``"pooled"``
+            or a ``repro.fl.preselect.PreselectConfig``.  Pooled runs a
+            cheap tier-1 pass (``repro.core.gpcb.pool_scores``) inside
+            every scan step, narrowing N clients to a ``pool_size`` pool
+            the exact tier-2 selector is then restricted to; at
+            ``pool_size >= N`` the pool is ``arange(N)`` and the run is
+            bit-identical to the full-population engine.  With
+            ``streamed=True`` the client tables stay host-resident and
+            ``run()`` dispatches the double-buffered host-paced loop
+            (``repro.fl.preselect.run_pooled_stream``) instead of the
+            scan — peak device memory bounded by the pool, not N.
     """
 
     def __init__(self, exp: FLExperimentConfig, *,
@@ -346,7 +365,8 @@ class ScanEngine:
                  snapshot_every: int = 0,
                  snapshot_path: Optional[str] = None,
                  faults: Union[str, FaultConfig, None] = None,
-                 aggregator: Union[str, RobustConfig, None] = "mean"):
+                 aggregator: Union[str, RobustConfig, None] = "mean",
+                 pre_selection: Union[str, PreselectConfig, None] = None):
         """Validate the combination against the capability registry, build
         data/trainer/streams (see the class docstring for every knob;
         ``data`` optionally injects a prebuilt ``(store, eval_x, eval_y)``
@@ -369,6 +389,12 @@ class ScanEngine:
         self.robust_active = (self.has_faults
                               or self.robust.aggregator != "mean"
                               or self.robust.quarantine_after > 0)
+        # the pre-selection axis: ``pooled`` gates every tier-1 branch in
+        # the scan bodies the same way ``robust_active`` gates the robust
+        # path — with it False the engine traces bit-identically to an
+        # engine built before this layer existed
+        self.pre = make_preselect(pre_selection)
+        self.pooled = self.pre.kind == "pooled"
         validate_capabilities(SpecView(
             backend="scan", selector=exp.selector, param_layout=param_layout,
             scenario_kind=getattr(scenario, "kind", scenario or "full"),
@@ -377,7 +403,10 @@ class ScanEngine:
             clients_per_round=exp.clients_per_round,
             snapshot_every=int(snapshot_every),
             fault_mode=self.faults.mode, aggregator=self.robust.aggregator,
-            quarantine=int(self.robust.quarantine_after)))
+            quarantine=int(self.robust.quarantine_after),
+            preselect_kind=self.pre.kind,
+            preselect_pool=int(self.pre.pool_size),
+            preselect_streamed=bool(self.pre.streamed)))
         # buffered: buffer size M (updates per aggregation event) and the
         # event count E — at M = K every event is a full sync round
         self.buffer_m = self.aggregation.resolved_buffer(
@@ -407,8 +436,31 @@ class ScanEngine:
         self.param_layout = param_layout
         self.use_ee = use_ee
         self.log_every = log_every
+        self.streamed = self.pooled and self.pre.streamed
+        if self.streamed:
+            # large-population mode: the tables stay HOST-resident and
+            # ``run()`` dispatches ``run_pooled_stream`` — none of the
+            # device-table machinery below is built (materialising the
+            # full (N, cap) tables on device is exactly what streaming
+            # avoids).  Keep an injected dataset only if its store is
+            # actually host-resident.
+            self._stream_data = data if (data is not None and getattr(
+                data[0], "host_tables", False)) else None
+            self._defer_init = bool(defer_init)
+            self._jit = {}
+            return
         self.store, self.eval_x, self.eval_y = data if data is not None \
             else _build_data(exp, exp.seed)
+        # the tier-1 pool size, clamped to the population (the registry
+        # already guarantees pool_size >= K)
+        self.pool_size = min(int(self.pre.pool_size),
+                             self.store.n_clients) if self.pooled else 0
+        if self.pooled and self.shard_clients > 1:
+            # tier-1 scores elementwise over the population, so it shards
+            # over the SAME ("clients",) mesh as the cohort step; fails
+            # fast here when N does not divide evenly
+            self._pop_rules = population_axis_rules(
+                self.store.n_clients, self.shard_clients)
         self.trainer = make_cohort_trainer(exp)
         self.loss_eval = make_cohort_loss_eval(exp) \
             if exp.selector in ("powd", "fedcor") else None
@@ -487,6 +539,7 @@ class ScanEngine:
         faults, robust = self.faults, self.robust
         has_faults, robust_active = self.has_faults, self.robust_active
         quarantine = int(robust.quarantine_after)
+        pooled, P = self.pooled, self.pool_size
 
         if is_flat:
             if use_kernel:
@@ -499,6 +552,25 @@ class ScanEngine:
             score_fn = gp_projection_tree
         else:
             score_fn = gp_mod.gp_scores_stacked
+
+        pool_scores_sharded = None
+        if pooled and shard > 1:
+            pop_P, pop_repl = cohort_specs(self._pop_rules)
+
+            def _tier1(u, gp_term, last_sel, pj, t):
+                # elementwise over this device's N/shard clients — the
+                # only global reduction (the Eq. 5 softmax inside
+                # ``gp_term``) is computed by the caller OUTSIDE the
+                # mesh; the tiled all_gather restores the canonical
+                # full-population row order for the top-k
+                s_loc = gpcb.pool_scores(u, gp_term, last_sel, t, T, pj)
+                return jax.lax.all_gather(s_loc, "clients", axis=0,
+                                          tiled=True)
+
+            pool_scores_sharded = jax.shard_map(
+                _tier1, mesh=self._mesh,
+                in_specs=(pop_P, pop_P, pop_P, pop_P, pop_repl),
+                out_specs=pop_repl, check_vma=False)
 
         cohort_sharded = None
         if shard > 1:
@@ -533,7 +605,7 @@ class ScanEngine:
 
         def body(tabs, carry: RoundCarry, xs):
             x_tab, y_tab, sz_tab, eval_x, eval_y = tabs
-            t, jitter, sel_ids, cand_ids, avail, lat, flt = xs
+            t, jitter, sel_ids, cand_ids, avail, lat, flt, pjit = xs
             key, kt = jax.random.split(carry.key)
             avail_arg = avail if has_avail else None
             if quarantine > 0 and (is_gpfl or is_fedcor):
@@ -548,26 +620,64 @@ class ScanEngine:
             params_in = flat_mod.unpack(spec, carry.params) if is_flat \
                 else carry.params
 
+            # ---- tier-1 pre-selection: narrow N to the candidate pool ----
+            pool_ids_r = pool_mask = sel_avail = None
+            if pooled:
+                u = gpcb.gpcb_values(carry.bandit, T, exp.rho)
+                gp_term = gp_mod.normalize_gp(carry.latest_gp)
+                if pool_scores_sharded is not None:
+                    # sharded runs never carry an avail mask (the robust
+                    # and availability axes both reject shard_clients>1)
+                    pscores = pool_scores_sharded(
+                        u, gp_term, carry.last_sel, pjit, t)
+                else:
+                    pscores = gpcb.pool_scores(
+                        u, gp_term, carry.last_sel, t, T, pjit,
+                        avail=avail_arg)
+                pool_ids_r = gpcb.pool_topk(pscores, P)
+                pool_mask = jnp.zeros((N,), bool).at[pool_ids_r].set(True)
+                base_m = avail_arg if avail_arg is not None \
+                    else jnp.ones((N,), bool)
+                sel_avail = compose_selection_mask(pool_mask, base_m, K)
+
             # ---- selection (fixed-shape, pure jnp) ----
             all_losses = None
             if is_gpfl:
                 scores = gpcb.selection_scores(
                     carry.bandit, carry.latest_gp, jitter, t, T,
-                    rho=exp.rho, use_ee=use_ee, avail=avail_arg)
+                    rho=exp.rho, use_ee=use_ee,
+                    avail=sel_avail if pooled else avail_arg)
                 ids = jnp.argsort(-scores)[:K]
             elif is_random:
-                ids = sel_ids
+                # pooled: the stream carries RANKS into the (sorted) pool
+                # — at P = N the pool is arange(N), so take(pool, ranks)
+                # replays random_id_stream's draws bit-identically
+                ids = jnp.take(pool_ids_r, sel_ids) if pooled else sel_ids
             elif is_powd:
                 cx, cy, csz = ClientStore.gather_tables(
                     x_tab, y_tab, sz_tab, cand_ids)
                 closs = loss_eval(params_in, cx, cy, csz)
+                if pooled:
+                    # restrict the host-drawn candidates to the pool
+                    # in-scan (the candidate stream itself must stay
+                    # untouched for host-RNG parity); out-of-pool
+                    # candidates rank -inf unless that would starve the
+                    # top-K
+                    in_pool = jnp.take(pool_mask, cand_ids)
+                    enough_p = jnp.sum(in_pool.astype(jnp.int32)) >= K
+                    closs = jnp.where(enough_p & ~in_pool, -jnp.inf,
+                                      closs)
                 ids = jnp.take(cand_ids, jnp.argsort(-closs)[:K])
             else:  # fedcor
                 all_losses = loss_eval(params_in, x_tab, y_tab, sz_tab)
+                warm = (lambda: jnp.take(pool_ids_r, sel_ids)) if pooled \
+                    else (lambda: sel_ids)
                 ids = jax.lax.cond(
                     t < W,
-                    lambda: sel_ids,
-                    lambda: fedcor_greedy(carry.fc_cov, K, avail=avail_arg))
+                    warm,
+                    lambda: fedcor_greedy(
+                        carry.fc_cov, K,
+                        avail=sel_avail if pooled else avail_arg))
             ids = ids.astype(jnp.int32)
 
             # ---- cohort local training (vmapped; sharded when asked) ----
@@ -705,6 +815,10 @@ class ScanEngine:
                     offense = offense & delivered
                 rep["strikes"] = carry.strikes.at[ids].add(
                     offense.astype(jnp.int32))
+            if pooled:
+                rep["last_sel"] = carry.last_sel.at[ids].set(
+                    jnp.asarray(t, jnp.float32))
+                out["pool"] = pool_ids_r
             return carry._replace(**rep), out
 
         return body
@@ -714,20 +828,24 @@ class ScanEngine:
         body = self._build_body()
         N, T = self.store.n_clients, self.exp.rounds
         quarantine = int(self.robust.quarantine_after)
+        pooled = self.pooled
 
         def run_scan(params, direction, bandit, latest_gp, fc_cov, fc_prev,
                      key, streams, tables, eval_tabs):
-            jitter, sel_ids, cand_ids, avail, lat, flt = streams
+            jitter, sel_ids, cand_ids, avail, lat, flt, pjit = streams
             tabs = tables + eval_tabs
             pool = _sync_pool_stubs()
             if quarantine > 0:
                 pool["strikes"] = jnp.zeros((N,), jnp.int32)
+            if pooled:
+                pool["last_sel"] = jnp.full((N,), -1.0, jnp.float32)
             carry0 = RoundCarry(params, direction, bandit, latest_gp,
                                 jnp.zeros((N,), bool), key, fc_cov, fc_prev,
                                 **pool)
             return jax.lax.scan(
                 functools.partial(body, tabs), carry0,
-                (jnp.arange(T), jitter, sel_ids, cand_ids, avail, lat, flt))
+                (jnp.arange(T), jitter, sel_ids, cand_ids, avail, lat, flt,
+                 pjit))
 
         return run_scan
 
@@ -751,32 +869,59 @@ class ScanEngine:
         spec = self.spec
         faults, has_faults = self.faults, self.has_faults
         quarantine = int(self.robust.quarantine_after)
+        pooled, P = self.pooled, self.pool_size
 
         def prefill(params, direction, bandit, latest_gp, fc_cov, fc_prev,
                     key, streams, tables):
-            jitter, sel_ids, cand_ids, avail, lat, flt = streams
+            jitter, sel_ids, cand_ids, avail, lat, flt, pjit = streams
             x_tab, y_tab, sz_tab = tables
             key, kt = jax.random.split(key)
             avail_arg = avail[0] if has_avail else None
             params_in = flat_mod.unpack(spec, params) if is_flat else params
 
+            # tier-1 pool at dispatch slot 0 (pool jitter row 0 — the
+            # event body consumes row t = e + 1, the stream discipline)
+            last_sel = jnp.full((N,), -1.0, jnp.float32) if pooled \
+                else jnp.zeros((1,), jnp.float32)
+            pool_ids_r = pool_mask = sel_avail = None
+            if pooled:
+                u = gpcb.gpcb_values(bandit, E, exp.rho)
+                gp_term = gp_mod.normalize_gp(latest_gp)
+                pscores = gpcb.pool_scores(u, gp_term, last_sel, 0, E,
+                                           pjit[0], avail=avail_arg)
+                pool_ids_r = gpcb.pool_topk(pscores, P)
+                pool_mask = jnp.zeros((N,), bool).at[pool_ids_r].set(True)
+                base_m = avail_arg if avail_arg is not None \
+                    else jnp.ones((N,), bool)
+                sel_avail = compose_selection_mask(pool_mask, base_m, K)
+
             if is_gpfl:
                 scores = gpcb.selection_scores(
                     bandit, latest_gp, jitter[0], 0, E,
-                    rho=exp.rho, use_ee=use_ee, avail=avail_arg)
+                    rho=exp.rho, use_ee=use_ee,
+                    avail=sel_avail if pooled else avail_arg)
                 ids = jnp.argsort(-scores)[:K]
             elif is_random:
-                ids = sel_ids[0]
+                ids = jnp.take(pool_ids_r, sel_ids[0]) if pooled \
+                    else sel_ids[0]
             elif is_powd:
                 cx, cy, csz = ClientStore.gather_tables(
                     x_tab, y_tab, sz_tab, cand_ids[0])
                 closs = loss_eval(params_in, cx, cy, csz)
+                if pooled:
+                    in_pool = jnp.take(pool_mask, cand_ids[0])
+                    enough_p = jnp.sum(in_pool.astype(jnp.int32)) >= K
+                    closs = jnp.where(enough_p & ~in_pool, -jnp.inf,
+                                      closs)
                 ids = jnp.take(cand_ids[0], jnp.argsort(-closs)[:K])
             else:  # fedcor: round 0 is always warm-up (W >= 2), but the
                 # all-client probe still runs and seeds fc_prev
                 fc_prev = loss_eval(params_in, x_tab, y_tab, sz_tab)
-                ids = sel_ids[0]
+                ids = jnp.take(pool_ids_r, sel_ids[0]) if pooled \
+                    else sel_ids[0]
             ids = ids.astype(jnp.int32)
+            if pooled:
+                last_sel = last_sel.at[ids].set(0.0)
 
             x, y, sizes = ClientStore.gather_tables(x_tab, y_tab, sz_tab,
                                                     ids)
@@ -801,7 +946,7 @@ class ScanEngine:
                 pool_ids=ids, pool_ready=jnp.take(lat[0], ids),
                 pool_ver=jnp.zeros((K,), jnp.int32),
                 clock=jnp.zeros((), jnp.float32),
-                pool_ok=pool_ok, strikes=strikes)
+                pool_ok=pool_ok, strikes=strikes, last_sel=last_sel)
 
         return prefill
 
@@ -831,6 +976,7 @@ class ScanEngine:
         faults, robust = self.faults, self.robust
         has_faults, robust_active = self.has_faults, self.robust_active
         quarantine = int(robust.quarantine_after)
+        pooled, P = self.pooled, self.pool_size
 
         if is_flat:
             if use_kernel:
@@ -849,7 +995,7 @@ class ScanEngine:
 
         def body(tabs, carry: RoundCarry, xs):
             x_tab, y_tab, sz_tab, eval_x, eval_y = tabs
-            e, jitter, sel_row, cand_row, avail, lat, flt = xs
+            e, jitter, sel_row, cand_row, avail, lat, flt, pjit = xs
             key, kt = jax.random.split(carry.key)
             t = e + 1   # the dispatch slot: sync round t's stream row
             avail_arg = avail if has_avail else None
@@ -955,28 +1101,51 @@ class ScanEngine:
                 cand = base & (strikes < quarantine)
                 enough = jnp.sum(cand.astype(jnp.int32)) >= M
                 avail_arg = jnp.where(enough, cand, base)
+            # tier-1 pool for THIS dispatch, scored against the
+            # just-updated bandit/GP state (like the tier-2 dispatch)
+            pool_ids_r = pool_mask = sel_avail = None
+            if pooled:
+                u = gpcb.gpcb_values(bandit, E, exp.rho)
+                gp_term = gp_mod.normalize_gp(latest_gp)
+                pscores = gpcb.pool_scores(u, gp_term, carry.last_sel, t,
+                                           E, pjit, avail=avail_arg)
+                pool_ids_r = gpcb.pool_topk(pscores, P)
+                pool_mask = jnp.zeros((N,), bool).at[pool_ids_r].set(True)
+                base_m = avail_arg if avail_arg is not None \
+                    else jnp.ones((N,), bool)
+                sel_avail = compose_selection_mask(pool_mask, base_m, M)
             if is_gpfl:
                 scores = gpcb.selection_scores(
                     bandit, latest_gp, jitter, t, E, rho=exp.rho,
-                    use_ee=use_ee, avail=avail_arg)
+                    use_ee=use_ee,
+                    avail=sel_avail if pooled else avail_arg)
                 n_ids = jnp.argsort(-scores)[:M]
             elif is_random:
-                n_ids = sel_row[:M]
+                n_ids = jnp.take(pool_ids_r, sel_row[:M]) if pooled \
+                    else sel_row[:M]
             elif is_powd:
                 cx, cy, csz = ClientStore.gather_tables(
                     x_tab, y_tab, sz_tab, cand_row)
                 closs = loss_eval(params_in, cx, cy, csz)
+                if pooled:
+                    in_pool = jnp.take(pool_mask, cand_row)
+                    enough_p = jnp.sum(in_pool.astype(jnp.int32)) >= M
+                    closs = jnp.where(enough_p & ~in_pool, -jnp.inf,
+                                      closs)
                 n_ids = jnp.take(cand_row, jnp.argsort(-closs)[:M])
             else:  # fedcor: probe the NEW model, select with the
                 # PRE-update covariance, then fold the probe in — the
                 # sync body's round-t ordering (t = e+1 >= 1, so the
                 # EMA update is unconditional here)
                 all_losses = loss_eval(params_in, x_tab, y_tab, sz_tab)
+                warm = (lambda: jnp.take(pool_ids_r, sel_row[:M])) \
+                    if pooled else (lambda: sel_row[:M])
                 n_ids = jax.lax.cond(
                     t < W,
-                    lambda: sel_row[:M],
-                    lambda: fedcor_greedy(carry.fc_cov, M,
-                                          avail=avail_arg))
+                    warm,
+                    lambda: fedcor_greedy(
+                        carry.fc_cov, M,
+                        avail=sel_avail if pooled else avail_arg))
                 fc_cov = fedcor_cov_update(carry.fc_cov, carry.fc_prev,
                                            all_losses, beta=_FEDCOR_BETA)
                 fc_prev = all_losses
@@ -1037,6 +1206,10 @@ class ScanEngine:
                     [jnp.take(carry.pool_ok, keep), new_ok])
             if quarantine > 0:
                 rep["strikes"] = strikes
+            if pooled:
+                rep["last_sel"] = carry.last_sel.at[n_ids].set(
+                    jnp.asarray(t, jnp.float32))
+                out["pool"] = pool_ids_r
             return carry._replace(**rep), out
 
         return body
@@ -1056,12 +1229,12 @@ class ScanEngine:
             tabs = tables + eval_tabs
             carry0 = prefill(params, direction, bandit, latest_gp, fc_cov,
                              fc_prev, key, streams, tables)
-            jitter, sel_ids, cand_ids, avail, lat, flt = \
+            jitter, sel_ids, cand_ids, avail, lat, flt, pjit = \
                 (s[1:] for s in streams)
             return jax.lax.scan(
                 functools.partial(body, tabs), carry0,
                 (jnp.arange(E), jitter, sel_ids, cand_ids, avail, lat,
-                 flt))
+                 flt, pjit))
 
         return run_scan
 
@@ -1074,11 +1247,11 @@ class ScanEngine:
             else self._build_body()
 
         def run_chunk(carry, ts, streams, tables, eval_tabs):
-            jitter, sel_ids, cand_ids, avail, lat, flt = streams
+            jitter, sel_ids, cand_ids, avail, lat, flt, pjit = streams
             tabs = tables + eval_tabs
             return jax.lax.scan(
                 functools.partial(body, tabs), carry,
-                (ts, jitter, sel_ids, cand_ids, avail, lat, flt))
+                (ts, jitter, sel_ids, cand_ids, avail, lat, flt, pjit))
 
         return run_chunk
 
@@ -1153,16 +1326,26 @@ class ScanEngine:
             direction = tree_zeros_like(params)
             latest_gp = jnp.zeros((N,), jnp.float32)
             if exp.selector == "random":
-                sel_ids = random_id_stream(rng_np, R, N, K,
-                                           avail=avail_np).astype(np.int32)
+                # pooled: the stream carries ranks INTO the sorted tier-1
+                # pool (at pool_size = N it consumes the rng exactly as
+                # random_id_stream does — the bit-parity contract; the
+                # pooled × availability combination is registry-rejected,
+                # so avail_np is always None here when pooled)
+                sel_ids = (pool_rank_stream(rng_np, R, self.pool_size, K)
+                           if self.pooled else
+                           random_id_stream(rng_np, R, N, K,
+                                            avail=avail_np)).astype(np.int32)
             elif exp.selector == "powd":
                 cand_ids = powd_candidate_stream(
                     rng_np, R, N, self.powd_d,
                     avail=avail_np).astype(np.int32)
             elif exp.selector == "fedcor":
-                sel_ids = fedcor_warmup_stream(
-                    rng_np, R, N, K, exp.fedcor_warmup,
-                    avail=avail_np).astype(np.int32)
+                sel_ids = (pool_rank_stream(rng_np, R, self.pool_size, K,
+                                            upto=max(exp.fedcor_warmup, 2))
+                           if self.pooled else
+                           fedcor_warmup_stream(
+                               rng_np, R, N, K, exp.fedcor_warmup,
+                               avail=avail_np)).astype(np.int32)
         bandit = gpcb.init_state(N)
 
         if exp.selector == "fedcor":
@@ -1177,6 +1360,15 @@ class ScanEngine:
             params = flat_mod.pack(self.spec, params)
             direction = flat_mod.pack(self.spec, direction)
 
+        pjit_np = None
+        if self.pooled:
+            # the dedicated pool tie-break stream: tag 4 of the
+            # tuple-seeded side-stream family (availability 1, latency 2,
+            # faults 3) — enabling pre-selection never shifts the legacy
+            # selector or scenario streams
+            prng = np.random.default_rng((exp.seed, self.pre.seed, 4))
+            pjit_np = pool_jitter_stream(prng, R, N).astype(np.float32)
+
         streams = (
             jnp.asarray(jitter),
             jnp.asarray(sel_ids),
@@ -1187,6 +1379,8 @@ class ScanEngine:
             else jnp.zeros((R, 1), jnp.float32),
             jnp.asarray(flt_np) if flt_np is not None
             else jnp.zeros((R, 1), bool),
+            jnp.asarray(pjit_np) if pjit_np is not None
+            else jnp.zeros((R, 1), jnp.float32),
         )
         return (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
                 streams)
@@ -1218,6 +1412,8 @@ class ScanEngine:
                        float(self.robust.trim_fraction),
                        float(self.robust.clip_quantile),
                        int(self.robust.quarantine_after)),
+            "pre_selection": (self.pre.kind, int(self.pre.pool_size),
+                              int(self.pre.seed), bool(self.pre.streamed)),
         }
         return hashlib.sha1(
             json.dumps(payload, sort_keys=True).encode()).hexdigest()
@@ -1243,11 +1439,15 @@ class ScanEngine:
                         pool_ver=jnp.zeros((K,), jnp.int32),
                         clock=jnp.zeros((), jnp.float32),
                         pool_ok=jnp.ones((K,), bool),
-                        strikes=jnp.zeros((1,), jnp.int32))
+                        strikes=jnp.zeros((1,), jnp.int32),
+                        last_sel=jnp.zeros((1,), jnp.float32))
         else:
             pool = _sync_pool_stubs()
         if self.robust.quarantine_after > 0:
             pool["strikes"] = jnp.zeros((self.store.n_clients,), jnp.int32)
+        if self.pooled:
+            pool["last_sel"] = jnp.full((self.store.n_clients,), -1.0,
+                                        jnp.float32)
         return RoundCarry(params, direction, bandit, latest_gp,
                           jnp.zeros((self.store.n_clients,), bool), key,
                           fc_cov, fc_prev, **pool)
@@ -1265,6 +1465,8 @@ class ScanEngine:
                 "coverage": np.zeros((R,), np.float32)}
         if self.buffered:
             outs["sim_time"] = np.zeros((R,), np.float32)
+        if self.pooled:
+            outs["pool"] = np.zeros((R, self.pool_size), np.int32)
         return outs
 
     def _write_snapshot(self, carry: RoundCarry, outs: dict,
@@ -1288,17 +1490,22 @@ class ScanEngine:
             ValueError: the snapshot was written by a different
                 experiment/engine configuration (fingerprint mismatch).
         """
-        like = {"carry": _carry_to_tree(self._fresh_carry()),
-                "out": self._empty_outs()}
-        tree, step, meta = restore_checkpoint(self.snapshot_path, like,
-                                              return_meta=True)
+        # fingerprint first (cheap meta peek): a different run's snapshot
+        # may not even share this engine's carry STRUCTURE (e.g. pooled
+        # pre-selection adds carry/output leaves), so the identity check
+        # must precede the structural restore
         want = self.fingerprint()
+        _, meta = peek_meta(self.snapshot_path)
         got = (meta or {}).get("fingerprint")
         if got != want:
             raise ValueError(
                 f"snapshot {self.snapshot_path} belongs to a different "
                 f"run (fingerprint {got!r} != this engine's {want!r}); "
                 f"refusing to resume from it")
+        like = {"carry": _carry_to_tree(self._fresh_carry()),
+                "out": self._empty_outs()}
+        tree, step, meta = restore_checkpoint(self.snapshot_path, like,
+                                              return_meta=True)
         # np.array (not asarray): restored leaves can be read-only
         # frombuffer views, and the chunk loop writes rows in place
         outs = {k: np.array(v) for k, v in tree["out"].items()}
@@ -1336,6 +1543,16 @@ class ScanEngine:
                 "this ScanEngine was built with defer_init=True (a "
                 "BatchedSeedEngine sub-engine); its init-phase state may "
                 "be a placeholder — run the batched engine instead")
+        if self.streamed:
+            # large-population mode: host-paced double-buffered loop, no
+            # scan (the registry already rejects snapshots here)
+            if resume or until_round is not None:
+                raise ValueError(
+                    "streamed pre-selection does not snapshot; "
+                    "resume/until_round are unavailable")
+            return run_pooled_stream(self.exp, self.pre,
+                                     data=self._stream_data,
+                                     log_every=self.log_every)
         if self.snapshot_every <= 0:
             if resume or until_round is not None:
                 raise ValueError(
@@ -1430,6 +1647,7 @@ class ScanEngine:
         counts = np.bincount(selections.reshape(-1),
                              minlength=N).astype(np.int64)
         sim = outs.get("sim_time")
+        pool = outs.get("pool")
         return RunResult(
             config=exp,
             accuracy=np.asarray(outs["acc"], np.float32),
@@ -1444,6 +1662,8 @@ class ScanEngine:
             coverage=np.asarray(outs["coverage"], np.float32),
             sim_time_s=None if sim is None
             else np.asarray(sim, np.float32),
+            pools=None if pool is None
+            else np.asarray(pool, np.int32),
         )
 
 
@@ -1491,6 +1711,10 @@ class BatchedSeedEngine:
             ``ScanEngine`` but must resolve inert (``mode="none"`` /
             plain ``"mean"``, no quarantine) — robustness cells run
             sequentially (a Session routes them that way).
+        pre_selection: accepted for signature parity with ``ScanEngine``
+            but must resolve to ``kind="none"`` — the tier-1 pool pass
+            carries per-cell state (``last_sel``), so pooled cells run
+            sequentially (a Session routes them that way too).
 
     Raises:
         ValueError: cells disagree on anything but seed/name, or the
@@ -1505,7 +1729,8 @@ class BatchedSeedEngine:
                  aggregation: Union[str, AggregationConfig, None] = "sync",
                  shard_clients: int = 1,
                  faults: Union[str, FaultConfig, None] = None,
-                 aggregator: Union[str, RobustConfig, None] = "mean"):
+                 aggregator: Union[str, RobustConfig, None] = "mean",
+                 pre_selection: Union[str, PreselectConfig, None] = None):
         """Build per-seed state, stack it, and jit the vmapped scan."""
         if not cells:
             raise ValueError("BatchedSeedEngine needs at least one cell")
@@ -1516,6 +1741,11 @@ class BatchedSeedEngine:
                 "fault injection / robust aggregation cannot combine with "
                 "the batched seed axis; run robustness cells sequentially "
                 "(a Session does this automatically)")
+        if make_preselect(pre_selection).kind != "none":
+            raise ValueError(
+                "pre_selection cannot combine with the batched seed axis; "
+                "run pooled cells sequentially (a Session does this "
+                "automatically)")
         if int(shard_clients) != 1:
             raise ValueError(
                 f"shard_clients={shard_clients} cannot combine with the "
@@ -1699,7 +1929,9 @@ def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                         shard_clients: int = 1,
                         faults: Union[str, FaultConfig, None] = None,
                         aggregator: Union[str, RobustConfig,
-                                          None] = "mean") -> RunResult:
+                                          None] = "mean",
+                        pre_selection: Union[str, PreselectConfig,
+                                             None] = None) -> RunResult:
     """One-shot convenience over ``ScanEngine`` — the ``backend="scan"``
     entry point of ``repro.fl.run_experiment`` (see that function and the
     ``ScanEngine`` docstring for every knob)."""
@@ -1708,4 +1940,5 @@ def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                       log_every=log_every, scenario=scenario,
                       aggregation=aggregation,
                       shard_clients=shard_clients, faults=faults,
-                      aggregator=aggregator).run()
+                      aggregator=aggregator,
+                      pre_selection=pre_selection).run()

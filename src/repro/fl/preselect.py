@@ -1,0 +1,287 @@
+"""Tiered pre-selection: narrow N clients to a pool before exact selection.
+
+The paper's headline efficiency claim rests on *pre-selection* — GPFL
+cheaply narrows the population before running the expensive
+gradient-projection scoring.  This module is that axis, made first-class:
+
+* :class:`PreselectConfig` / :func:`make_preselect` — the spec value
+  (``ExecutionSpec(pre_selection=...)``), mirroring the scenario /
+  aggregation / fault configs.
+* :func:`compose_selection_mask` — the one starvation-guarded rule for
+  folding the tier-1 pool mask into the tier-2 candidate mask, shared by
+  the engine and the property tests.
+* :func:`run_pooled_stream` — the large-population host-paced runner:
+  client tables stay HOST-resident and only each round's pool streams to
+  device, double-buffered one round ahead (``jax.device_put`` of round
+  t+1's candidate tables overlaps round t's compute), so peak device
+  memory is bounded by the pool size P, never the population N.
+
+The in-scan pooled path (every selector, sync + buffered, both layouts,
+bit-identical to the full-population engine at ``pool_size >= N``) lives
+in ``repro.fl.engine``; the tier-1 scoring itself is
+``repro.core.gpcb.pool_scores`` / ``pool_topk``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+#: tiered pre-selection kinds.  Must match the ``pre_selection`` rows of
+#: the capability registry (``repro.api.capabilities.PRESELECT_KINDS``).
+PRESELECT_KINDS = ("none", "pooled")
+
+
+@dataclasses.dataclass(frozen=True)
+class PreselectConfig:
+    """How (whether) the population is narrowed before exact selection.
+
+    Attributes:
+        kind: ``"none"`` (every selector scores all N clients — the
+            legacy engine) or ``"pooled"`` (a cheap tier-1 pass narrows
+            N to a candidate pool first).
+        pool_size: tier-1 pool size P.  Clamped to N at engine time; at
+            ``P >= N`` pooled runs are bit-identical to the
+            full-population engine (the oracle-parity contract).  Must
+            cover the cohort (P >= K, validated by the registry).
+        seed: seeds the dedicated pool tie-break stream
+            ``(exp.seed, seed, 4)`` — pool membership is reproducible
+            from the config alone and never perturbs the legacy host-RNG
+            consumption order.
+        streamed: large-population mode — client tables stay
+            host-resident and only each round's pool streams to device
+            (:func:`run_pooled_stream`).  Pools are computed one round
+            ahead from the state *entering* the previous round
+            (stale-by-one) so the host→device copy overlaps compute;
+            restricted to gpfl/random × sync × tree × unsharded.
+    """
+    kind: str = "pooled"
+    pool_size: int = 1024
+    seed: int = 0
+    streamed: bool = False
+
+    def __post_init__(self):
+        """Validate the knobs at construction, not mid-sweep."""
+        if self.kind not in PRESELECT_KINDS:
+            raise ValueError(
+                f"unknown pre_selection kind {self.kind!r}; expected one "
+                f"of {PRESELECT_KINDS}")
+        if self.kind == "pooled" and self.pool_size < 1:
+            raise ValueError(
+                f"pre_selection pool_size must be >= 1; got "
+                f"{self.pool_size}")
+
+
+def make_preselect(value) -> PreselectConfig:
+    """Coerce a ``pre_selection`` spec value into a full config.
+
+    Args:
+        value: ``None`` (off), a kind name from :data:`PRESELECT_KINDS`,
+            or a full :class:`PreselectConfig` (returned unchanged).
+
+    Returns:
+        The resolved :class:`PreselectConfig`.
+
+    Raises:
+        ValueError: an unknown kind name.
+    """
+    if value is None:
+        return PreselectConfig(kind="none")
+    if isinstance(value, PreselectConfig):
+        return value
+    if isinstance(value, str):
+        if value not in PRESELECT_KINDS:
+            raise ValueError(
+                f"unknown pre_selection {value!r}; expected one of "
+                f"{PRESELECT_KINDS} or a repro.fl.preselect."
+                f"PreselectConfig")
+        return PreselectConfig(kind=value)
+    raise ValueError(
+        f"pre_selection must be None, a kind name from {PRESELECT_KINDS} "
+        f"or a PreselectConfig; got {type(value).__name__}")
+
+
+def compose_selection_mask(pool_mask, base, k: int):
+    """Fold the tier-1 pool into a tier-2 candidate mask, starvation-safe.
+
+    The composed candidate set is ``base & pool``; when that leaves fewer
+    than K clients (an over-masked round — tiny pool, aggressive
+    quarantine) selection falls back to ``base`` alone rather than
+    producing a degenerate (NaN-scored) cohort.  This mirrors the
+    engine's existing quarantine starvation guard, and at
+    ``pool == all-true`` (pool_size >= N) both branches equal ``base``
+    exactly — the bit-parity contract.
+
+    Args:
+        pool_mask: (N,) bool tier-1 pool membership.
+        base: (N,) bool availability/quarantine candidate mask.
+        k: cohort size K.
+
+    Returns:
+        (N,) bool mask with at least ``min(k, sum(base))`` clients set.
+    """
+    import jax.numpy as jnp
+    cand = jnp.logical_and(base, pool_mask)
+    enough = jnp.sum(cand.astype(jnp.int32)) >= k
+    return jnp.where(enough, cand, base)
+
+
+def run_pooled_stream(exp, pre: PreselectConfig, *, data=None,
+                      log_every: int = 0):
+    """Host-paced pooled runner for populations too big to live on device.
+
+    Per round t: (1) dispatch round t's cohort train + server update on
+    the ALREADY-prefetched (P, cap) pool tables; (2) while it computes,
+    score the population with the cheap tier-1 pass (``pool_scores`` on
+    device-resident (N,) vectors — a few MB even at N=10⁶), pull the
+    (P,) pool ids to host, and ``jax.device_put`` round t+1's candidate
+    table rows (gathered from the HOST-resident numpy tables).  Device
+    residency is therefore two (P, cap) table buffers + the (N,) bandit
+    vectors — bounded by the pool, not the population.
+
+    Pools are stale-by-one: round t+1's pool is computed from the state
+    entering round t (a true double buffer needs the next pool before
+    the current round finishes).  Selection within the pool replays the
+    exact tier-2 rules (gpfl's GPCB top-K / random's seeded rank draws).
+
+    Args:
+        exp: the ``FLExperimentConfig`` (selector ``"gpfl"`` or
+            ``"random"`` — registry-validated upstream).
+        pre: the resolved pooled config (``streamed=True``).
+        data: optional prebuilt ``(store, eval_x, eval_y)`` with a
+            HOST-table store (``_build_data(exp, seed,
+            host_tables=True)``); ``None`` builds one.
+        log_every: print progress every N rounds (0 = silent).
+
+    Returns:
+        A ``repro.fl.simulation.RunResult`` (with per-round ``pools``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gp as gp_mod, gpcb
+    from repro.core.selector import (gpfl_jitter_stream, pool_jitter_stream,
+                                     pool_rank_stream)
+    from repro.fl.client import make_cohort_trainer
+    from repro.fl.server import (fedavg, make_evaluator,
+                                 update_global_direction)
+    from repro.fl.simulation import RunResult, _build_data, init_gp_phase
+    from repro.models import small
+
+    store, eval_x, eval_y = data if data is not None \
+        else _build_data(exp, exp.seed, host_tables=True)
+    N, K, T = store.n_clients, exp.clients_per_round, exp.rounds
+    P = min(pre.pool_size, N)
+    x_np, y_np, sizes_np = (np.asarray(store.x), np.asarray(store.y),
+                            np.asarray(store.sizes))
+
+    rng_np = np.random.default_rng(exp.seed)
+    key = jax.random.key(exp.seed)
+    key, k0 = jax.random.split(key)
+    params = small.init(k0, exp.model)
+    trainer = make_cohort_trainer(exp)
+    evaluate = make_evaluator(exp, eval_x, eval_y)
+
+    pjit = pool_jitter_stream(
+        np.random.default_rng((exp.seed, pre.seed, 4)), T, N)
+    is_gpfl = exp.selector == "gpfl"
+    if is_gpfl:
+        key, kinit = jax.random.split(key)
+        direction, gp_all = init_gp_phase(trainer, store, params, kinit)
+        latest_gp = jnp.asarray(gp_all, jnp.float32)
+        sel_stream = gpfl_jitter_stream(rng_np, T, N)
+    else:
+        direction = jax.tree.map(jnp.zeros_like, params)
+        latest_gp = jnp.zeros((N,), jnp.float32)
+        sel_stream = pool_rank_stream(rng_np, T, P, K)
+    bandit = gpcb.init_state(N)
+    last_sel = jnp.full((N,), -1.0, jnp.float32)
+    seen = jnp.zeros((N,), bool)
+
+    @jax.jit
+    def _pool(bandit, latest_gp, last_sel, t, pj):
+        u = gpcb.gpcb_values(bandit, T, exp.rho)
+        gp_term = gp_mod.normalize_gp(latest_gp)
+        return gpcb.pool_topk(
+            gpcb.pool_scores(u, gp_term, last_sel, t, T, pj), P)
+
+    @jax.jit
+    def _round(params, direction, bandit, latest_gp, last_sel, seen, t,
+               pool_ids, px, py, ps, sel_in, kt):
+        if is_gpfl:
+            u_p = jnp.take(gpcb.gpcb_values(bandit, T, exp.rho), pool_ids)
+            gp_p = jnp.take(latest_gp, pool_ids)
+            jit_p = jnp.take(sel_in, pool_ids)
+            finite = jnp.where(jnp.isinf(u_p), 1e9 + jit_p * 1e12, u_p)
+            sc = jnp.where(jnp.asarray(t) == 0, gp_p,
+                           finite + jit_p * 1e-9)
+            pos = jnp.argsort(-sc)[:K]
+        else:
+            pos = sel_in
+        ids = jnp.take(pool_ids, pos)
+        x, y, sz = (jnp.take(px, pos, axis=0), jnp.take(py, pos, axis=0),
+                    jnp.take(ps, pos, axis=0))
+        rngs = jax.random.split(kt, K)
+        w_i, d_i, _ = trainer(params, x, y, sz, rngs)
+        w_prev = params
+        params = fedavg(w_i)
+        direction = update_global_direction(direction, w_prev, params,
+                                            exp.lr, exp.momentum)
+        acc, loss = evaluate(params)
+        if is_gpfl:
+            gp_scores = gp_mod.gp_scores_stacked(d_i, direction)
+            bandit, latest_gp = gpcb.observe(bandit, latest_gp, ids,
+                                             gp_scores, acc, loss)
+        last_sel = last_sel.at[ids].set(jnp.asarray(t, jnp.float32))
+        seen = seen.at[ids].set(True)
+        return (params, direction, bandit, latest_gp, last_sel, seen,
+                ids, acc, loss, jnp.mean(seen.astype(jnp.float32)))
+
+    def _fetch(ids_host):
+        return (jax.device_put(x_np[ids_host]),
+                jax.device_put(y_np[ids_host]),
+                jax.device_put(sizes_np[ids_host]))
+
+    t0 = time.perf_counter()
+    cur_pool = _pool(bandit, latest_gp, last_sel, 0, pjit[0])
+    cur_tab = _fetch(np.asarray(cur_pool))
+    ids_hist, acc_hist, loss_hist, cov_hist, pool_hist = [], [], [], [], []
+    state = (params, direction, bandit, latest_gp, last_sel, seen)
+    for t in range(T):
+        key, kt = jax.random.split(key)
+        sel_in = jnp.asarray(sel_stream[t])
+        out = _round(*state, t, cur_pool, *cur_tab, sel_in, kt)
+        pool_hist.append(np.asarray(cur_pool))
+        if t + 1 < T:
+            # stale-by-one prefetch: round t+1's pool from the state
+            # ENTERING round t, so the table copy overlaps round t
+            nxt_pool = _pool(state[2], state[3], state[4], t + 1,
+                             pjit[t + 1])
+            nxt_tab = _fetch(np.asarray(nxt_pool))
+            cur_pool, cur_tab = nxt_pool, nxt_tab
+        state = out[:6]
+        ids_hist.append(out[6])
+        acc_hist.append(out[7])
+        loss_hist.append(out[8])
+        cov_hist.append(out[9])
+        if log_every and (t + 1) % log_every == 0:
+            print(f"[{exp.name}] streamed round {t+1}/{T} "
+                  f"acc={float(out[7]):.4f}")
+    jax.block_until_ready(state[0])
+    wall = time.perf_counter() - t0
+
+    selections = np.stack([np.asarray(i) for i in ids_hist])
+    counts = np.zeros(N, np.int64)
+    np.add.at(counts, selections.reshape(-1), 1)
+    return RunResult(
+        config=exp,
+        accuracy=np.asarray([float(a) for a in acc_hist], np.float32),
+        loss=np.asarray([float(v) for v in loss_hist], np.float32),
+        selections=selections,
+        round_time_s=np.full((T,), wall / max(T, 1), np.float32),
+        selection_counts=counts,
+        coverage=np.asarray([float(c) for c in cov_hist], np.float32),
+        pools=np.stack(pool_hist),
+    )

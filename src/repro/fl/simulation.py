@@ -50,6 +50,9 @@ class RunResult:
             in-flight update landed, in latency-model seconds); the
             x-axis of time-to-accuracy comparisons.  ``None`` for sync
             runs, whose per-row histories are indexed by round.
+        pools: pooled pre-selection runs only — (T, P) tier-1 candidate
+            pool ids per round (ascending), the oracle-parity harness's
+            subset witness.  ``None`` for full-population runs.
     """
     config: FLExperimentConfig
     accuracy: np.ndarray          # (T,)
@@ -59,6 +62,7 @@ class RunResult:
     selection_counts: np.ndarray  # (N,)
     coverage: np.ndarray          # (T,) fraction of clients seen ≥1×
     sim_time_s: Optional[np.ndarray] = None  # (E,) buffered event clock
+    pools: Optional[np.ndarray] = None       # (T, P) tier-1 pool ids
 
     def final_accuracy(self, last: int = 10) -> float:
         """Mean accuracy over the final ``last`` rounds (Table II style)."""
@@ -70,11 +74,14 @@ class RunResult:
         return float(self.accuracy[i])
 
 
-def _build_data(exp: FLExperimentConfig, seed: int):
+def _build_data(exp: FLExperimentConfig, seed: int,
+                host_tables: bool = False):
     """Synthesize + partition the experiment's dataset.
 
     Returns ``(ClientStore, eval_x, eval_y)`` — deterministic in
     ``seed``, shared by both backends so they train on identical bytes.
+    ``host_tables=True`` keeps the client tables host-resident (the
+    streamed pooled runner's large-population mode).
     """
     total = exp.n_clients * exp.samples_per_client_mean
     data = make_dataset(exp.model.name, total + exp.eval_size, seed=seed)
@@ -84,7 +91,7 @@ def _build_data(exp: FLExperimentConfig, seed: int):
     train = Dataset(x=train_x, y=train_y, num_classes=data.num_classes)
     parts = partition(exp.partition, train_y, exp.n_clients,
                       zeta=exp.dirichlet_zeta, seed=seed)
-    store = ClientStore(train, parts)
+    store = ClientStore(train, parts, host_tables=host_tables)
     return store, jnp.asarray(eval_x), jnp.asarray(eval_y)
 
 

@@ -49,6 +49,7 @@ from repro.api.spec import ExecutionSpec
 from repro.fl.faults import FaultConfig
 from repro.fl.latency import (AggregationConfig, LatencyModel,
                               ScenarioConfig)
+from repro.fl.preselect import PreselectConfig
 from repro.fl.robust import RobustConfig
 
 
@@ -73,7 +74,8 @@ def _spec_to_dict(spec: ExecutionSpec) -> dict:
 def _spec_from_dict(d: dict) -> ExecutionSpec:
     """Rebuild an :class:`ExecutionSpec` from :func:`_spec_to_dict`
     output (re-hydrating dict-ified ``ScenarioConfig`` /
-    ``AggregationConfig`` / ``FaultConfig`` / ``RobustConfig`` values)."""
+    ``AggregationConfig`` / ``FaultConfig`` / ``RobustConfig`` /
+    ``PreselectConfig`` values)."""
     d = dict(d)
     scn = d.get("scenario")
     if isinstance(scn, dict):
@@ -89,6 +91,9 @@ def _spec_from_dict(d: dict) -> ExecutionSpec:
     rb = d.get("aggregator")
     if isinstance(rb, dict):
         d["aggregator"] = RobustConfig(**rb)
+    pre = d.get("pre_selection")
+    if isinstance(pre, dict):
+        d["pre_selection"] = PreselectConfig(**pre)
     return ExecutionSpec(**d)
 
 

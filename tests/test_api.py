@@ -60,6 +60,10 @@ def _spec_for(dim, value, backend):
     elif dim == "quarantine_after":
         from repro.fl.robust import RobustConfig
         kw["aggregator"] = RobustConfig(quarantine_after=1)
+    elif dim == "pre_selection":
+        if value != "none":
+            # default pool_size (1024) >= K, clamped to N at engine time
+            kw["pre_selection"] = value
     return ExecutionSpec(**kw), sel
 
 

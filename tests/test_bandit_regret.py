@@ -1,25 +1,48 @@
 """Theorem-1-flavoured behavioural tests: in a stationary stochastic setting
 the GPCB policy must (a) explore every arm, then (b) concentrate selection
-on the best arms — i.e. sublinear empirical regret."""
+on the best arms — i.e. sublinear empirical regret.
+
+``_simulate`` is parametrised over FULL-population selection and tiered
+POOLED selection (``pool_size`` narrows each round through the tier-1
+``pool_scores``/``pool_topk`` pass before the exact argsort, exactly as
+the pooled scan engine does) — the behavioural pins must hold for both
+shapes, not just the full-population one the seed suite assumed.
+"""
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.core import gpcb
 
 
-def _simulate(n_arms=10, k=2, rounds=400, rho=1.0, seed=0, drift=False):
+def _simulate(n_arms=10, k=2, rounds=400, rho=1.0, seed=0, drift=False,
+              pool_size=None):
     rng = np.random.default_rng(seed)
     true_mu = np.linspace(0.1, 0.9, n_arms)
     rng.shuffle(true_mu)
     state = gpcb.init_state(n_arms)
     picks = np.zeros(n_arms, int)
+    last_sel = np.full(n_arms, -1.0, np.float32)
     regret = []
     best = np.sort(true_mu)[-k:].sum()
     for t in range(rounds):
-        u = np.asarray(gpcb.gpcb_values(state, rounds, rho))
-        u = np.where(np.isinf(u), 1e9 + rng.random(n_arms), u)
+        u_raw = gpcb.gpcb_values(state, rounds, rho)
+        u = np.where(np.isinf(np.asarray(u_raw)),
+                     1e9 + rng.random(n_arms), np.asarray(u_raw))
+        if pool_size is not None:
+            # the tier-1 pre-selection pass: heuristic pool, then the
+            # exact policy restricted to it (never outside the pool)
+            ps = gpcb.pool_scores(
+                u_raw, jnp.zeros(n_arms), jnp.asarray(last_sel),
+                jnp.asarray(float(t)), rounds,
+                jnp.asarray(rng.random(n_arms), jnp.float32))
+            pool = np.asarray(gpcb.pool_topk(ps, pool_size))
+            masked = np.full(n_arms, -np.inf)
+            masked[pool] = u[pool]
+            u = masked
         idx = np.argsort(-u)[:k]
         picks[idx] += 1
+        last_sel[idx] = float(t)
         rewards = np.clip(true_mu + rng.normal(0, 0.05, n_arms), 0, 1)
         mask = np.zeros(n_arms, np.float32)
         mask[idx] = 1
@@ -30,16 +53,31 @@ def _simulate(n_arms=10, k=2, rounds=400, rho=1.0, seed=0, drift=False):
     return true_mu, picks, np.asarray(regret)
 
 
-def test_all_arms_explored():
-    _, picks, _ = _simulate()
+@pytest.mark.parametrize("pool_size", [None, 6],
+                         ids=["full", "pooled"])
+def test_all_arms_explored(pool_size):
+    """Coverage must survive tier-1 pooling: the explore bonus +
+    staleness term cycles never/long-unselected arms into the pool."""
+    _, picks, _ = _simulate(pool_size=pool_size)
     assert (picks > 0).all()
 
 
-def test_concentrates_on_best_arms():
-    true_mu, picks, _ = _simulate(rounds=400)
+@pytest.mark.parametrize("pool_size", [None, 6],
+                         ids=["full", "pooled"])
+def test_concentrates_on_best_arms(pool_size):
+    true_mu, picks, _ = _simulate(rounds=400, pool_size=pool_size)
     top2 = np.argsort(-true_mu)[:2]
     # the two best arms get the most selections
     assert set(np.argsort(-picks)[:2].tolist()) == set(top2.tolist())
+
+
+def test_pooled_selection_tracks_full_population_regret():
+    """The tier-1 filter is a narrowing of the SAME bandit, not a
+    different policy: pooled long-run mean regret stays comparable to
+    (within 2× of) full-population selection."""
+    _, _, full = _simulate(rounds=400)
+    _, _, pooled = _simulate(rounds=400, pool_size=6)
+    assert pooled.mean() <= max(2.0 * full.mean(), full.mean() + 0.1)
 
 
 def test_regret_dips_then_rises_with_alpha_schedule():

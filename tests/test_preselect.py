@@ -1,0 +1,318 @@
+"""Tiered pre-selection (ISSUE 9 tentpole): oracle-parity harness.
+
+The contract of the two-tier pipeline (``repro.fl.preselect``): tier 1
+is a cheap heuristic CANDIDATE filter, tier 2 the existing exact
+selectors restricted to the pool — so correctness decomposes into
+
+* **oracle parity** — with ``pool_size >= n_clients`` the tier-1 pool is
+  the whole population and the pooled engine must replay the plain
+  engine BIT-IDENTICALLY (selections AND accuracy), for all four
+  selectors × both param layouts × sync and buffered aggregation;
+* **subset** — with a small pool the selected cohort is always a subset
+  of the recorded tier-1 pool (gpfl/random/fedcor; powd draws its loss
+  candidates population-wide and falls back BY DESIGN when fewer than K
+  land in the pool), and pool streams are seed-reproducible;
+* **mask composition** (hypothesis property) — the tier-1 pool mask
+  composes with availability/quarantine masks such that a client
+  excluded by any mask is never selected, and an all-excluded round
+  falls back to the base mask without NaNs;
+* **oracle regret** — on a synthetic population with KNOWN client values
+  the tier-1 heuristic pool recalls the oracle top-m far better than a
+  random pool of the same size.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper import femnist_experiment
+from repro.core import gpcb
+from repro.fl.engine import ENGINE_SELECTORS, ScanEngine
+from repro.fl.latency import AggregationConfig
+from repro.fl.preselect import PreselectConfig, compose_selection_mask
+from repro.fl.simulation import _build_data
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _tiny(selector, rounds=5, seed=3):
+    exp = femnist_experiment("2spc", selector, rounds=rounds, seed=seed)
+    return dataclasses.replace(
+        exp, n_clients=12, clients_per_round=3, samples_per_client_mean=30,
+        samples_per_client_std=8, local_iters=2, local_batch_size=16,
+        eval_size=200)
+
+
+_DATA = {}
+
+
+def _data(exp, host_tables=False):
+    """Dataset builds ignore selector/rounds — share per (seed, mode)."""
+    key = (exp.seed, host_tables)
+    if key not in _DATA:
+        _DATA[key] = _build_data(exp, exp.seed, host_tables=host_tables)
+    return _DATA[key]
+
+
+#: buffered-aggregation leg of the parity grid (matches the async bench).
+_BUFFERED = dict(scenario="stragglers",
+                 aggregation=AggregationConfig(kind="buffered",
+                                               buffer_size=2,
+                                               staleness_discount=0.5))
+
+
+def _assert_bit_identical(plain, pooled, ctx):
+    np.testing.assert_array_equal(plain.selections, pooled.selections,
+                                  err_msg=f"{ctx}: selections diverged")
+    np.testing.assert_array_equal(plain.accuracy, pooled.accuracy,
+                                  err_msg=f"{ctx}: accuracy diverged")
+    np.testing.assert_array_equal(plain.loss, pooled.loss,
+                                  err_msg=f"{ctx}: loss diverged")
+
+
+# ------------------------------------------------ oracle parity (pool >= N)
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("selector", ENGINE_SELECTORS)
+def test_pool_covering_population_bit_identical_sync(selector, layout):
+    """THE parity pin, sync leg: pool_size >= N makes the tier-1 pool the
+    identity filter, so the pooled engine replays the plain engine
+    bit-for-bit — and records a full-population pool every round."""
+    exp = _tiny(selector)
+    data = _data(exp)
+    plain = ScanEngine(exp, param_layout=layout, data=data).run()
+    pooled = ScanEngine(
+        exp, param_layout=layout, data=data,
+        pre_selection=PreselectConfig(pool_size=64)).run()
+    _assert_bit_identical(plain, pooled, f"{selector}/{layout}/sync")
+    assert plain.pools is None
+    assert pooled.pools.shape == (exp.rounds, exp.n_clients)  # clamped to N
+    # a covering pool is exactly the population, every round
+    np.testing.assert_array_equal(
+        pooled.pools, np.tile(np.arange(exp.n_clients), (exp.rounds, 1)))
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("selector", ENGINE_SELECTORS)
+def test_pool_covering_population_bit_identical_buffered(selector, layout):
+    """The parity pin, buffered leg: the tier-1 pass inside the EVENT
+    scan (post-flush bandit state, prefill prologue) is also the
+    identity filter at pool_size >= N."""
+    exp = _tiny(selector)
+    data = _data(exp)
+    plain = ScanEngine(exp, param_layout=layout, data=data,
+                       **_BUFFERED).run()
+    pooled = ScanEngine(
+        exp, param_layout=layout, data=data,
+        pre_selection=PreselectConfig(pool_size=64), **_BUFFERED).run()
+    _assert_bit_identical(plain, pooled, f"{selector}/{layout}/buffered")
+
+
+# --------------------------------------------- small pools: subset + seeds
+
+@pytest.mark.parametrize("selector", ["gpfl", "random", "fedcor"])
+def test_small_pool_cohort_is_subset_of_recorded_pool(selector):
+    """With pool_size < N every selected cohort lies inside that round's
+    recorded tier-1 pool (the selectors that draw candidates from the
+    pool itself), and a same-config rerun reproduces pools AND
+    selections bit-identically."""
+    exp = _tiny(selector, rounds=6)
+    data = _data(exp)
+    pre = PreselectConfig(pool_size=6)
+    res = ScanEngine(exp, data=data, pre_selection=pre).run()
+    assert res.pools.shape == (exp.rounds, 6)
+    for t in range(exp.rounds):
+        assert set(res.selections[t]) <= set(res.pools[t]), \
+            f"{selector} round {t}: cohort escaped the tier-1 pool"
+    assert np.isfinite(res.accuracy).all()
+    again = ScanEngine(exp, data=data, pre_selection=pre).run()
+    np.testing.assert_array_equal(res.pools, again.pools)
+    np.testing.assert_array_equal(res.selections, again.selections)
+
+
+def test_small_pool_powd_falls_back_when_pool_starved():
+    """powd draws its d loss-evaluation candidates population-wide on the
+    host stream; rounds where fewer than K candidates land in the tiny
+    pool fall back to the unrestricted candidate set BY DESIGN (the
+    starvation guard) — the run must stay finite and deterministic, and
+    non-starved rounds must respect the pool."""
+    exp = _tiny("powd", rounds=6)
+    data = _data(exp)
+    pre = PreselectConfig(pool_size=6)
+    res = ScanEngine(exp, data=data, pre_selection=pre).run()
+    assert np.isfinite(res.accuracy).all()
+    assert ((res.selections >= 0)
+            & (res.selections < exp.n_clients)).all()
+    again = ScanEngine(exp, data=data, pre_selection=pre).run()
+    np.testing.assert_array_equal(res.selections, again.selections)
+    np.testing.assert_array_equal(res.pools, again.pools)
+
+
+def test_pool_seed_changes_pool_stream_only_deterministically():
+    """Different ``PreselectConfig.seed`` values draw different tier-1
+    jitter streams (tie-breaks differ) while staying reproducible."""
+    exp = _tiny("random", rounds=6)
+    data = _data(exp)
+    a = ScanEngine(exp, data=data,
+                   pre_selection=PreselectConfig(pool_size=6, seed=0)).run()
+    a2 = ScanEngine(exp, data=data,
+                    pre_selection=PreselectConfig(pool_size=6, seed=0)).run()
+    b = ScanEngine(exp, data=data,
+                   pre_selection=PreselectConfig(pool_size=6, seed=9)).run()
+    np.testing.assert_array_equal(a.pools, a2.pools)
+    assert b.pools.shape == a.pools.shape
+    assert np.isfinite(b.accuracy).all()
+
+
+# ----------------------------------------------------- streamed large-K mode
+
+@pytest.mark.parametrize("selector", ["gpfl", "random"])
+def test_streamed_mode_subset_and_deterministic(selector):
+    """The large-population path (host tables + double-buffered pool
+    streaming) selects inside its recorded pools and reruns
+    bit-identically — populations never materialise on device."""
+    exp = _tiny(selector, rounds=5)
+    data = _data(exp, host_tables=True)
+    pre = PreselectConfig(pool_size=6, streamed=True)
+    res = ScanEngine(exp, data=data, pre_selection=pre).run()
+    assert res.pools.shape == (exp.rounds, 6)
+    for t in range(exp.rounds):
+        assert set(res.selections[t]) <= set(res.pools[t])
+    assert np.isfinite(res.accuracy).all()
+    again = ScanEngine(exp, data=data, pre_selection=pre).run()
+    np.testing.assert_array_equal(res.pools, again.pools)
+    np.testing.assert_array_equal(res.selections, again.selections)
+
+
+def test_streamed_mode_rejects_resume_flags():
+    """The host-paced streamed loop has no scan carry to snapshot."""
+    exp = _tiny("random", rounds=4)
+    eng = ScanEngine(exp, data=_data(exp, host_tables=True),
+                     pre_selection=PreselectConfig(pool_size=6,
+                                                   streamed=True))
+    with pytest.raises(ValueError, match="streamed pre-selection"):
+        eng.run(resume=True)
+    with pytest.raises(ValueError, match="streamed pre-selection"):
+        eng.run(until_round=2)
+
+
+# ---------------------------------------------- oracle regret (satellite 2)
+
+def test_tier1_pool_recall_beats_random_pooling():
+    """On a synthetic population with KNOWN true client values the
+    tier-1 heuristic pool (bandit means + recency, equalised here so
+    value ordering dominates) recalls the oracle top-m at a rate far
+    above a random pool of the same size — the reason tier 1 is a
+    heuristic scorer rather than a uniform subsample."""
+    n, pool, m, t, total = 200, 40, 20, 50, 100
+    rng = np.random.default_rng(11)
+    true_v = rng.permutation(np.linspace(0.05, 0.95, n)).astype(np.float32)
+    # a mid-training bandit whose empirical means track the true values
+    counts = np.full(n, 4.0, np.float32)
+    noisy = np.clip(true_v + rng.normal(0, 0.02, n), 0, 1).astype(np.float32)
+    state = gpcb.BanditState(
+        reward_sum=jnp.asarray(noisy * counts),
+        count=jnp.asarray(counts),
+        round=jnp.asarray(float(t), jnp.float32),
+        prev_acc=jnp.asarray(0.5, jnp.float32),
+        prev_loss=jnp.asarray(1.0, jnp.float32))
+    u = gpcb.gpcb_values(state, total)
+    scores = gpcb.pool_scores(
+        u, jnp.zeros(n), jnp.zeros(n), jnp.asarray(float(t)), total,
+        jnp.asarray(rng.random(n), jnp.float32))
+    heur_pool = np.asarray(gpcb.pool_topk(scores, pool))
+    oracle = set(np.argsort(-true_v)[:m].tolist())
+
+    heur_recall = len(oracle & set(heur_pool.tolist())) / m
+    rand_recall = np.mean([
+        len(oracle & set(rng.choice(n, pool, replace=False).tolist())) / m
+        for _ in range(50)])
+    assert heur_recall >= 0.9, f"heuristic recall collapsed: {heur_recall}"
+    assert heur_recall > rand_recall + 0.3, \
+        f"tier-1 pool no better than random: {heur_recall} vs {rand_recall}"
+
+
+def test_tier1_pool_explores_never_selected_clients():
+    """Never-selected clients (count = 0) carry the exploration bonus and
+    out-rank an average observed client — tier 1 cannot starve coverage."""
+    n, total = 20, 100
+    state = gpcb.init_state(n)
+    # clients 0..9 observed with mean 0.5; 10..19 never selected
+    state = state._replace(
+        reward_sum=jnp.asarray([1.0] * 10 + [0.0] * 10, jnp.float32),
+        count=jnp.asarray([2.0] * 10 + [0.0] * 10, jnp.float32),
+        round=jnp.asarray(10.0, jnp.float32))
+    u = gpcb.gpcb_values(state, total)
+    scores = np.asarray(gpcb.pool_scores(
+        u, jnp.zeros(n), jnp.full(n, -1.0), jnp.asarray(10.0), total,
+        jnp.zeros(n)))
+    assert scores[10:].min() > scores[:10].max()
+
+
+# --------------------------------------- mask composition (satellite 1)
+
+def _composed_selection(pool, base, k, seed=0):
+    """Run the tier-2 mask path: compose, score, take top-k."""
+    n = len(pool)
+    cand = compose_selection_mask(jnp.asarray(pool), jnp.asarray(base), k)
+    rng = np.random.default_rng(seed)
+    state = gpcb.init_state(n)
+    scores = gpcb.selection_scores(
+        state, jnp.asarray(rng.random(n), jnp.float32),
+        jnp.asarray(rng.random(n), jnp.float32),
+        jnp.asarray(1.0), 10, avail=cand)
+    order = np.argsort(-np.asarray(scores), kind="stable")
+    return np.asarray(cand), np.asarray(scores), order[:k]
+
+
+def test_all_excluded_round_falls_back_without_nans():
+    """Pool and base masks disjoint (the pathological round): the
+    composed mask falls back to BASE, and selection scores stay
+    NaN-free so top-k still returns a valid cohort."""
+    n, k = 10, 3
+    pool = np.zeros(n, bool)
+    pool[:5] = True
+    base = np.zeros(n, bool)
+    base[7:] = True          # pool ∧ base = ∅  → fall back to base
+    cand, scores, sel = _composed_selection(pool, base, k)
+    np.testing.assert_array_equal(cand, base)
+    assert not np.isnan(scores).any()
+    assert all(s in {7, 8, 9} for s in sel)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_property_pool_availability_quarantine_masks_compose(data):
+        """For random (N, K, pool mask, availability mask, quarantine
+        mask): a client excluded by ANY mask is never selected when the
+        composed pool has enough candidates; otherwise selection falls
+        back to availability ∧ ¬quarantine — and scores never go NaN."""
+        n = data.draw(st.integers(6, 24), label="n")
+        k = data.draw(st.integers(1, 4), label="k")
+        bools = st.lists(st.booleans(), min_size=n, max_size=n)
+        pool = np.asarray(data.draw(bools, label="pool"), bool)
+        avail = np.asarray(data.draw(bools, label="avail"), bool)
+        quar = np.asarray(data.draw(bools, label="quarantine"), bool)
+        base = avail & ~quar
+        cand, scores, sel = _composed_selection(pool, base, k)
+        assert not np.isnan(scores).any()
+        if (pool & base).sum() >= k:
+            np.testing.assert_array_equal(cand, pool & base)
+            # excluded by any mask ⇒ never in the cohort
+            assert all(pool[s] and avail[s] and not quar[s] for s in sel)
+        else:
+            np.testing.assert_array_equal(cand, base)
+            if base.sum() >= k:
+                assert all(base[s] for s in sel)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_pool_availability_quarantine_masks_compose():
+        """Placeholder so the property pin shows as SKIPPED, not absent,
+        on hypothesis-less environments."""

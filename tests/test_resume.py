@@ -94,6 +94,51 @@ def test_chunked_and_killed_runs_bit_identical(tmp_path, selector, layout):
                                       err_msg=f"{selector}/{layout} carry")
 
 
+@pytest.mark.parametrize("selector", ["gpfl", "random"])
+def test_pooled_chunked_and_killed_runs_bit_identical(tmp_path, selector):
+    """The ISSUE-9 resume pin: tiered pre-selection adds carried state
+    (per-client last-selected rounds feeding the tier-1 recency term)
+    that must round-trip through the msgpack snapshot — a pooled run
+    chunked, killed at round 3 and resumed replays the unsegmented
+    pooled run's selections, metrics AND pool streams bit-for-bit."""
+    from repro.fl.preselect import PreselectConfig
+    exp = _tiny(selector)
+    data = _data(exp)
+    pre = PreselectConfig(pool_size=6)
+    path = str(tmp_path / "snap.ckpt")
+
+    base = ScanEngine(exp, data=data, pre_selection=pre).run()
+    chunked = ScanEngine(exp, data=data, pre_selection=pre,
+                         snapshot_every=2, snapshot_path=path).run()
+    _assert_runs_equal(base, chunked, f"pooled/{selector} chunked")
+    np.testing.assert_array_equal(base.pools, chunked.pools)
+
+    os.remove(path)
+    killed = ScanEngine(exp, data=data, pre_selection=pre,
+                        snapshot_every=2, snapshot_path=path)
+    assert killed.run(until_round=3) is None
+    resumed = ScanEngine(exp, data=data, pre_selection=pre,
+                         snapshot_every=2, snapshot_path=path).run(
+                             resume=True)
+    _assert_runs_equal(base, resumed, f"pooled/{selector} resumed")
+    np.testing.assert_array_equal(base.pools, resumed.pools)
+
+
+def test_pooled_snapshot_fingerprint_rejects_plain_engine(tmp_path):
+    """A snapshot written by a POOLED engine must be refused by a plain
+    one (and vice versa) — pre_selection is part of the fingerprint."""
+    from repro.fl.preselect import PreselectConfig
+    exp = _tiny("gpfl")
+    data = _data(exp)
+    path = str(tmp_path / "snap.ckpt")
+    ScanEngine(exp, data=data, pre_selection=PreselectConfig(pool_size=6),
+               snapshot_every=2, snapshot_path=path).run(until_round=2)
+    plain = ScanEngine(exp, data=data, snapshot_every=2,
+                       snapshot_path=path)
+    with pytest.raises(ValueError, match="fingerprint"):
+        plain.run(resume=True)
+
+
 def test_resume_with_no_snapshot_is_a_fresh_run(tmp_path):
     """resume=True against a missing file must run from round 0 (restart
     scripts stay idempotent), not crash."""
@@ -152,26 +197,35 @@ if HAVE_HYPOTHESIS:
            layout=st.sampled_from(["tree", "flat"]),
            rounds=st.integers(4, 8),
            every=st.integers(1, 4),
-           kill=st.integers(1, 7))
+           kill=st.integers(1, 7),
+           pool=st.sampled_from([None, 6, 64]))
     def test_property_kill_resume_parity(tmp_path_factory, selector, layout,
-                                         rounds, every, kill):
-        """For random (T, snapshot cadence, kill round k): kill at round
-        k → restore → finish equals the uninterrupted run bit-for-bit."""
+                                         rounds, every, kill, pool):
+        """For random (T, snapshot cadence, kill round k, pre-selection
+        pool): kill at round k → restore → finish equals the
+        uninterrupted run bit-for-bit — including the pooled engines'
+        extra carried state and recorded pool streams."""
+        from repro.fl.preselect import PreselectConfig
         kill = min(kill, rounds - 1)
+        pre = None if pool is None else PreselectConfig(pool_size=pool)
         exp = _tiny(selector, rounds=rounds)
         data = _data(exp)
         path = str(tmp_path_factory.mktemp("resume")
                    / f"{selector}-{layout}-{rounds}-{every}-{kill}.ckpt")
 
-        base = ScanEngine(exp, param_layout=layout, data=data).run()
+        base = ScanEngine(exp, param_layout=layout, data=data,
+                          pre_selection=pre).run()
         ScanEngine(exp, param_layout=layout, data=data, snapshot_every=every,
+                   pre_selection=pre,
                    snapshot_path=path).run(until_round=kill)
         resumed = ScanEngine(exp, param_layout=layout, data=data,
-                             snapshot_every=every,
+                             snapshot_every=every, pre_selection=pre,
                              snapshot_path=path).run(resume=True)
         _assert_runs_equal(
             base, resumed,
-            f"{selector}/{layout} T={rounds} n={every} k={kill}")
+            f"{selector}/{layout} T={rounds} n={every} k={kill} P={pool}")
+        if pre is not None:
+            np.testing.assert_array_equal(base.pools, resumed.pools)
 else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_property_kill_resume_parity():
