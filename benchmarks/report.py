@@ -1,15 +1,156 @@
-"""Regenerate the data tables in EXPERIMENTS.md from results/*.json.
+"""Render the committed bench trajectory (``BENCH_*.json``) as markdown.
 
-    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+Every CI run commits one ``BENCH_<bench>.json`` per bench lane (engine,
+flat, selectors, sweep, resume, async, robust, preselect, obs, ...) —
+but each file only tells its own story.  This tool aggregates ALL of
+them into one report::
+
+    PYTHONPATH=src python -m benchmarks.report                # all BENCH_*.json
+    PYTHONPATH=src python -m benchmarks.report --dir . --only obs,robust
+    PYTHONPATH=src python -m benchmarks.report legacy table2  # results/*.json
+
+* a **trajectory table** — one row per bench section: row count, how
+  many boolean gates (``*_match`` / ``*_ok`` / ``all_finite`` /
+  ``deterministic`` / ``bytes_match``) pass, and the section's headline
+  number (best speedup, worst overhead_pct, ...);
+* a **detail table per section** — rows have heterogeneous keys across
+  benches (each lane records what it measures), so columns are the
+  union of that section's keys, rendered generically (floats to 4
+  significant digits, bools as pass/FAIL, lists summarised).
+
+The ``legacy`` subcommand keeps the old ``results/*.json`` renderers
+(dry-run / roofline / Table II) that EXPERIMENTS.md's §-analysis
+sections were generated with.
 """
 from __future__ import annotations
 
+import argparse
+import glob
 import json
 import os
 import sys
 
+#: row keys treated as boolean pass/fail gates in the trajectory summary.
+GATE_SUFFIXES = ("_match", "_ok", "all_finite", "deterministic",
+                 "quarantine_reduces_share")
+
+#: per-section headline metric: (key, aggregate) — first key present wins.
+HEADLINES = (
+    ("speedup", max),
+    ("overhead_pct", max),
+    ("sim_speedup_to_target", max),
+    ("rounds_per_s", max),
+    ("us_per_call", min),
+    ("gpfl_acc", max),
+)
+
+
+def _is_gate(key, value) -> bool:
+    return isinstance(value, bool) and (key.endswith(GATE_SUFFIXES[:2])
+                                        or key in GATE_SUFFIXES)
+
+
+def _fmt(v) -> str:
+    """One markdown cell, whatever the row stored."""
+    if v is None:
+        return "–"
+    if isinstance(v, bool):
+        return "pass" if v else "**FAIL**"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    if isinstance(v, list):
+        if all(isinstance(x, bool) for x in v):
+            return f"{sum(v)}/{len(v)} pass"
+        return f"[{len(v)} values]"
+    if isinstance(v, dict):
+        return f"{{{len(v)} keys}}"
+    s = str(v)
+    return s if len(s) <= 48 else s[:45] + "..."
+
+
+def load_benches(bench_dir: str, only=None):
+    """``{bench_name: (rows_by_section, meta)}`` from BENCH_*.json files."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        if only and name not in only:
+            continue
+        with open(path) as fh:
+            data = json.load(fh)
+        meta = data.pop("meta", {})
+        out[name] = ({k: v for k, v in data.items() if v}, meta)
+    return out
+
+
+def _gates(rows):
+    """(passed, total) over every boolean gate value in the rows."""
+    passed = total = 0
+    for r in rows:
+        for k, v in r.items():
+            if _is_gate(k, v):
+                total += 1
+                passed += bool(v)
+            elif isinstance(v, list) and v and \
+                    all(isinstance(x, bool) for x in v) and \
+                    k.endswith(GATE_SUFFIXES[:2]):
+                total += len(v)
+                passed += sum(v)
+    return passed, total
+
+
+def _headline(rows) -> str:
+    for key, agg in HEADLINES:
+        vals = [r[key] for r in rows
+                if isinstance(r.get(key), (int, float))
+                and not isinstance(r.get(key), bool)]
+        if vals:
+            return f"{key}={agg(vals):.4g}"
+    return "–"
+
+
+def trajectory_table(benches) -> None:
+    """The one-table overview: every bench section, gates and headline."""
+    print("| bench | section | mode | backend | rows | gates passed | "
+          "headline |")
+    print("|---|---|---|---|---|---|---|")
+    for name, (sections, meta) in benches.items():
+        for sec, rows in sections.items():
+            passed, total = _gates(rows)
+            gate_txt = "–" if total == 0 else (
+                f"{passed}/{total}" + ("" if passed == total else " ⚠"))
+            print(f"| {name} | {sec} | {meta.get('mode', '?')} | "
+                  f"{meta.get('backend', '?')} | {len(rows)} | {gate_txt} | "
+                  f"{_headline(rows)} |")
+
+
+def section_table(name: str, rows) -> None:
+    """Generic detail table over the union of the section's row keys."""
+    cols = ["name"] + sorted({k for r in rows for k in r} - {"name"})
+    print(f"\n#### {name} ({len(rows)} rows)\n")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        print("| " + " | ".join(_fmt(r.get(c)) for c in cols) + " |")
+
+
+def bench_report(bench_dir: str, only=None, details: bool = True) -> int:
+    benches = load_benches(bench_dir, only)
+    if not benches:
+        print(f"no BENCH_*.json files under {bench_dir}", file=sys.stderr)
+        return 1
+    print("## Bench trajectory\n")
+    trajectory_table(benches)
+    if details:
+        for name, (sections, _) in benches.items():
+            for sec, rows in sections.items():
+                section_table(f"{name} · {sec}", rows)
+    return 0
+
+
+# --------------------------------------------------- legacy results/*.json
 
 def load(path):
+    """JSONL records from ``path`` ([] when missing)."""
     if not os.path.exists(path):
         return []
     out = []
@@ -21,6 +162,7 @@ def load(path):
 
 
 def fmt_bytes(n):
+    """Human-readable byte count."""
     for unit in ("B", "KB", "MB", "GB", "TB"):
         if abs(n) < 1024 or unit == "TB":
             return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
@@ -29,15 +171,17 @@ def fmt_bytes(n):
 
 
 def dryrun_table(path, mesh_label):
+    """The §Dry-run lower+compile table (one row per arch × shape)."""
     recs = load(path)
-    print(f"\n#### Mesh {mesh_label} — {sum(r['status']=='ok' for r in recs)}"
+    print(f"\n#### Mesh {mesh_label} — {sum(r['status'] == 'ok' for r in recs)}"
           f"/{len(recs)} pairs lower+compile OK\n")
     print("| arch | shape | compile s | args/device | temp/device | "
           "collectives (count → bytes/device/step, scan bodies ×1) |")
     print("|---|---|---|---|---|---|")
     for r in recs:
         if r["status"] != "ok":
-            print(f"| {r['arch']} | {r['shape']} | FAIL | | | {r.get('error','')[:60]} |")
+            print(f"| {r['arch']} | {r['shape']} | FAIL | | | "
+                  f"{r.get('error', '')[:60]} |")
             continue
         m = r["memory"]
         c = r["collectives"]
@@ -46,13 +190,13 @@ def dryrun_table(path, mesh_label):
         print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
               f"{fmt_bytes(m.get('argument_size_in_bytes', 0))} | "
               f"{fmt_bytes(m.get('temp_size_in_bytes', 0))} | "
-              f"{' '.join(cparts for cparts in cparts)} → "
+              f"{' '.join(cparts)} → "
               f"{fmt_bytes(c.get('total_bytes', 0))} |")
 
 
 def roofline_table(path):
+    """The §Roofline bound table (last record per arch × shape)."""
     recs = [r for r in load(path) if "error" not in r]
-    # keep last record per (arch, shape)
     seen = {}
     for r in recs:
         seen[(r["arch"], r["shape"])] = r
@@ -67,6 +211,7 @@ def roofline_table(path):
 
 
 def table2(path):
+    """The Table II analogue accuracy table."""
     recs = load(path)
     if not recs:
         return
@@ -79,8 +224,8 @@ def table2(path):
               f"{r['mean_round_s']:.3f} |")
 
 
-if __name__ == "__main__":
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+def legacy(which: str) -> int:
+    """The pre-PR-10 results/*.json renderers, unchanged."""
     if which in ("all", "dryrun"):
         print("### §Dry-run")
         dryrun_table("results/dryrun_1pod.json", "16×16 (256 chips)")
@@ -92,3 +237,28 @@ if __name__ == "__main__":
         print("\n### Table II analogue (synthetic FEMNIST, 250 rounds, "
               "N=100)")
         table2("results/table2_medium.json")
+    return 0
+
+
+def main(argv=None) -> int:
+    """CLI: bench trajectory by default, ``legacy [which]`` for the old
+    results/*.json tables."""
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "legacy":
+        return legacy(argv[1] if len(argv) > 1 else "all")
+    ap = argparse.ArgumentParser(prog="benchmarks.report",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=".",
+                    help="directory holding BENCH_*.json (default: cwd)")
+    ap.add_argument("--only", default=None,
+                    help="comma-list of bench names (default: all found)")
+    ap.add_argument("--summary", action="store_true",
+                    help="trajectory table only, no per-section details")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    return bench_report(args.dir, only, details=not args.summary)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,7 +23,10 @@ fault-injection × robust-aggregation head-to-head (see
 pre-selection's oracle parity (pool >= N bit-identity, hard CI gate)
 and recording the large-K streamed scaling rows — rounds/sec and
 device-resident table bytes bounded by the pool, not the population
-(see ``_preselect_micro``).
+(see ``_preselect_micro``), and the ``obs`` bench pinning the
+observability layer's off-mode bit-parity (hard CI gate), the ≤5%
+counter overhead budget, the exact-bytes accounting contract and the
+GPFL-vs-random accuracy-within-comm-budget table (see ``_obs_micro``).
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks everything
 (CI); ``--full`` runs paper-scale rounds; ``--json PATH`` additionally
@@ -961,6 +964,139 @@ def _preselect_micro(quick: bool = True):
     return rows
 
 
+def _obs_micro(quick: bool = True):
+    """Observability layer (ISSUE 10): off-parity gate + counter overhead.
+
+    Four row kinds:
+
+    * ``kind="parity"`` — the off-mode contract: ``telemetry="off"``
+      (the spec default) must be bit-identical (selections AND accuracy)
+      to ``telemetry="counters"`` for all four selectors × both param
+      layouts × sync and buffered aggregation — counters are EXTRA scan
+      outs, never a perturbation of the traced round math.
+      ``parity_match`` is a **hard CI gate** — 16 rows, all must pass.
+    * ``kind="overhead"`` — the cost of always-on counters: warm
+      steady-state rounds/sec of the dispatch-bound config, off vs
+      counters.  The ≤5% ``overhead_pct`` budget is a hard CI gate.
+    * ``kind="bytes"`` — the accounting contract: the engine's
+      ``bytes_down``/``bytes_up`` totals equal the hand computation
+      participants × padded-Dp × 4 from the analytic cost model.
+    * ``kind="comm_budget"`` — the headline: GPFL vs random best
+      accuracy within communication-byte budgets
+      (``RunSet.accuracy_at_comm_budget`` over measured counters) — the
+      accuracy-at-bytes table EXPERIMENTS.md records.
+    """
+    import dataclasses
+    from repro.api import ExecutionSpec, Plan, Session
+    from repro.configs.paper import SELECTORS, femnist_experiment
+    from repro.fl.engine import ScanEngine
+    from repro.fl.latency import AggregationConfig
+    from repro.obs.cost import bytes_per_round
+
+    rows = []
+
+    # ---- off-mode bit-parity (hard gate, 16 rows) ----
+    p_rounds = 8 if quick else 16
+    p_base = dataclasses.replace(
+        femnist_experiment("2spc", "gpfl"), rounds=p_rounds, n_clients=32,
+        clients_per_round=4, samples_per_client_mean=40,
+        samples_per_client_std=10, local_iters=3, local_batch_size=16,
+        eval_size=256)
+    buf = AggregationConfig(kind="buffered", buffer_size=2,
+                            staleness_discount=0.5)
+    for layout in ("tree", "flat"):
+        for sel in SELECTORS:
+            exp = dataclasses.replace(p_base, selector=sel,
+                                      name=f"obs-parity-{sel}")
+            for agg_name, agg_kw in (("sync", {}),
+                                     ("buffered",
+                                      dict(scenario="stragglers",
+                                           aggregation=buf))):
+                off = ScanEngine(exp, param_layout=layout,
+                                 telemetry="off", **agg_kw).run()
+                cnt = ScanEngine(exp, param_layout=layout,
+                                 telemetry="counters", **agg_kw).run()
+                rows.append({
+                    "name": f"obs_parity_{agg_name}_{layout}_{sel}",
+                    "kind": "parity", "selector": sel,
+                    "param_layout": layout, "aggregation": agg_name,
+                    "rounds": p_rounds,
+                    "parity_match": bool(
+                        np.array_equal(off.selections, cnt.selections)
+                        and np.array_equal(off.accuracy, cnt.accuracy)),
+                })
+
+    # ---- counter overhead (≤5% rounds/sec budget) ----
+    o_rounds = 24 if quick else 60
+    o_exp = dataclasses.replace(
+        femnist_experiment("2spc", "gpfl"), rounds=o_rounds, n_clients=64,
+        clients_per_round=4, samples_per_client_mean=40,
+        samples_per_client_std=10, local_iters=3, local_batch_size=16,
+        eval_size=256, name="obs-overhead")
+
+    def best_wall(telemetry, repeats=3):
+        eng = ScanEngine(o_exp, telemetry=telemetry)
+        eng.run()                              # compile + warm
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            eng.run()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    off_wall = best_wall("off")
+    cnt_wall = best_wall("counters")
+    off_rps, cnt_rps = o_rounds / off_wall, o_rounds / cnt_wall
+    rows.append({
+        "name": "obs_overhead_counters", "kind": "overhead",
+        "rounds": o_rounds, "config": "dispatch_bound",
+        "timing": "warm steady-state best-of-3 (compile excluded)",
+        "off_wall_s": off_wall, "counters_wall_s": cnt_wall,
+        "off_rounds_per_s": off_rps, "counters_rounds_per_s": cnt_rps,
+        "overhead_pct": (off_rps - cnt_rps) / off_rps * 100.0,
+    })
+
+    # ---- bytes accounting vs the analytic model ----
+    b_exp = dataclasses.replace(p_base, name="obs-bytes")
+    res = ScanEngine(b_exp, telemetry="counters").run()
+    measured = int(res.metrics["bytes_up"].sum()
+                   + res.metrics["bytes_down"].sum())
+    analytic = int(bytes_per_round(b_exp)) * p_rounds
+    rows.append({
+        "name": "obs_bytes_accounting", "kind": "bytes",
+        "rounds": p_rounds,
+        "clients_per_round": int(b_exp.clients_per_round),
+        "measured_total_bytes": measured,
+        "analytic_total_bytes": analytic,
+        "bytes_match": measured == analytic,
+    })
+
+    # ---- GPFL vs random accuracy within comm budgets ----
+    # The quickstart regime (N=40, K=5 — 12.5% participation, where
+    # selection actually matters; at K/N ≈ 1/3 random coverage washes
+    # the selector out), shortened in --quick.
+    c_rounds = 16 if quick else 40
+    c_base = dataclasses.replace(
+        femnist_experiment("2spc", "gpfl"), rounds=c_rounds, n_clients=40,
+        clients_per_round=5, samples_per_client_mean=60,
+        samples_per_client_std=10, local_iters=4, local_batch_size=16,
+        eval_size=256, name="obs-comm")
+    plan = Plan(c_base).sweep(selector=["gpfl", "random"]).seeds(2)
+    rs = Session(plan, ExecutionSpec(backend="scan",
+                                     telemetry="counters")).run()
+    per_round = bytes_per_round(c_base)
+    for frac in (0.25, 0.5, 1.0):
+        budget = int(per_round * c_rounds * frac)
+        acc = rs.accuracy_at_comm_budget(budget)
+        rows.append({
+            "name": f"obs_comm_budget_{int(frac * 100)}pct",
+            "kind": "comm_budget", "rounds": c_rounds,
+            "budget_bytes": budget, "budget_fraction": frac,
+            "gpfl_acc": acc["gpfl"], "random_acc": acc["random"],
+        })
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -970,7 +1106,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-list: table2,fig4,fig5,fig6,fig7,kernels,"
                          "engine,flat,selectors,sweep,resume,async,robust,"
-                         "preselect")
+                         "preselect,obs")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write engine/flat/kernel results as JSON "
                          "(e.g. BENCH_engine.json, BENCH_flat.json)")
@@ -982,7 +1118,7 @@ def main(argv=None) -> None:
     only = set(args.only.split(",")) if args.only else \
         {"table2", "fig4", "fig5", "fig6", "fig7", "kernels", "engine",
          "flat", "selectors", "sweep", "resume", "async", "robust",
-         "preselect"}
+         "preselect", "obs"}
     bench_data = {}
 
     print("name,us_per_call,derived")
@@ -1140,6 +1276,34 @@ def main(argv=None) -> None:
                       f"dev_bytes={r['device_table_bytes']};"
                       f"full_bytes={r['full_table_bytes']};"
                       f"subset_ok={int(r['subset_ok'])}",
+                      flush=True)
+
+    if "obs" in only:
+        obs_rows = _obs_micro(quick=args.quick)
+        bench_data["obs"] = obs_rows
+        for r in obs_rows:
+            if r["kind"] == "parity":
+                print(f"{r['name']},0,"
+                      f"parity_match={int(r['parity_match'])}",
+                      flush=True)
+            elif r["kind"] == "overhead":
+                print(f"{r['name']},"
+                      f"{r['counters_wall_s'] / r['rounds'] * 1e6:.0f},"
+                      f"off_rps={r['off_rounds_per_s']:.2f};"
+                      f"counters_rps={r['counters_rounds_per_s']:.2f};"
+                      f"overhead_pct={r['overhead_pct']:.1f}",
+                      flush=True)
+            elif r["kind"] == "bytes":
+                print(f"{r['name']},0,"
+                      f"measured={r['measured_total_bytes']};"
+                      f"analytic={r['analytic_total_bytes']};"
+                      f"bytes_match={int(r['bytes_match'])}",
+                      flush=True)
+            else:
+                print(f"{r['name']},0,"
+                      f"budget={r['budget_bytes']};"
+                      f"gpfl={r['gpfl_acc']:.4f};"
+                      f"random={r['random_acc']:.4f}",
                       flush=True)
 
     if "kernels" in only:

@@ -23,8 +23,8 @@ Plan, so the legacy kwarg surface keeps working.
 from repro.api.capabilities import (AGGREGATION_KINDS, AGGREGATORS,
                                     BACKENDS, CAPABILITIES, FAULT_MODES,
                                     PARAM_LAYOUTS, SCENARIO_KINDS,
-                                    SELECTORS, Capability, SpecView,
-                                    support_matrix, validate)
+                                    SELECTORS, TELEMETRY_MODES, Capability,
+                                    SpecView, support_matrix, validate)
 from repro.api.journal import RunJournal, cell_fingerprint
 from repro.api.plan import Plan
 from repro.api.results import CellFailure, RunSet
@@ -34,7 +34,8 @@ from repro.api.spec import ExecutionSpec, spec_from_kwargs
 __all__ = [
     "AGGREGATION_KINDS", "AGGREGATORS", "BACKENDS", "CAPABILITIES",
     "FAULT_MODES", "PARAM_LAYOUTS", "SCENARIO_KINDS", "SELECTORS",
-    "Capability", "SpecView", "support_matrix", "validate",
+    "TELEMETRY_MODES", "Capability", "SpecView", "support_matrix",
+    "validate",
     "Plan", "RunJournal", "CellFailure", "RunSet", "Session",
     "ExecutionSpec", "cell_fingerprint", "spec_from_kwargs",
 ]

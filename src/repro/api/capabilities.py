@@ -42,6 +42,10 @@ AGGREGATORS = ("mean", "trimmed_mean", "median", "norm_clip")
 #: tiered pre-selection kinds (see ``repro.fl.preselect.PreselectConfig``).
 PRESELECT_KINDS = ("none", "pooled")
 
+#: observability modes (see ``repro.obs``): in-scan metric counters and the
+#: host-side span tracer.
+TELEMETRY_MODES = ("off", "counters", "trace")
+
 
 @dataclasses.dataclass(frozen=True)
 class Capability:
@@ -107,6 +111,10 @@ class SpecView:
         preselect_streamed: large-population mode — client tables stay
             host-resident and only each round's pool streams to device
             (double-buffered one round ahead).
+        telemetry: observability mode (``"off"`` traces bit-identically to
+            a telemetry-free engine; ``"counters"`` emits per-step metric
+            counters as extra scan outs; ``"trace"`` adds host-side span
+            tracing around dispatches).
     """
     backend: str
     selector: str
@@ -125,6 +133,7 @@ class SpecView:
     preselect_kind: str = "none"
     preselect_pool: int = 0
     preselect_streamed: bool = False
+    telemetry: str = "off"
 
 
 def _shard_constraint(v: SpecView) -> Optional[str]:
@@ -242,6 +251,23 @@ def _preselect_constraint(v: SpecView) -> Optional[str]:
     return None
 
 
+def _telemetry_constraint(v: SpecView) -> Optional[str]:
+    """Structural rule for span tracing: one dispatch per cell.
+
+    ``"trace"`` wraps host-visible dispatch boundaries in spans; a vmapped
+    multi-seed dispatch shares ONE dispatch across seeds, so per-seed spans
+    would be meaningless.  ``"counters"`` has no such rule — its counters
+    are scan outs, which vmap like any other out.
+    """
+    if v.batch_seeds > 1:
+        return (f"telemetry='trace' cannot combine with a batched "
+                f"multi-seed dispatch (batch_seeds={v.batch_seeds}): "
+                f"vmapped seeds share one dispatch, so per-seed spans are "
+                f"meaningless; a Session runs trace cells sequentially "
+                f"(batch_seeds=False)")
+    return None
+
+
 #: The registry.  Order is presentation order in :func:`support_matrix`.
 CAPABILITIES: Tuple[Capability, ...] = (
     Capability("selector", "random",
@@ -309,6 +335,12 @@ CAPABILITIES: Tuple[Capability, ...] = (
                {"scan": "yes (tier-1 pool pass; pool >= K, no "
                         "availability)"},
                constraint=_preselect_constraint),
+    Capability("telemetry", "'off'", {"python": "yes", "scan": "yes"}),
+    Capability("telemetry", "'counters'",
+               {"scan": "yes (in-scan counter outs; batchable)"}),
+    Capability("telemetry", "'trace'",
+               {"scan": "yes (host-side spans; unbatched)"},
+               constraint=_telemetry_constraint),
 )
 
 # the per-selector rows ARE the selector registry — a row added or
@@ -330,6 +362,10 @@ assert tuple(c.value.strip("'") for c in CAPABILITIES
 # ... and for the tiered pre-selection axis
 assert tuple(c.value.strip("'") for c in CAPABILITIES
              if c.dim == "pre_selection") == PRESELECT_KINDS
+
+# ... and for the telemetry axis
+assert tuple(c.value.strip("'") for c in CAPABILITIES
+             if c.dim == "telemetry") == TELEMETRY_MODES
 
 
 def support_matrix() -> str:
@@ -509,5 +545,18 @@ def validate(view: SpecView) -> None:
              f"backend='scan' (the tier-1 pool pass runs inside the "
              f"compiled round body).")
     err = pre_row.constraint(view) if pre_row.constraint else None
+    if err:
+        fail(err + ".")
+
+    tel_rows = _rows_for("telemetry")
+    if view.telemetry not in tel_rows:
+        fail(f"unknown telemetry {view.telemetry!r}; expected one of "
+             f"{TELEMETRY_MODES}.")
+    tel_row = tel_rows[view.telemetry]
+    if view.backend not in tel_row.backends:
+        fail(f"telemetry={view.telemetry!r} requires backend='scan' (the "
+             f"metric counters are extra scan outs of the compiled round "
+             f"body).")
+    err = tel_row.constraint(view) if tel_row.constraint else None
     if err:
         fail(err + ".")

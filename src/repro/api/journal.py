@@ -42,6 +42,8 @@ import json
 import os
 from typing import Dict, Iterator, List, Set
 
+import numpy as np
+
 from repro.api.results import run_from_record, run_to_record
 
 #: journal line schema version, stamped into every record.
@@ -179,6 +181,22 @@ class RunJournal:
         """Journaled runs as ``{fingerprint: RunResult}`` (last wins)."""
         return {rec["key"]: run_from_record(rec["run"])
                 for rec in self.records() if "run" in rec}
+
+    def metrics_by_key(self) -> Dict[str, dict]:
+        """Journaled telemetry counters as ``{fingerprint: metrics}``.
+
+        Only cells run with ``telemetry != "off"`` carry a metrics dict;
+        off-mode cells are absent here (last record per key wins, like
+        :meth:`results_by_key`).  Complements
+        ``repro.obs.export.join_journal``, which goes the other way —
+        grafting sink-exported metrics onto journaled runs.
+        """
+        out: Dict[str, dict] = {}
+        for rec in self.records():
+            m = rec.get("run", {}).get("metrics")
+            if m is not None:
+                out[rec["key"]] = {k: np.asarray(v) for k, v in m.items()}
+        return out
 
     def failures_by_key(self) -> Dict[str, dict]:
         """Journaled failures as ``{fingerprint: record}``.

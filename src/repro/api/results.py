@@ -56,6 +56,11 @@ def run_to_record(run) -> dict:
     # non-pooled runs omit the key (same byte-compatibility contract)
     if getattr(run, "pools", None) is not None:
         rec["pools"] = np.asarray(run.pools).tolist()
+    # telemetry runs carry the per-round counter dict; off-mode runs
+    # omit the key (same byte-compatibility contract)
+    if getattr(run, "metrics", None) is not None:
+        rec["metrics"] = {k: np.asarray(v).tolist()
+                          for k, v in run.metrics.items()}
     return rec
 
 
@@ -76,6 +81,10 @@ def run_from_record(rec: dict):
         else np.asarray(rec["sim_time_s"], np.float32),
         pools=None if rec.get("pools") is None
         else np.asarray(rec["pools"], np.int32),
+        metrics=None if rec.get("metrics") is None
+        else {k: np.asarray(v, np.int64 if k.startswith("bytes_")
+                            else np.float32)
+              for k, v in rec["metrics"].items()},
     )
 
 
@@ -184,6 +193,40 @@ class RunSet:
         if by is None:
             return float(np.mean([r.accuracy_at(frac) for r in self.runs]))
         return {val: float(np.mean([r.accuracy_at(frac) for r in runs]))
+                for val, runs in self._groups(by).items()}
+
+    def accuracy_at_comm_budget(self, budget_bytes: int,
+                                by: Optional[str] = "selector") -> Dict:
+        """Best accuracy reached within a communication-byte budget.
+
+        For each run the cumulative up+down traffic per round comes from
+        ``repro.obs.cost.bytes_curve`` — measured telemetry counters when
+        the run carries them (``telemetry="counters"``), the analytic
+        cost model otherwise — and the run's score is the RUNNING-MAX
+        accuracy over the rounds affordable under ``budget_bytes``
+        (0.0 when not even round one fits).  Monotone non-decreasing in
+        the budget by construction, so sweeping budgets yields the
+        accuracy-vs-bytes tradeoff curve directly.
+
+        Args:
+            budget_bytes: total allowed bytes (client↔server, both
+                directions), e.g. ``50e6`` for 50 MB.
+            by: config field to group on; ``None`` pools every run.
+
+        Returns:
+            ``{group_value: mean_best_accuracy}`` (or a single float when
+            ``by`` is ``None``).
+        """
+        from repro.obs.cost import bytes_curve
+
+        def best(run) -> float:
+            cum = np.asarray(bytes_curve(run), np.int64)
+            n = int(np.searchsorted(cum, int(budget_bytes), side="right"))
+            return float(np.max(run.accuracy[:n])) if n else 0.0
+
+        if by is None:
+            return float(np.mean([best(r) for r in self.runs]))
+        return {val: float(np.mean([best(r) for r in runs]))
                 for val, runs in self._groups(by).items()}
 
     def to_frame(self):

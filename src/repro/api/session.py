@@ -112,6 +112,14 @@ class Session:
                     f"{cell.selector!r}, seeds={len(idxs)}) is not "
                     f"runnable under {self.spec}: {err}") from err
         self._data_cache: Dict[Tuple, tuple] = {}
+        self._sink = None
+        if spec.telemetry != "off" and spec.telemetry_dir:
+            # local import: repro.obs.export is a leaf, but importing it
+            # here (not module level) keeps the api package import light
+            from repro.obs.export import MetricSink
+            os.makedirs(spec.telemetry_dir, exist_ok=True)
+            self._sink = MetricSink(
+                os.path.join(spec.telemetry_dir, "metrics.jsonl"))
 
     def _group_cells(self) -> List[Tuple[List[int], object]]:
         """Group cell indices by config-modulo-seed (plan order kept)."""
@@ -159,11 +167,21 @@ class Session:
         return os.path.join(self.spec.snapshot_dir,
                             f"{_slug(cell.name)}-{fp[:10]}.ckpt")
 
+    def _trace_path(self, cell) -> str:
+        """This cell's Chrome trace file under ``spec.telemetry_dir``."""
+        fp = cell_fingerprint(cell)
+        return os.path.join(self.spec.telemetry_dir,
+                            f"{_slug(cell.name)}-{fp[:10]}.trace.json")
+
     def _finish(self, i: int, results: List, res) -> None:
-        """Record a finished cell: result slot + durable journal line."""
+        """Record a finished cell: result slot + durable journal line +
+        (telemetry on, ``telemetry_dir`` set) a metric-sink line."""
         results[i] = res
         if self.journal is not None:
             self.journal.append(res)
+        if (self._sink is not None
+                and getattr(res, "metrics", None) is not None):
+            self._sink.write(res.config, res.metrics)
 
     def _fail(self, i: int, failures: List, err: BaseException) -> None:
         """Record a raising cell (graceful degradation): a CellFailure
@@ -261,8 +279,12 @@ class Session:
                         shared_jit = eng._jit
                     else:
                         eng._jit = shared_jit
-                    self._finish(i, results,
-                                 eng.run(resume=self.spec.resume))
+                    res = eng.run(resume=self.spec.resume)
+                    if (self.spec.telemetry == "trace"
+                            and self.spec.telemetry_dir
+                            and eng.tracer is not None):
+                        eng.tracer.save(self._trace_path(cell))
+                    self._finish(i, results, res)
                 except Exception as err:
                     self._fail(i, failures, err)
         if self.journal is not None and skipped:

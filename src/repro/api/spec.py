@@ -75,6 +75,17 @@ class ExecutionSpec:
             a ``PreselectConfig`` at construction; pooled cells never
             seed-batch and at ``pool_size >= N`` run bit-identical to
             the full-population engine.
+        telemetry: observability mode (see ``repro.obs``) — ``"off"``
+            (the engine traces bit-identically to a telemetry-free
+            build), ``"counters"`` (deterministic per-round/per-event
+            metric counters emitted as extra scan outs, surfaced as
+            ``RunResult.metrics``) or ``"trace"`` (counters plus a
+            host-side span tracer emitting Chrome trace-event JSON;
+            never seed-batches).
+        telemetry_dir: directory for exported telemetry artifacts —
+            the per-cell metric sink (``metrics.jsonl``) and, under
+            ``"trace"``, per-cell ``*.trace.json`` files.  ``None``
+            keeps metrics in-memory only (on each ``RunResult``).
     """
     backend: str = "python"
     param_layout: str = "tree"
@@ -89,6 +100,8 @@ class ExecutionSpec:
     faults: Any = None
     aggregator: Any = "mean"
     pre_selection: Any = None
+    telemetry: str = "off"
+    telemetry_dir: Optional[str] = None
 
     def __post_init__(self):
         """Coerce scenario/aggregation/faults/aggregator shorthands into
@@ -174,7 +187,8 @@ class ExecutionSpec:
             quarantine=int(self.aggregator.quarantine_after),
             preselect_kind=self.preselect_kind,
             preselect_pool=int(self.pre_selection.pool_size),
-            preselect_streamed=bool(self.pre_selection.streamed))
+            preselect_streamed=bool(self.pre_selection.streamed),
+            telemetry=self.telemetry)
 
     def validate(self, exp, n_seeds: int = 1) -> None:
         """Fail fast (before anything compiles) on unsupported combos.
@@ -200,7 +214,8 @@ class ExecutionSpec:
                     shard_clients=self.shard_clients,
                     use_gp_kernel=self.use_gp_kernel,
                     faults=self.faults, aggregator=self.aggregator,
-                    pre_selection=self.pre_selection)
+                    pre_selection=self.pre_selection,
+                    telemetry=self.telemetry)
 
 
 def spec_from_kwargs(backend: str = "python", param_layout: str = "tree",

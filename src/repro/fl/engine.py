@@ -142,6 +142,7 @@ the batched-vs-sequential throughput (``BENCH_sweep.json``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import hashlib
@@ -187,6 +188,9 @@ from repro.fl.server import (fedavg, make_table_evaluator, server_update_flat,
 from repro.fl.simulation import (INIT_CHUNK, RunResult, _build_data,
                                  init_gp_phase)
 from repro.models import small
+from repro.obs import metrics as obs_metrics
+from repro.obs.cost import BYTES_PER_PARAM, padded_param_count
+from repro.obs.trace import SpanTracer
 from repro.utils.pytree import tree_zeros_like
 
 #: selectors the compiled engine supports — all four of the paper's
@@ -234,6 +238,9 @@ class RoundCarry(NamedTuple):
     #: (N,) f32 round each client was last selected (−1 = never), feeding
     #: the tier-1 pool recency term ((1,) stub when pre-selection is off)
     last_sel: jnp.ndarray
+    #: (N,) i32 cumulative per-client selection tally, feeding the
+    #: selection-entropy counter ((1,) stub when telemetry is off)
+    sel_counts: jnp.ndarray
 
 
 def _copy_carry(c: RoundCarry) -> RoundCarry:
@@ -278,7 +285,8 @@ def _sync_pool_stubs() -> dict:
                 clock=jnp.zeros((), jnp.float32),
                 pool_ok=jnp.zeros((1,), bool),
                 strikes=jnp.zeros((1,), jnp.int32),
-                last_sel=jnp.zeros((1,), jnp.float32))
+                last_sel=jnp.zeros((1,), jnp.float32),
+                sel_counts=jnp.zeros((1,), jnp.int32))
 
 
 def _resolve_gp_impl(gp_impl: str, use_gp_kernel: bool) -> str:
@@ -366,7 +374,8 @@ class ScanEngine:
                  snapshot_path: Optional[str] = None,
                  faults: Union[str, FaultConfig, None] = None,
                  aggregator: Union[str, RobustConfig, None] = "mean",
-                 pre_selection: Union[str, PreselectConfig, None] = None):
+                 pre_selection: Union[str, PreselectConfig, None] = None,
+                 telemetry: str = "off"):
         """Validate the combination against the capability registry, build
         data/trainer/streams (see the class docstring for every knob;
         ``data`` optionally injects a prebuilt ``(store, eval_x, eval_y)``
@@ -395,6 +404,14 @@ class ScanEngine:
         # engine built before this layer existed
         self.pre = make_preselect(pre_selection)
         self.pooled = self.pre.kind == "pooled"
+        # the telemetry axis: ``counters`` gates every metric-emission
+        # branch in the scan bodies exactly like ``robust_active`` /
+        # ``pooled`` gate theirs — with it False the engine traces
+        # bit-identically to an engine built before repro.obs existed
+        self.telemetry = telemetry
+        self.counters = telemetry in ("counters", "trace")
+        self.tracing = telemetry == "trace"
+        self.tracer = SpanTracer() if self.tracing else None
         validate_capabilities(SpecView(
             backend="scan", selector=exp.selector, param_layout=param_layout,
             scenario_kind=getattr(scenario, "kind", scenario or "full"),
@@ -406,7 +423,8 @@ class ScanEngine:
             quarantine=int(self.robust.quarantine_after),
             preselect_kind=self.pre.kind,
             preselect_pool=int(self.pre.pool_size),
-            preselect_streamed=bool(self.pre.streamed)))
+            preselect_streamed=bool(self.pre.streamed),
+            telemetry=telemetry))
         # buffered: buffer size M (updates per aggregation event) and the
         # event count E — at M = K every event is a full sync round
         self.buffer_m = self.aggregation.resolved_buffer(
@@ -540,6 +558,7 @@ class ScanEngine:
         has_faults, robust_active = self.has_faults, self.robust_active
         quarantine = int(robust.quarantine_after)
         pooled, P = self.pooled, self.pool_size
+        counters = self.counters
 
         if is_flat:
             if use_kernel:
@@ -819,6 +838,39 @@ class ScanEngine:
                 rep["last_sel"] = carry.last_sel.at[ids].set(
                     jnp.asarray(t, jnp.float32))
                 out["pool"] = pool_ids_r
+            if counters:
+                # the telemetry axis: per-round metric counters as extra
+                # scan outs — everything here reuses values the body
+                # already materialised, and NONE of it is traced when the
+                # gate is off (the off-mode bit-parity contract)
+                rep["sel_counts"] = carry.sel_counts.at[ids].add(1)
+                if robust_active:
+                    n_del = jnp.sum(valid.astype(jnp.float32))
+                elif has_lat:
+                    n_del = jnp.sum(done.astype(jnp.float32))
+                else:
+                    n_del = jnp.asarray(float(K), jnp.float32)
+                if is_gpfl and d_i is not None:
+                    align = obs_metrics.alignment_cosine(
+                        gp_scores, obs_metrics.cohort_sq_norms(d_i))
+                else:
+                    align = jnp.zeros((), jnp.float32)
+                out.update({
+                    "m_participants": jnp.asarray(float(K), jnp.float32),
+                    "m_delivered": n_del,
+                    "m_selection_entropy":
+                        obs_metrics.selection_entropy(rep["sel_counts"]),
+                    "m_gp_alignment": align,
+                    "m_screened": (K - n_del) if robust_active
+                        else jnp.zeros((), jnp.float32),
+                    "m_quarantined": jnp.sum(
+                        (rep["strikes"] >= quarantine)
+                        .astype(jnp.float32)) if quarantine > 0
+                        else jnp.zeros((), jnp.float32),
+                    "m_pool_recall": jnp.mean(
+                        jnp.take(pool_mask, ids).astype(jnp.float32))
+                        if pooled else jnp.ones((), jnp.float32),
+                })
             return carry._replace(**rep), out
 
         return body
@@ -829,6 +881,7 @@ class ScanEngine:
         N, T = self.store.n_clients, self.exp.rounds
         quarantine = int(self.robust.quarantine_after)
         pooled = self.pooled
+        counters = self.counters
 
         def run_scan(params, direction, bandit, latest_gp, fc_cov, fc_prev,
                      key, streams, tables, eval_tabs):
@@ -839,6 +892,8 @@ class ScanEngine:
                 pool["strikes"] = jnp.zeros((N,), jnp.int32)
             if pooled:
                 pool["last_sel"] = jnp.full((N,), -1.0, jnp.float32)
+            if counters:
+                pool["sel_counts"] = jnp.zeros((N,), jnp.int32)
             carry0 = RoundCarry(params, direction, bandit, latest_gp,
                                 jnp.zeros((N,), bool), key, fc_cov, fc_prev,
                                 **pool)
@@ -870,6 +925,7 @@ class ScanEngine:
         faults, has_faults = self.faults, self.has_faults
         quarantine = int(self.robust.quarantine_after)
         pooled, P = self.pooled, self.pool_size
+        counters = self.counters
 
         def prefill(params, direction, bandit, latest_gp, fc_cov, fc_prev,
                     key, streams, tables):
@@ -937,6 +993,10 @@ class ScanEngine:
                     faults, fkey, hit, w_i, d_i, params_in)
             strikes = jnp.zeros((N,) if quarantine > 0 else (1,),
                                 jnp.int32)
+            # the prefill is dispatch slot 0: its cohort seeds the
+            # selection tally the event body's entropy counter reads
+            sel_counts = jnp.zeros((N,), jnp.int32).at[ids].add(1) \
+                if counters else jnp.zeros((1,), jnp.int32)
             return RoundCarry(
                 params=params, direction=direction, bandit=bandit,
                 latest_gp=latest_gp, seen=jnp.zeros((N,), bool), key=key,
@@ -946,7 +1006,8 @@ class ScanEngine:
                 pool_ids=ids, pool_ready=jnp.take(lat[0], ids),
                 pool_ver=jnp.zeros((K,), jnp.int32),
                 clock=jnp.zeros((), jnp.float32),
-                pool_ok=pool_ok, strikes=strikes, last_sel=last_sel)
+                pool_ok=pool_ok, strikes=strikes, last_sel=last_sel,
+                sel_counts=sel_counts)
 
         return prefill
 
@@ -977,6 +1038,7 @@ class ScanEngine:
         has_faults, robust_active = self.has_faults, self.robust_active
         quarantine = int(robust.quarantine_after)
         pooled, P = self.pooled, self.pool_size
+        counters = self.counters
 
         if is_flat:
             if use_kernel:
@@ -1210,6 +1272,39 @@ class ScanEngine:
                 rep["last_sel"] = carry.last_sel.at[n_ids].set(
                     jnp.asarray(t, jnp.float32))
                 out["pool"] = pool_ids_r
+            if counters:
+                # per-event metric counters (extra scan outs; never
+                # traced with the gate off — the off-mode parity
+                # contract).  The selection tally counts DISPATCHES
+                # (n_ids), matching the sync body's per-round cohort.
+                rep["sel_counts"] = carry.sel_counts.at[n_ids].add(1)
+                if robust_active:
+                    n_del = jnp.sum(valid.astype(jnp.float32))
+                else:
+                    n_del = jnp.asarray(float(M), jnp.float32)
+                if is_gpfl:
+                    align = obs_metrics.alignment_cosine(
+                        gp_scores, obs_metrics.cohort_sq_norms(d_flush))
+                else:
+                    align = jnp.zeros((), jnp.float32)
+                out.update({
+                    "m_participants": jnp.asarray(float(M), jnp.float32),
+                    "m_delivered": n_del,
+                    "m_selection_entropy":
+                        obs_metrics.selection_entropy(rep["sel_counts"]),
+                    "m_gp_alignment": align,
+                    "m_screened": (M - n_del) if robust_active
+                        else jnp.zeros((), jnp.float32),
+                    "m_quarantined": jnp.sum(
+                        (strikes >= quarantine)
+                        .astype(jnp.float32)) if quarantine > 0
+                        else jnp.zeros((), jnp.float32),
+                    "m_pool_recall": jnp.mean(
+                        jnp.take(pool_mask, n_ids).astype(jnp.float32))
+                        if pooled else jnp.ones((), jnp.float32),
+                    "m_staleness_hist":
+                        obs_metrics.staleness_histogram(staleness),
+                })
             return carry._replace(**rep), out
 
         return body
@@ -1414,6 +1509,11 @@ class ScanEngine:
                        int(self.robust.quarantine_after)),
             "pre_selection": (self.pre.kind, int(self.pre.pool_size),
                               int(self.pre.seed), bool(self.pre.streamed)),
+            # telemetry never changes the math, but ``counters`` changes
+            # the carry/out STRUCTURE (sel_counts + m_* buffers), so an
+            # off-mode snapshot must not restore into a counters engine
+            # (or vice versa); "counters" and "trace" share structure
+            "counters": self.counters,
         }
         return hashlib.sha1(
             json.dumps(payload, sort_keys=True).encode()).hexdigest()
@@ -1440,7 +1540,8 @@ class ScanEngine:
                         clock=jnp.zeros((), jnp.float32),
                         pool_ok=jnp.ones((K,), bool),
                         strikes=jnp.zeros((1,), jnp.int32),
-                        last_sel=jnp.zeros((1,), jnp.float32))
+                        last_sel=jnp.zeros((1,), jnp.float32),
+                        sel_counts=jnp.zeros((1,), jnp.int32))
         else:
             pool = _sync_pool_stubs()
         if self.robust.quarantine_after > 0:
@@ -1448,6 +1549,9 @@ class ScanEngine:
         if self.pooled:
             pool["last_sel"] = jnp.full((self.store.n_clients,), -1.0,
                                         jnp.float32)
+        if self.counters:
+            pool["sel_counts"] = jnp.zeros((self.store.n_clients,),
+                                           jnp.int32)
         return RoundCarry(params, direction, bandit, latest_gp,
                           jnp.zeros((self.store.n_clients,), bool), key,
                           fc_cov, fc_prev, **pool)
@@ -1467,6 +1571,13 @@ class ScanEngine:
             outs["sim_time"] = np.zeros((R,), np.float32)
         if self.pooled:
             outs["pool"] = np.zeros((R, self.pool_size), np.int32)
+        if self.counters:
+            for k in obs_metrics.metric_out_keys(self.buffered):
+                if k.endswith(obs_metrics.STALENESS_HIST_KEY):
+                    outs[k] = np.zeros((R, obs_metrics.STALENESS_BINS),
+                                       np.float32)
+                else:
+                    outs[k] = np.zeros((R,), np.float32)
         return outs
 
     def _write_snapshot(self, carry: RoundCarry, outs: dict,
@@ -1552,7 +1663,9 @@ class ScanEngine:
                     "resume/until_round are unavailable")
             return run_pooled_stream(self.exp, self.pre,
                                      data=self._stream_data,
-                                     log_every=self.log_every)
+                                     log_every=self.log_every,
+                                     telemetry=self.telemetry,
+                                     tracer=self.tracer)
         if self.snapshot_every <= 0:
             if resume or until_round is not None:
                 raise ValueError(
@@ -1561,6 +1674,13 @@ class ScanEngine:
                     "without a snapshot cadence")
             return self._run_single()
         return self._run_chunked(resume=resume, until_round=until_round)
+
+    def _span(self, name: str, **args):
+        """A tracer span under ``telemetry="trace"``, else a no-op
+        context — so dispatch sites wrap unconditionally."""
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, **args)
 
     def _run_single(self) -> RunResult:
         """The snapshot-free fast path: one dispatch for the whole run
@@ -1571,10 +1691,12 @@ class ScanEngine:
         t0 = time.perf_counter()
         # params/direction are donated to the scan — pass fresh copies so
         # the cached initial state survives for the next run()
-        carry, out = jax.block_until_ready(self._compiled()(
-            jax.tree.map(jnp.copy, params), jax.tree.map(jnp.copy, direction),
-            bandit, latest_gp, fc_cov, fc_prev, key, streams,
-            self.store.tables(), (self.eval_x, self.eval_y)))
+        with self._span("scan_dispatch", rounds=int(self.events)):
+            carry, out = jax.block_until_ready(self._compiled()(
+                jax.tree.map(jnp.copy, params),
+                jax.tree.map(jnp.copy, direction),
+                bandit, latest_gp, fc_cov, fc_prev, key, streams,
+                self.store.tables(), (self.eval_x, self.eval_y)))
         scan_wall = time.perf_counter() - t0
         self.final_carry = carry
 
@@ -1604,9 +1726,10 @@ class ScanEngine:
             # which the chunk's whole-carry donation must never consume
             (params, direction, bandit, latest_gp, fc_cov, fc_prev, key,
              _s) = self._inputs
-            carry = _copy_carry(self._compiled_prefill()(
-                params, direction, bandit, latest_gp, fc_cov, fc_prev,
-                key, streams, tables))
+            with self._span("prefill_dispatch"):
+                carry = _copy_carry(self._compiled_prefill()(
+                    params, direction, bandit, latest_gp, fc_cov, fc_prev,
+                    key, streams, tables))
         else:
             # round 0: fresh copies, so the cached initial state survives
             # the chunk's whole-carry donation
@@ -1621,15 +1744,17 @@ class ScanEngine:
             n = min(self.snapshot_every, stop - t)
             ts = jnp.arange(t, t + n)
             chunk_streams = tuple(s[t + ofs:t + n + ofs] for s in streams)
-            carry, out = jax.block_until_ready(self._compiled_chunk()(
-                carry, ts, chunk_streams, tables, eval_tabs))
+            with self._span("chunk_dispatch", start=int(t), rounds=int(n)):
+                carry, out = jax.block_until_ready(self._compiled_chunk()(
+                    carry, ts, chunk_streams, tables, eval_tabs))
             for name, v in out.items():
                 outs[name][t:t + n] = np.asarray(v)
             t += n
             ran += n
             # device_get inside the save copies the carry to host BEFORE
             # the next chunk donates (and invalidates) its buffers
-            self._write_snapshot(carry, outs, t)
+            with self._span("snapshot_write", rounds_done=int(t)):
+                self._write_snapshot(carry, outs, t)
         wall = time.perf_counter() - t0
         self.final_carry = carry
 
@@ -1648,6 +1773,15 @@ class ScanEngine:
                              minlength=N).astype(np.int64)
         sim = outs.get("sim_time")
         pool = outs.get("pool")
+        metrics = None
+        if self.counters:
+            # in-scan counts → host-side exact byte accounting (int64,
+            # derived from the flat workspace's padded size Dp — the
+            # wire slab both layouts logically move)
+            dp = padded_param_count(small.count_params(exp.model))
+            metrics = obs_metrics.finalize_metrics(
+                obs_metrics.MetricBuffer.from_scan_outs(outs),
+                param_bytes=dp * BYTES_PER_PARAM)
         return RunResult(
             config=exp,
             accuracy=np.asarray(outs["acc"], np.float32),
@@ -1664,6 +1798,7 @@ class ScanEngine:
             else np.asarray(sim, np.float32),
             pools=None if pool is None
             else np.asarray(pool, np.int32),
+            metrics=metrics,
         )
 
 
@@ -1715,6 +1850,11 @@ class BatchedSeedEngine:
             but must resolve to ``kind="none"`` — the tier-1 pool pass
             carries per-cell state (``last_sel``), so pooled cells run
             sequentially (a Session routes them that way too).
+        telemetry: ``"off"`` or ``"counters"`` — counter outs vmap like
+            any other scan out, so counters cells still batch.
+            ``"trace"`` is rejected: vmapped seeds share ONE dispatch,
+            so per-seed spans would be meaningless (a Session runs trace
+            cells sequentially).
 
     Raises:
         ValueError: cells disagree on anything but seed/name, or the
@@ -1730,10 +1870,17 @@ class BatchedSeedEngine:
                  shard_clients: int = 1,
                  faults: Union[str, FaultConfig, None] = None,
                  aggregator: Union[str, RobustConfig, None] = "mean",
-                 pre_selection: Union[str, PreselectConfig, None] = None):
+                 pre_selection: Union[str, PreselectConfig, None] = None,
+                 telemetry: str = "off"):
         """Build per-seed state, stack it, and jit the vmapped scan."""
         if not cells:
             raise ValueError("BatchedSeedEngine needs at least one cell")
+        if telemetry == "trace":
+            raise ValueError(
+                "telemetry='trace' cannot combine with the batched seed "
+                "axis (vmapped seeds share one dispatch, so per-seed "
+                "spans are meaningless); run trace cells sequentially "
+                "(a Session does this automatically)")
         flt, rb = make_faults(faults), make_robust(aggregator)
         if (flt.mode != "none" or rb.aggregator != "mean"
                 or rb.quarantine_after > 0):
@@ -1765,7 +1912,9 @@ class BatchedSeedEngine:
             aggregation_kind=agg.kind,
             shard_clients=int(shard_clients), use_gp_kernel=use_gp_kernel,
             clients_per_round=base.clients_per_round,
-            batch_seeds=len(cells)))
+            batch_seeds=len(cells), telemetry=telemetry))
+        self.telemetry = telemetry
+        self.counters = telemetry == "counters"
         key0 = dataclasses.replace(base, seed=0, name="")
         for c in cells[1:]:
             if dataclasses.replace(c, seed=0, name="") != key0:
@@ -1778,7 +1927,7 @@ class BatchedSeedEngine:
                        param_layout=param_layout, use_ee=use_ee,
                        scenario=scenario,
                        data=data_provider(c) if data_provider else None,
-                       defer_init=True)
+                       defer_init=True, telemetry=telemetry)
             for c in cells]
         self._batched_inputs = self._stack_inputs()
         if base.selector == "gpfl":
@@ -1889,6 +2038,16 @@ class BatchedSeedEngine:
             selections = np.asarray(out["ids"][s])
             counts = np.bincount(selections.reshape(-1),
                                  minlength=N).astype(np.int64)
+            metrics = None
+            if self.counters:
+                # counter outs carry the seed axis like every other out —
+                # slice seed s's rows and finalise exactly as the
+                # sequential engine does
+                dp = padded_param_count(small.count_params(cell.model))
+                metrics = obs_metrics.finalize_metrics(
+                    obs_metrics.MetricBuffer.from_scan_outs(
+                        {k: v[s] for k, v in out.items()}),
+                    param_bytes=dp * BYTES_PER_PARAM)
             results.append(RunResult(
                 config=cell,
                 accuracy=np.asarray(out["acc"][s], np.float32),
@@ -1898,6 +2057,7 @@ class BatchedSeedEngine:
                                      np.float32),
                 selection_counts=counts,
                 coverage=np.asarray(out["coverage"][s], np.float32),
+                metrics=metrics,
             ))
         return results
 
@@ -1931,7 +2091,8 @@ def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                         aggregator: Union[str, RobustConfig,
                                           None] = "mean",
                         pre_selection: Union[str, PreselectConfig,
-                                             None] = None) -> RunResult:
+                                             None] = None,
+                        telemetry: str = "off") -> RunResult:
     """One-shot convenience over ``ScanEngine`` — the ``backend="scan"``
     entry point of ``repro.fl.run_experiment`` (see that function and the
     ``ScanEngine`` docstring for every knob)."""
@@ -1941,4 +2102,5 @@ def run_experiment_scan(exp: FLExperimentConfig, *, log_every: int = 0,
                       aggregation=aggregation,
                       shard_clients=shard_clients, faults=faults,
                       aggregator=aggregator,
-                      pre_selection=pre_selection).run()
+                      pre_selection=pre_selection,
+                      telemetry=telemetry).run()

@@ -129,7 +129,8 @@ def compose_selection_mask(pool_mask, base, k: int):
 
 
 def run_pooled_stream(exp, pre: PreselectConfig, *, data=None,
-                      log_every: int = 0):
+                      log_every: int = 0, telemetry: str = "off",
+                      tracer=None):
     """Host-paced pooled runner for populations too big to live on device.
 
     Per round t: (1) dispatch round t's cohort train + server update on
@@ -154,6 +155,12 @@ def run_pooled_stream(exp, pre: PreselectConfig, *, data=None,
             HOST-table store (``_build_data(exp, seed,
             host_tables=True)``); ``None`` builds one.
         log_every: print progress every N rounds (0 = silent).
+        telemetry: ``"off"`` | ``"counters"`` | ``"trace"`` — counters
+            are accumulated HOST-side here (this runner is host-paced),
+            mirroring the scan engine's per-round metric rows.
+        tracer: a ``repro.obs.trace.SpanTracer`` wrapping the jit
+            dispatches and the ``device_put`` table slabs (``None`` =
+            no tracing).
 
     Returns:
         A ``repro.fl.simulation.RunResult`` (with per-round ``pools``).
@@ -169,7 +176,12 @@ def run_pooled_stream(exp, pre: PreselectConfig, *, data=None,
                                  update_global_direction)
     from repro.fl.simulation import RunResult, _build_data, init_gp_phase
     from repro.models import small
+    from repro.obs.metrics import MetricBuffer, finalize_metrics
+    from repro.obs.cost import BYTES_PER_PARAM, padded_param_count
+    from repro.obs.trace import NullTracer
 
+    counters = telemetry in ("counters", "trace")
+    tr = tracer if tracer is not None else NullTracer()
     store, eval_x, eval_y = data if data is not None \
         else _build_data(exp, exp.seed, host_tables=True)
     N, K, T = store.n_clients, exp.clients_per_round, exp.rounds
@@ -240,25 +252,34 @@ def run_pooled_stream(exp, pre: PreselectConfig, *, data=None,
                 ids, acc, loss, jnp.mean(seen.astype(jnp.float32)))
 
     def _fetch(ids_host):
-        return (jax.device_put(x_np[ids_host]),
-                jax.device_put(y_np[ids_host]),
-                jax.device_put(sizes_np[ids_host]))
+        with tr.span("device_put_pool", rows=int(len(ids_host))):
+            return (jax.device_put(x_np[ids_host]),
+                    jax.device_put(y_np[ids_host]),
+                    jax.device_put(sizes_np[ids_host]))
 
     t0 = time.perf_counter()
-    cur_pool = _pool(bandit, latest_gp, last_sel, 0, pjit[0])
+    with tr.span("tier1_pool", round=0):
+        cur_pool = _pool(bandit, latest_gp, last_sel, 0, pjit[0])
     cur_tab = _fetch(np.asarray(cur_pool))
     ids_hist, acc_hist, loss_hist, cov_hist, pool_hist = [], [], [], [], []
+    # host-side counter accumulation (this runner has no scan outs);
+    # the tally feeds the same cumulative selection entropy the engine
+    # computes in-scan
+    mbuf = MetricBuffer() if counters else None
+    tally = np.zeros(N, np.int64)
     state = (params, direction, bandit, latest_gp, last_sel, seen)
     for t in range(T):
         key, kt = jax.random.split(key)
         sel_in = jnp.asarray(sel_stream[t])
-        out = _round(*state, t, cur_pool, *cur_tab, sel_in, kt)
+        with tr.span("round_dispatch", round=t):
+            out = _round(*state, t, cur_pool, *cur_tab, sel_in, kt)
         pool_hist.append(np.asarray(cur_pool))
         if t + 1 < T:
             # stale-by-one prefetch: round t+1's pool from the state
             # ENTERING round t, so the table copy overlaps round t
-            nxt_pool = _pool(state[2], state[3], state[4], t + 1,
-                             pjit[t + 1])
+            with tr.span("tier1_pool", round=t + 1):
+                nxt_pool = _pool(state[2], state[3], state[4], t + 1,
+                                 pjit[t + 1])
             nxt_tab = _fetch(np.asarray(nxt_pool))
             cur_pool, cur_tab = nxt_pool, nxt_tab
         state = out[:6]
@@ -266,6 +287,14 @@ def run_pooled_stream(exp, pre: PreselectConfig, *, data=None,
         acc_hist.append(out[7])
         loss_hist.append(out[8])
         cov_hist.append(out[9])
+        if counters:
+            np.add.at(tally, np.asarray(out[6]), 1)
+            tot = float(tally.sum())
+            p = tally[tally > 0] / tot
+            mbuf.append(participants=float(K), delivered=float(K),
+                        selection_entropy=float(-(p * np.log(p)).sum()),
+                        gp_alignment=0.0, screened=0.0, quarantined=0.0,
+                        pool_recall=1.0)
         if log_every and (t + 1) % log_every == 0:
             print(f"[{exp.name}] streamed round {t+1}/{T} "
                   f"acc={float(out[7]):.4f}")
@@ -284,4 +313,8 @@ def run_pooled_stream(exp, pre: PreselectConfig, *, data=None,
         selection_counts=counts,
         coverage=np.asarray([float(c) for c in cov_hist], np.float32),
         pools=np.stack(pool_hist),
+        metrics=finalize_metrics(
+            mbuf.arrays(),
+            param_bytes=(padded_param_count(small.count_params(exp.model))
+                         * BYTES_PER_PARAM)) if counters else None,
     )

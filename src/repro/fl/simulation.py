@@ -53,6 +53,12 @@ class RunResult:
         pools: pooled pre-selection runs only — (T, P) tier-1 candidate
             pool ids per round (ascending), the oracle-parity harness's
             subset witness.  ``None`` for full-population runs.
+        metrics: telemetry runs only (``telemetry="counters"|"trace"``) —
+            per-step counter arrays keyed by name (participants,
+            delivered, bytes_up/bytes_down, selection_entropy,
+            gp_alignment, screened, quarantined, pool_recall, and — for
+            buffered runs — the (E, B) staleness histogram); see
+            ``repro.obs.metrics``.  ``None`` for ``telemetry="off"``.
     """
     config: FLExperimentConfig
     accuracy: np.ndarray          # (T,)
@@ -63,6 +69,7 @@ class RunResult:
     coverage: np.ndarray          # (T,) fraction of clients seen ≥1×
     sim_time_s: Optional[np.ndarray] = None  # (E,) buffered event clock
     pools: Optional[np.ndarray] = None       # (T, P) tier-1 pool ids
+    metrics: Optional[Dict[str, np.ndarray]] = None  # telemetry counters
 
     def final_accuracy(self, last: int = 10) -> float:
         """Mean accuracy over the final ``last`` rounds (Table II style)."""

@@ -124,6 +124,12 @@ def run_worker(payload_path: str, journal_dir: str, shard: int,
     with open(payload_path) as fh:
         payload = json.load(fh)
     spec = _spec_from_dict(payload["spec"])
+    if spec.telemetry != "off" and spec.telemetry_dir:
+        # each shard writes a PRIVATE metric sink (same single-writer
+        # contract as the journals); the parent merges after the sweep
+        spec = dataclasses.replace(
+            spec, telemetry_dir=os.path.join(spec.telemetry_dir,
+                                             f"worker{shard}"))
     cells = [_config_from_dict(c) for c in payload["cells"]]
     mine = [cells[i] for i in _shard_indices(len(cells), shard, workers)]
     journal = _worker_journal(journal_dir, shard)
@@ -217,6 +223,13 @@ def run_plan_processes(plan, spec: ExecutionSpec, *, workers: int,
     with open(os.path.join(journal_dir, "executor_stats.json"), "w") as fh:
         json.dump({"workers": workers, "cells": len(cells),
                    "restarts": restarts}, fh, indent=2)
+
+    if spec.telemetry != "off" and spec.telemetry_dir:
+        from repro.obs.export import merge_sinks
+        merge_sinks(
+            [os.path.join(spec.telemetry_dir, f"worker{s}",
+                          "metrics.jsonl") for s in range(workers)],
+            os.path.join(spec.telemetry_dir, "metrics.jsonl"))
 
     return merge_shard_journals(cells, journal_dir, workers)
 

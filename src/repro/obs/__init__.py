@@ -1,0 +1,55 @@
+"""`repro.obs` — observability: in-scan counters, cost accounting, tracing.
+
+The subsystem sits behind the ``telemetry="off"|"counters"|"trace"`` axis of
+the capability registry (see ``repro.api.capabilities``):
+
+* ``"off"`` — the engine traces **bit-identically** to an engine built
+  before this subsystem existed (Python-level gate, same pattern as
+  ``robust_active`` / ``pooled``).
+* ``"counters"`` — deterministic per-round / per-event metric counters are
+  emitted as extra `lax.scan` outs from both the sync round body and the
+  buffered event body (:mod:`repro.obs.metrics`), then finalised host-side
+  with exact byte accounting (:mod:`repro.obs.cost`).
+* ``"trace"`` — counters **plus** a host-side span tracer that emits
+  Chrome/Perfetto trace-event JSON around jit dispatches, ``device_put``
+  slabs and snapshot writes (:mod:`repro.obs.trace`).
+
+Per-cell metric rows are persisted to a JSONL sink keyed by
+``cell_fingerprint`` and joined back against the run journal
+(:mod:`repro.obs.export`).
+"""
+from repro.obs.cost import (
+    CostModel,
+    bytes_curve,
+    bytes_per_round,
+    cost_model,
+    flops_per_local_step,
+)
+from repro.obs.export import MetricSink, join_journal, merge_sinks
+from repro.obs.metrics import (
+    METRIC_KEYS,
+    METRIC_PREFIX,
+    STALENESS_BINS,
+    MetricBuffer,
+    finalize_metrics,
+)
+from repro.obs.trace import NullTracer, SpanTracer, validate_trace
+
+__all__ = [
+    "CostModel",
+    "METRIC_KEYS",
+    "METRIC_PREFIX",
+    "MetricBuffer",
+    "MetricSink",
+    "NullTracer",
+    "STALENESS_BINS",
+    "SpanTracer",
+    "bytes_curve",
+    "bytes_per_round",
+    "cost_model",
+    "finalize_metrics",
+    "flops_per_local_step",
+    "join_journal",
+    "merge_sinks",
+    "validate_trace",
+]

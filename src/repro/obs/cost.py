@@ -1,0 +1,138 @@
+"""Analytic communication/compute cost model for any spec × experiment.
+
+Maps an :class:`~repro.configs.paper.FLExperimentConfig` (plus, optionally,
+an ``ExecutionSpec``) to exact bytes-per-round and FLOPs-per-local-step —
+the denominators behind ``RunSet.accuracy_at_comm_budget``, the survey
+yardstick (time-to-accuracy under a communication budget, arXiv 2211.01549).
+
+Byte accounting follows the engine's wire format: every model transfer moves
+one padded flat workspace slab of ``FlatSpec.padded_size`` (Dp) float32
+scalars, regardless of param layout (the tree layout moves the same logical
+payload; Dp is the honest upper bound both layouts share).  All byte math is
+pure Python int — exact at any scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.paper import FLExperimentConfig, SmallModelConfig
+from repro.core.flat import DEFAULT_PAD_TO
+from repro.models.small import count_params
+
+#: Wire bytes per parameter scalar (float32 workspace dtype).
+BYTES_PER_PARAM = 4
+
+
+def padded_param_count(d: int, pad_to: int = DEFAULT_PAD_TO) -> int:
+    """Round a raw param count up to the flat workspace's Dp (pad-to-128)."""
+    return d + ((-d) % max(pad_to, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Static per-step cost profile of one experiment cell.
+
+    ``participants_per_step`` is the cohort K for a sync round or the buffer
+    size M for a buffered event; one "step" is therefore one scan iteration
+    of the matching engine flavour.
+    """
+
+    param_count: int            #: raw model size D (scalars)
+    padded_count: int           #: flat-workspace size Dp (scalars)
+    participants_per_step: int  #: K (sync) or M (buffered)
+    kind: str                   #: "sync" | "buffered"
+    flops_per_local_step: int   #: one client's local SGD step (see below)
+
+    @property
+    def update_bytes(self) -> int:
+        """Wire bytes for one model/update transfer: Dp × 4."""
+        return self.padded_count * BYTES_PER_PARAM
+
+    @property
+    def bytes_per_step(self) -> int:
+        """Total bytes moved per step: down (broadcast) + up (updates)."""
+        return 2 * self.participants_per_step * self.update_bytes
+
+
+def flops_per_local_step(model: SmallModelConfig, batch_size: int) -> int:
+    """Analytic FLOPs for one local SGD step (fwd + bwd) at ``batch_size``.
+
+    Counts multiply-accumulates from the schema shapes (dense: in×out;
+    3×3 SAME conv: 9·cin·cout·H·W at that stage, each conv followed by a
+    2×2 maxpool exactly as ``models.small.forward``), then applies the
+    standard 6× factor: 2 FLOPs/MAC forward, backward ≈ 2× forward.
+    """
+    macs = 0
+    if model.kind == "mlp":
+        dims = (int(math.prod(model.input_shape)),) + tuple(model.hidden) \
+            + (model.num_classes,)
+        for i in range(len(dims) - 1):
+            macs += dims[i] * dims[i + 1]
+    elif model.kind == "cnn":
+        h, w, c_in = model.input_shape
+        ch = (c_in,) + tuple(model.conv_channels)
+        hh, ww = h, w
+        for i in range(len(model.conv_channels)):
+            macs += 9 * ch[i] * ch[i + 1] * hh * ww
+            hh, ww = hh // 2, ww // 2
+        flat = hh * ww * model.conv_channels[-1]
+        macs += flat * model.fc_width
+        macs += model.fc_width * model.num_classes
+    else:
+        raise ValueError(f"unknown model kind {model.kind!r}")
+    return 6 * macs * int(batch_size)
+
+
+def cost_model(exp: FLExperimentConfig,
+               spec: Optional[object] = None) -> CostModel:
+    """Build the :class:`CostModel` for one experiment under one spec.
+
+    ``spec`` is an ``ExecutionSpec`` (or anything exposing
+    ``aggregation_kind`` / a buffered ``aggregation.buffer_size``); ``None``
+    means plain synchronous aggregation.
+    """
+    d = count_params(exp.model)
+    kind = "sync"
+    participants = int(exp.clients_per_round)
+    agg_kind = getattr(spec, "aggregation_kind", "sync") if spec else "sync"
+    if agg_kind == "buffered":
+        kind = "buffered"
+        agg = getattr(spec, "aggregation", None)
+        buf = getattr(agg, "buffer_size", None)
+        participants = int(buf) if buf else participants
+    return CostModel(
+        param_count=d,
+        padded_count=padded_param_count(d),
+        participants_per_step=participants,
+        kind=kind,
+        flops_per_local_step=flops_per_local_step(
+            exp.model, exp.local_batch_size),
+    )
+
+
+def bytes_per_round(exp: FLExperimentConfig,
+                    spec: Optional[object] = None) -> int:
+    """Exact wire bytes per scan step (sync round / buffered event)."""
+    return cost_model(exp, spec).bytes_per_step
+
+
+def bytes_curve(run) -> np.ndarray:
+    """Cumulative bytes after each recorded step of a finished run.
+
+    Prefers the run's **measured** counters (``metrics["bytes_up"]`` +
+    ``metrics["bytes_down"]`` from a ``telemetry="counters"`` run) and falls
+    back to the analytic model for plain runs, so budget queries work on any
+    :class:`~repro.fl.simulation.RunResult`.
+    """
+    metrics = getattr(run, "metrics", None)
+    if metrics and "bytes_up" in metrics and "bytes_down" in metrics:
+        per_step = (np.asarray(metrics["bytes_up"], dtype=np.int64)
+                    + np.asarray(metrics["bytes_down"], dtype=np.int64))
+        return np.cumsum(per_step)
+    steps = len(np.asarray(run.accuracy))
+    per = bytes_per_round(run.config)
+    return np.arange(1, steps + 1, dtype=np.int64) * per

@@ -1,0 +1,133 @@
+"""Per-cell JSONL metric sink, keyed by ``cell_fingerprint``.
+
+Sessions write one sink line per finished telemetry cell; ``launch/sweep.py``
+workers each write their **own** sink file (single-writer discipline, like
+the shard journals) and the parent's merge step unifies them.  Sink lines
+are joined back against the run journal by fingerprint, so metric rows
+survive the same crash/resume paths the results do.
+
+Line format (append-only, last-wins per key, mirrors the journal)::
+
+    {"v": 1, "key": "<cell_fingerprint>", "name": "<config name>",
+     "metrics": {"<metric>": [per-step values...], ...}}
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+#: Sink line schema version.
+SINK_VERSION = 1
+
+
+def _fingerprint(config) -> str:
+    """Cell fingerprint for ``config`` (lazy import: avoids an import cycle
+    with ``repro.api``, whose ``session`` module uses this sink)."""
+    from repro.api.journal import cell_fingerprint
+    return cell_fingerprint(config)
+
+
+class MetricSink:
+    """Append-only JSONL sink of per-cell metric rows.
+
+    Writes are O_APPEND single-line appends (atomic on POSIX for our line
+    sizes), so a crashed writer loses at most its in-flight line; readers
+    apply last-wins per key exactly like :class:`repro.api.journal.RunJournal`.
+    """
+
+    def __init__(self, path: str):
+        """Bind the sink to ``path``, creating parent directories."""
+        self.path = os.path.abspath(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+
+    def write(self, config, metrics: Dict[str, np.ndarray]) -> str:
+        """Append one cell's metric arrays; returns the cell key."""
+        key = _fingerprint(config)
+        line = json.dumps({
+            "v": SINK_VERSION,
+            "key": key,
+            "name": getattr(config, "name", ""),
+            "metrics": {k: np.asarray(v).tolist() for k, v in metrics.items()},
+        })
+        fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            os.write(fd, (line + "\n").encode())
+        finally:
+            os.close(fd)
+        return key
+
+    def _lines(self) -> Iterable[dict]:
+        """Parsed sink lines in file order (skips torn/corrupt tails)."""
+        if not os.path.exists(self.path):
+            return []
+        out = []
+        with open(self.path) as fh:
+            for raw in fh:
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    out.append(json.loads(raw))
+                except json.JSONDecodeError:
+                    continue
+        return out
+
+    def read_by_key(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """All metric rows, keyed by cell fingerprint (last write wins)."""
+        rows: Dict[str, Dict[str, np.ndarray]] = {}
+        for rec in self._lines():
+            rows[rec["key"]] = {
+                k: np.asarray(v) for k, v in rec.get("metrics", {}).items()
+            }
+        return rows
+
+    def names_by_key(self) -> Dict[str, str]:
+        """Config names keyed by cell fingerprint (last write wins)."""
+        return {rec["key"]: rec.get("name", "") for rec in self._lines()}
+
+
+def merge_sinks(paths: Iterable[str], out_path: str) -> int:
+    """Unify worker sink files into one (last-listed worker wins per key).
+
+    Mirrors ``launch.sweep.merge_shard_journals``; returns the number of
+    distinct cells written.  Missing inputs are skipped silently (a worker
+    that ran zero telemetry cells writes no sink).
+    """
+    merged: Dict[str, dict] = {}
+    for p in paths:
+        if not p or not os.path.exists(p):
+            continue
+        for rec in MetricSink(p)._lines():
+            merged[rec["key"]] = rec
+    parent = os.path.dirname(os.path.abspath(out_path))
+    os.makedirs(parent, exist_ok=True)
+    tmp = out_path + ".tmp"
+    with open(tmp, "w") as fh:
+        for rec in merged.values():
+            fh.write(json.dumps(rec) + "\n")
+    os.replace(tmp, out_path)
+    return len(merged)
+
+
+def join_journal(sink: "MetricSink", journal) -> Dict[str, object]:
+    """Join sink metric rows onto journaled results by fingerprint.
+
+    Returns ``{key: RunResult}`` where each result's ``metrics`` field is
+    populated from the sink when the journaled record lacks one (older
+    journals, or sinks written by a different process).  Results with no
+    sink row pass through unchanged.
+    """
+    import dataclasses
+
+    rows = sink.read_by_key()
+    joined: Dict[str, object] = {}
+    for key, run in journal.results_by_key().items():
+        if getattr(run, "metrics", None) is None and key in rows:
+            run = dataclasses.replace(run, metrics=rows[key])
+        joined[key] = run
+    return joined

@@ -1,0 +1,186 @@
+"""Deterministic in-scan metric counters (the ``telemetry="counters"`` path).
+
+The engine's scan bodies (sync round body AND buffered event body) emit one
+metric row per step as extra scan outs.  Each metric is a scalar (or a
+fixed-width histogram) computed from values the body already materialises, so
+``counters`` adds no extra passes over client data.  Out-dict keys carry the
+``m_`` prefix (:data:`METRIC_PREFIX`) so the engine's chunked-scan buffer
+machinery handles them like any other out.
+
+Design rule (pins the off-mode parity gate): every helper here must only be
+*called* when the engine's ``counters`` gate is on.  With the gate off the
+traced computation contains no reference to this module and is bit-identical
+to the pre-subsystem engine.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Prefix marking metric keys inside the engine's scan-out dict.
+METRIC_PREFIX = "m_"
+
+#: Per-step scalar counters emitted by BOTH scan bodies, in emission order.
+#:
+#: * ``participants`` — clients dispatched/flushed this step (cohort K for a
+#:   sync round, buffer size M for a buffered event).
+#: * ``delivered`` — updates that actually entered the server aggregate
+#:   (participants minus straggler-dropped and robust-screened rows).
+#: * ``selection_entropy`` — Shannon entropy (nats) of the cumulative
+#:   per-client selection-count distribution after this step.
+#: * ``gp_alignment`` — mean cosine between cohort gradients and the global
+#:   momentum direction (Eq. 1–3); 0 for non-gpfl selectors.
+#: * ``screened`` — rows rejected by robust finite-row screening this step.
+#: * ``quarantined`` — clients currently at/over the quarantine strike limit.
+#: * ``pool_recall`` — fraction of this step's cohort drawn from the tier-1
+#:   candidate pool (1.0 when pre-selection is off).
+METRIC_KEYS = (
+    "participants",
+    "delivered",
+    "selection_entropy",
+    "gp_alignment",
+    "screened",
+    "quarantined",
+    "pool_recall",
+)
+
+#: Buffered-only histogram key: per-event staleness counts over fixed bins.
+STALENESS_HIST_KEY = "staleness_hist"
+
+#: Fixed staleness-histogram width; staleness ≥ STALENESS_BINS-1 clips into
+#: the last bin.  Fixed so the out-buffer shape is static across chunks.
+STALENESS_BINS = 8
+
+#: Derived host-side keys appended by :func:`finalize_metrics`.
+DERIVED_KEYS = ("bytes_up", "bytes_down")
+
+
+def selection_entropy(counts: jnp.ndarray) -> jnp.ndarray:
+    """Shannon entropy (nats) of a cumulative selection-count vector.
+
+    ``counts`` is the (N,) int32 per-client selection tally carried through
+    the scan.  Returns 0.0 for an all-zero tally (before any selection).
+    """
+    total = jnp.sum(counts).astype(jnp.float32)
+    p = counts.astype(jnp.float32) / jnp.maximum(total, 1.0)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0))
+    return jnp.where(total > 0, ent, 0.0)
+
+
+def cohort_sq_norms(grads) -> jnp.ndarray:
+    """Per-client squared gradient norms → (K,) float32.
+
+    Accepts either the flat layout's ``(K, Dp)`` matrix or a stacked pytree
+    whose leaves carry a leading client axis (the tree layout).
+    """
+    leaves = jax.tree.leaves(grads)
+    return sum(
+        jnp.sum(jnp.square(leaf.astype(jnp.float32)
+                           .reshape(leaf.shape[0], -1)), axis=1)
+        for leaf in leaves
+    )
+
+
+def alignment_cosine(gp_scores: jnp.ndarray,
+                     sq_norms: jnp.ndarray) -> jnp.ndarray:
+    """Mean cosine(d_i, g) over the cohort, from GP scores (Eq. 3).
+
+    ``gp_scores[i] = <d_i, g>/|g|`` already divides by the direction norm, so
+    dividing by each client-gradient norm yields the cosine.  Zero-norm rows
+    (e.g. untrained or screened clients) contribute 0.
+    """
+    norms = jnp.sqrt(jnp.maximum(sq_norms.astype(jnp.float32), 0.0))
+    cos = jnp.where(norms > 0, gp_scores.astype(jnp.float32)
+                    / jnp.maximum(norms, 1e-12), 0.0)
+    return jnp.mean(cos)
+
+
+def staleness_histogram(staleness: jnp.ndarray,
+                        weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Histogram a (M,) staleness vector into :data:`STALENESS_BINS` bins.
+
+    ``weights`` (optional, (M,) float) masks rows — e.g. only count updates
+    that actually flushed.  Staleness clips into the last bin.
+    """
+    bins = jnp.clip(staleness.astype(jnp.int32), 0, STALENESS_BINS - 1)
+    one_hot = jax.nn.one_hot(bins, STALENESS_BINS, dtype=jnp.float32)
+    if weights is not None:
+        one_hot = one_hot * weights.astype(jnp.float32)[:, None]
+    return jnp.sum(one_hot, axis=0)
+
+
+def metric_out_keys(buffered: bool):
+    """Scan-out key names (``m_``-prefixed) for one engine flavour."""
+    keys = [METRIC_PREFIX + k for k in METRIC_KEYS]
+    if buffered:
+        keys.append(METRIC_PREFIX + STALENESS_HIST_KEY)
+    return tuple(keys)
+
+
+def finalize_metrics(raw: Dict[str, np.ndarray], *,
+                     param_bytes: int) -> Dict[str, np.ndarray]:
+    """Host-side finalisation: attach exact byte counters to raw metric rows.
+
+    ``raw`` maps unprefixed metric names → per-step arrays (as produced by
+    :meth:`MetricBuffer.from_scan_outs`).  Bytes are derived — not measured
+    in-scan — so they stay exact int64 at any scale:
+
+    * ``bytes_down`` = participants × param_bytes (server → client model
+      broadcast; one padded ``(Dp,)`` float32 slab per dispatched client),
+    * ``bytes_up``   = delivered × param_bytes (client → server updates that
+      actually arrived).
+    """
+    out = dict(raw)
+    participants = np.asarray(raw["participants"], dtype=np.int64)
+    delivered = np.asarray(raw["delivered"], dtype=np.int64)
+    out["bytes_down"] = participants * int(param_bytes)
+    out["bytes_up"] = delivered * int(param_bytes)
+    return out
+
+
+class MetricBuffer:
+    """Columnar host-side accumulator for per-step metric rows.
+
+    Thin and deliberately dumb: columns are plain Python lists of scalars (or
+    fixed-width vectors), appended one step at a time by host-paced runners
+    (the streamed pre-selection path) or in bulk from scan outs.
+    """
+
+    def __init__(self):
+        """Create an empty buffer with no columns."""
+        self._cols: Dict[str, list] = {}
+
+    @property
+    def n_rows(self) -> int:
+        """Number of appended rows (0 for an empty buffer)."""
+        if not self._cols:
+            return 0
+        return len(next(iter(self._cols.values())))
+
+    def append(self, **values) -> None:
+        """Append one row; every call must supply the same key set."""
+        if self._cols and set(values) != set(self._cols):
+            raise ValueError(
+                f"metric row keys {sorted(values)} != buffer columns "
+                f"{sorted(self._cols)}")
+        for k, v in values.items():
+            self._cols.setdefault(k, []).append(v)
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Materialise columns as numpy arrays (one entry per metric)."""
+        return {k: np.asarray(v) for k, v in self._cols.items()}
+
+    @staticmethod
+    def from_scan_outs(outs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Extract ``m_``-prefixed metric arrays from an engine out-dict.
+
+        Returns unprefixed name → (R, ...) numpy array; empty dict when the
+        engine ran with ``telemetry="off"``.
+        """
+        return {
+            k[len(METRIC_PREFIX):]: np.asarray(v)
+            for k, v in outs.items() if k.startswith(METRIC_PREFIX)
+        }

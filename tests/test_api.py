@@ -64,6 +64,8 @@ def _spec_for(dim, value, backend):
         if value != "none":
             # default pool_size (1024) >= K, clamped to N at engine time
             kw["pre_selection"] = value
+    elif dim == "telemetry":
+        kw["telemetry"] = value
     return ExecutionSpec(**kw), sel
 
 

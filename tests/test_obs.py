@@ -1,0 +1,349 @@
+"""Observability layer (``repro.obs``) — the ISSUE 10 pins.
+
+The contracts:
+
+* ``telemetry="off"`` (the default) is BIT-IDENTICAL to
+  ``telemetry="counters"`` across the full grid — 4 selectors × 2 param
+  layouts × sync/buffered (16 rows): counters are extra scan outs, never
+  a perturbation of the traced round math;
+* counters are deterministic across the snapshot/kill/resume path;
+* ``bytes_up``/``bytes_down`` equal the hand computation
+  participants × padded-Dp × 4 bytes;
+* ``RunSet.accuracy_at_comm_budget`` is monotone non-decreasing in the
+  budget (and 0.0 below round one's cost);
+* the span tracer emits valid Chrome trace-event JSON, and
+  ``telemetry="trace"`` refuses the batched seed axis loudly;
+* the per-cell metric sink round-trips, merges across workers and joins
+  back onto journaled runs.
+"""
+import dataclasses
+import glob
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (ExecutionSpec, Plan, RunJournal, RunSet, Session,
+                       TELEMETRY_MODES, cell_fingerprint)
+from repro.configs.paper import SELECTORS, femnist_experiment
+from repro.fl.engine import BatchedSeedEngine, ScanEngine
+from repro.fl.latency import AggregationConfig
+from repro.fl.simulation import _build_data
+from repro.models import small
+from repro.obs import (CostModel, METRIC_KEYS, MetricBuffer, MetricSink,
+                       SpanTracer, bytes_per_round, cost_model,
+                       finalize_metrics, flops_per_local_step, join_journal,
+                       merge_sinks, validate_trace)
+from repro.obs.cost import BYTES_PER_PARAM, padded_param_count
+from repro.obs.metrics import (STALENESS_BINS, selection_entropy,
+                               staleness_histogram)
+
+
+def _tiny(sel="gpfl", seed=1, rounds=4, **kw):
+    return dataclasses.replace(
+        femnist_experiment("2spc", sel, seed=seed), rounds=rounds,
+        n_clients=16, clients_per_round=4, samples_per_client_mean=40,
+        samples_per_client_std=10, local_iters=3, local_batch_size=16,
+        eval_size=256, **kw)
+
+
+_BUF = AggregationConfig(kind="buffered", buffer_size=2,
+                         staleness_discount=0.5)
+
+
+# -------------------------------------------------- off-mode bit-parity
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    base = _tiny()
+    return base, _build_data(base, base.seed)
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("agg", ["sync", "buffered"])
+@pytest.mark.parametrize("sel", SELECTORS)
+def test_off_mode_bit_parity_grid(tiny_data, sel, agg, layout):
+    """The tentpole contract, all 16 rows: telemetry='off' traces
+    bit-identically to 'counters' — selections AND accuracy."""
+    base, data = tiny_data
+    exp = dataclasses.replace(base, selector=sel, name=f"obs-{sel}")
+    kw = dict(param_layout=layout, data=data)
+    if agg == "buffered":
+        kw.update(scenario="stragglers", aggregation=_BUF)
+    off = ScanEngine(exp, telemetry="off", **kw).run()
+    cnt = ScanEngine(exp, telemetry="counters", **kw).run()
+    np.testing.assert_array_equal(off.selections, cnt.selections)
+    np.testing.assert_array_equal(off.accuracy, cnt.accuracy)
+    np.testing.assert_array_equal(off.loss, cnt.loss)
+    assert off.metrics is None
+    assert set(cnt.metrics) >= set(METRIC_KEYS) | {"bytes_up", "bytes_down"}
+    n_steps = len(cnt.accuracy)
+    for k in METRIC_KEYS:
+        assert np.asarray(cnt.metrics[k]).shape == (n_steps,), k
+    if agg == "buffered":
+        assert cnt.metrics["staleness_hist"].shape == (n_steps,
+                                                       STALENESS_BINS)
+
+
+# ------------------------------------------------- determinism on resume
+
+@pytest.mark.parametrize("agg_kw", [
+    pytest.param({}, id="sync"),
+    pytest.param(dict(scenario="stragglers", aggregation=_BUF),
+                 id="buffered"),
+])
+def test_counters_bit_identical_across_resume(tmp_path, agg_kw):
+    """A run killed mid-scan and resumed from its snapshot reproduces the
+    uninterrupted run's counter rows exactly — for the sync round scan
+    AND the buffered event scan (whose restore template builds the pool
+    carry, sel_counts stub included, from scratch)."""
+    exp = _tiny(rounds=8)
+    straight = ScanEngine(exp, telemetry="counters", **agg_kw).run()
+    path = str(tmp_path / "snap.ckpt")
+    ScanEngine(exp, telemetry="counters", snapshot_every=3,
+               snapshot_path=path, **agg_kw).run(until_round=5)
+    resumed = ScanEngine(exp, telemetry="counters", snapshot_every=3,
+                         snapshot_path=path, **agg_kw).run(resume=True)
+    np.testing.assert_array_equal(straight.selections, resumed.selections)
+    for k in straight.metrics:
+        np.testing.assert_array_equal(np.asarray(straight.metrics[k]),
+                                      np.asarray(resumed.metrics[k]), err_msg=k)
+
+
+def test_counter_snapshots_do_not_cross_restore(tmp_path):
+    """The counters structure bit is part of the snapshot fingerprint:
+    an off-mode snapshot refuses to resume a counters run (the carries
+    differ structurally — sel_counts is (N,) vs the (1,) stub)."""
+    exp = _tiny(rounds=6)
+    path = str(tmp_path / "snap.ckpt")
+    ScanEngine(exp, telemetry="off", snapshot_every=2,
+               snapshot_path=path).run(until_round=4)
+    with pytest.raises(ValueError, match="fingerprint"):
+        ScanEngine(exp, telemetry="counters", snapshot_every=2,
+                   snapshot_path=path).run(resume=True)
+
+
+# ------------------------------------------------------ bytes accounting
+
+def test_bytes_accounting_hand_computed():
+    """bytes_down = participants × padded-Dp × 4 per round; sync full
+    scenario delivers the whole cohort, so bytes_up matches too."""
+    exp = _tiny(rounds=5)
+    res = ScanEngine(exp, telemetry="counters").run()
+    dp = padded_param_count(small.count_params(exp.model))
+    per_client = dp * BYTES_PER_PARAM
+    k = exp.clients_per_round
+    np.testing.assert_array_equal(
+        res.metrics["bytes_down"], np.full(5, k * per_client, np.int64))
+    np.testing.assert_array_equal(
+        res.metrics["bytes_up"], np.full(5, k * per_client, np.int64))
+    assert res.metrics["bytes_up"].dtype == np.int64
+    # the analytic model agrees with the measured run
+    assert bytes_per_round(exp) == 2 * k * per_client
+
+
+def test_cost_model_analytic():
+    """Padded parameter count, per-step bytes and FLOPs come straight
+    from the config (no run needed)."""
+    exp = _tiny()
+    cm = cost_model(exp)
+    d = small.count_params(exp.model)
+    assert isinstance(cm, CostModel)
+    assert cm.param_count == d
+    assert cm.padded_count == d + ((-d) % 128)
+    assert cm.update_bytes == cm.padded_count * BYTES_PER_PARAM
+    assert cm.bytes_per_step == 2 * exp.clients_per_round * cm.update_bytes
+    assert flops_per_local_step(exp.model, exp.local_batch_size) > 0
+    with pytest.raises(ValueError, match="kind"):
+        flops_per_local_step(
+            dataclasses.replace(exp.model, kind="transformer"), 8)
+
+
+# ------------------------------------------------ comm-budget aggregation
+
+def test_accuracy_at_comm_budget_monotone():
+    """Running-max accuracy within affordable rounds ⇒ monotone
+    non-decreasing in the budget; 0.0 below round one's cost."""
+    exp = _tiny(rounds=5)
+    rs = RunSet([ScanEngine(exp, telemetry="counters").run()])
+    per_round = bytes_per_round(exp)
+    assert rs.accuracy_at_comm_budget(per_round - 1, by=None) == 0.0
+    prev = -1.0
+    for n in range(1, 6):
+        acc = rs.accuracy_at_comm_budget(per_round * n, by=None)
+        assert acc >= prev
+        prev = acc
+    # at full budget: the best accuracy the run ever reached
+    assert prev == pytest.approx(float(np.max(rs[0].accuracy)))
+    # off-mode runs fall back to the analytic curve — same grouping API
+    off = RunSet([ScanEngine(exp, telemetry="off").run()])
+    assert off.accuracy_at_comm_budget(per_round * 5)["gpfl"] >= 0.0
+
+
+# ------------------------------------------------------------ span tracer
+
+def test_trace_emits_valid_chrome_json(tmp_path):
+    """telemetry='trace' counters stay intact, and the tracer's output
+    validates against the Chrome trace-event schema."""
+    exp = _tiny(rounds=3)
+    eng = ScanEngine(exp, telemetry="trace")
+    res = eng.run()
+    assert res.metrics is not None
+    obj = eng.tracer.to_dict()
+    assert validate_trace(obj) == []
+    assert any(e["name"] == "scan_dispatch" for e in obj["traceEvents"])
+    for e in obj["traceEvents"]:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+    path = str(tmp_path / "t.trace.json")
+    eng.tracer.save(path)
+    with open(path) as fh:
+        assert validate_trace(json.load(fh)) == []
+
+
+def test_validate_trace_flags_problems():
+    assert validate_trace({}) != []
+    assert validate_trace({"traceEvents": [{"ph": "X"}]}) != []
+    bad = SpanTracer().to_dict()
+    bad["traceEvents"].append({"name": "x", "ph": "Z", "pid": 1, "tid": 1,
+                               "ts": 0})
+    assert any("ph" in p for p in validate_trace(bad))
+
+
+def test_trace_rejects_batched_seeds():
+    """Loud ValueError naming the constraint at every entry point."""
+    cells = [_tiny(seed=s) for s in (0, 1)]
+    with pytest.raises(ValueError, match="trace"):
+        BatchedSeedEngine(cells, telemetry="trace")
+    plan = Plan(_tiny()).seeds(2)
+    with pytest.raises(ValueError, match="plan cell") as exc:
+        Session(plan, ExecutionSpec(backend="scan", telemetry="trace"))
+    assert "telemetry" in str(exc.value)
+    # counters stays batchable — same plan constructs fine
+    Session(plan, ExecutionSpec(backend="scan", telemetry="counters"))
+    # and trace itself is fine once batching is off
+    Session(plan, ExecutionSpec(backend="scan", telemetry="trace",
+                                batch_seeds=False))
+
+
+def test_telemetry_registry_modes():
+    assert TELEMETRY_MODES == ("off", "counters", "trace")
+    with pytest.raises(ValueError, match="telemetry"):
+        ExecutionSpec(backend="scan", telemetry="verbose").validate(_tiny())
+    with pytest.raises(ValueError, match="telemetry"):
+        ExecutionSpec(backend="python",
+                      telemetry="counters").validate(_tiny())
+
+
+# ------------------------------------------------------- sink and export
+
+def test_metric_sink_round_trip_merge_and_join(tmp_path):
+    """Session → sink → merge → join_journal: the full export path."""
+    plan = Plan(_tiny(rounds=3)).sweep(selector=["gpfl", "random"])
+    tel = str(tmp_path / "tel")
+    jpath = str(tmp_path / "j.jsonl")
+    rs = Session(plan, ExecutionSpec(backend="scan", telemetry="counters",
+                                     telemetry_dir=tel),
+                 journal=jpath).run()
+    assert not rs.failures
+    sink = MetricSink(os.path.join(tel, "metrics.jsonl"))
+    rows = sink.read_by_key()
+    assert len(rows) == 2
+    for r in rs:
+        key = cell_fingerprint(r.config)
+        np.testing.assert_array_equal(rows[key]["bytes_up"],
+                                      np.asarray(r.metrics["bytes_up"]))
+    # merge: last-listed sink wins per key
+    merged = str(tmp_path / "merged.jsonl")
+    n = merge_sinks([sink.path, str(tmp_path / "missing.jsonl")], merged)
+    assert n == 2
+    assert MetricSink(merged).read_by_key().keys() == rows.keys()
+    # join: sink metrics grafted onto journaled runs
+    joined = join_journal(sink, RunJournal(jpath))
+    assert set(joined) == set(rows)
+    for key, run in joined.items():
+        assert run.metrics is not None
+    # journal side: metrics_by_key sees the same counters
+    mk = RunJournal(jpath).metrics_by_key()
+    assert set(mk) == set(rows)
+
+
+def test_trace_files_exported_per_cell(tmp_path):
+    tel = str(tmp_path / "tr")
+    rs = Session(Plan(_tiny(rounds=3)),
+                 ExecutionSpec(backend="scan", telemetry="trace",
+                               telemetry_dir=tel, batch_seeds=False)).run()
+    assert not rs.failures
+    traces = glob.glob(os.path.join(tel, "*.trace.json"))
+    assert len(traces) == 1
+    with open(traces[0]) as fh:
+        assert validate_trace(json.load(fh)) == []
+
+
+# ------------------------------------------------------- metric helpers
+
+def test_selection_entropy_bounds():
+    assert float(selection_entropy(jnp.zeros(8, jnp.int32))) == 0.0
+    one = jnp.zeros(8, jnp.int32).at[3].set(5)
+    assert float(selection_entropy(one)) == pytest.approx(0.0)
+    uni = jnp.full((8,), 2, jnp.int32)
+    assert float(selection_entropy(uni)) == pytest.approx(np.log(8),
+                                                          rel=1e-5)
+
+
+def test_staleness_histogram_clips_to_bins():
+    s = jnp.asarray([0, 1, 1, STALENESS_BINS + 5], jnp.int32)
+    h = np.asarray(staleness_histogram(s))
+    assert h.shape == (STALENESS_BINS,)
+    assert h[0] == 1 and h[1] == 2 and h[-1] == 1 and h.sum() == 4
+
+
+def test_metric_buffer_key_discipline():
+    buf = MetricBuffer()
+    buf.append(**{k: 1.0 for k in METRIC_KEYS})
+    with pytest.raises(ValueError, match="keys"):
+        buf.append(participants=1.0)
+    arrs = buf.arrays()
+    assert set(arrs) == set(METRIC_KEYS)
+    out = finalize_metrics(arrs, param_bytes=100)
+    assert out["bytes_down"].dtype == np.int64
+    assert out["bytes_down"][0] == 100
+
+
+# --------------------------------------------------------- journal tool
+
+def test_journal_tool_cli(tmp_path, capsys):
+    import importlib.util
+    import pathlib
+    tool = (pathlib.Path(__file__).resolve().parent.parent
+            / "tools" / "journal_tool.py")
+    spec = importlib.util.spec_from_file_location("journal_tool", tool)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    jt_main = mod.main
+    ja, jb = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    exp = _tiny(rounds=3)
+    res = ScanEngine(exp, telemetry="counters").run()
+    for path in (ja, jb):
+        RunJournal(path).append(res)
+    other = dataclasses.replace(exp, seed=9, name="other")
+    RunJournal(jb).append_failure(other, "boom")
+    # inspect: one ok line + summary; --key dumps JSON
+    assert jt_main(["inspect", ja]) == 0
+    out = capsys.readouterr().out
+    assert "telemetry=counters" in out and "1 ok" in out
+    key = cell_fingerprint(exp)
+    assert jt_main(["inspect", jb, "--key", key[:10]]) == 0
+    assert json.loads(capsys.readouterr().out)["key"] == key
+    # diff: b has one extra (failed) cell → exit 1 and a '+' line
+    assert jt_main(["diff", ja, jb]) == 1
+    assert "+ " in capsys.readouterr().out
+    # identical journals diff clean
+    assert jt_main(["diff", ja, ja]) == 0
+    # compact: duplicate append then compact drops one line
+    RunJournal(ja).append(res)
+    assert jt_main(["compact", ja]) == 0
+    assert "dropped 1" in capsys.readouterr().out

@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Inspect, compact and diff ``repro.api.RunJournal`` files from the shell.
+
+A sweep's ground truth lives in its append-only journal(s) — but JSONL
+full of float arrays is unreadable, restarts layer superseded records,
+and "what changed between these two sweeps?" means eyeballing
+fingerprints.  Three subcommands::
+
+    PYTHONPATH=src python tools/journal_tool.py inspect  J.jsonl
+    PYTHONPATH=src python tools/journal_tool.py compact  J.jsonl
+    PYTHONPATH=src python tools/journal_tool.py diff     A.jsonl B.jsonl
+
+* ``inspect`` — one line per journaled cell (last record wins): short
+  fingerprint, name, status, rounds, final accuracy, and whether the
+  record carries telemetry counters.  ``--key`` narrows to one cell and
+  dumps its full record as pretty JSON.
+* ``compact`` — :meth:`repro.api.RunJournal.compact` (atomic rewrite
+  keeping the latest record per fingerprint); prints lines dropped.
+* ``diff`` — compares two journals BY CELL FINGERPRINT: cells only in
+  A, only in B, and cells in both whose latest outcome differs
+  (status flips, or accuracy histories that are not bit-identical).
+  Exit code 1 when any difference is found (script-friendly), 0 when
+  the journals agree.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+
+
+def _latest_records(path: str) -> dict:
+    """Last-wins record per fingerprint (success AND failure records)."""
+    from repro.api import RunJournal
+    out: dict = {}
+    for rec in RunJournal(path).records():
+        out[rec["key"]] = rec
+    return out
+
+
+def _summarize(rec: dict) -> str:
+    """One human line for a journal record."""
+    if rec.get("status") == "failed":
+        return (f"{rec['key'][:10]}  {rec.get('name', '?'):40s}  FAILED  "
+                f"{rec.get('error', '')[:60]}")
+    run = rec["run"]
+    acc = run.get("accuracy", [])
+    tel = "counters" if run.get("metrics") else "-"
+    final = f"{acc[-1]:.4f}" if acc else "n/a"
+    return (f"{rec['key'][:10]}  {rec.get('name', '?'):40s}  ok      "
+            f"rounds={len(acc):4d}  final_acc={final}  telemetry={tel}")
+
+
+def cmd_inspect(args) -> int:
+    """Print one summary line per cell (or one full record with --key)."""
+    recs = _latest_records(args.journal)
+    if args.key:
+        hits = {k: r for k, r in recs.items() if k.startswith(args.key)}
+        if not hits:
+            print(f"no cell fingerprint starts with {args.key!r}",
+                  file=sys.stderr)
+            return 1
+        for rec in hits.values():
+            json.dump(rec, sys.stdout, indent=2)
+            print()
+        return 0
+    ok = sum(1 for r in recs.values() if r.get("status") != "failed")
+    for rec in recs.values():
+        print(_summarize(rec))
+    print(f"# {len(recs)} cell(s): {ok} ok, {len(recs) - ok} failed")
+    return 0
+
+
+def cmd_compact(args) -> int:
+    """Atomically drop superseded journal lines."""
+    from repro.api import RunJournal
+    dropped = RunJournal(args.journal).compact()
+    print(f"{args.journal}: dropped {dropped} superseded line(s)")
+    return 0
+
+
+def cmd_diff(args) -> int:
+    """Compare two journals by cell fingerprint; exit 1 on differences."""
+    a, b = _latest_records(args.journal_a), _latest_records(args.journal_b)
+    only_a = sorted(set(a) - set(b))
+    only_b = sorted(set(b) - set(a))
+    changed = []
+    for key in sorted(set(a) & set(b)):
+        ra, rb = a[key], b[key]
+        if ra.get("status") != rb.get("status"):
+            changed.append((key, "status "
+                            f"{ra.get('status', 'ok') or 'ok'} -> "
+                            f"{rb.get('status', 'ok') or 'ok'}"))
+        elif ra.get("run", {}).get("accuracy") != \
+                rb.get("run", {}).get("accuracy"):
+            changed.append((key, "accuracy history differs"))
+    for key in only_a:
+        print(f"- {key[:10]}  {a[key].get('name', '?')}  (only in A)")
+    for key in only_b:
+        print(f"+ {key[:10]}  {b[key].get('name', '?')}  (only in B)")
+    for key, why in changed:
+        print(f"! {key[:10]}  {a[key].get('name', '?')}  {why}")
+    n = len(only_a) + len(only_b) + len(changed)
+    print(f"# {n} difference(s): {len(only_a)} only-A, {len(only_b)} "
+          f"only-B, {len(changed)} changed")
+    return 1 if n else 0
+
+
+def main(argv=None) -> int:
+    """CLI dispatcher for the three subcommands."""
+    ap = argparse.ArgumentParser(prog="journal_tool",
+                                 description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("inspect", help="summarize a journal's cells")
+    p.add_argument("journal")
+    p.add_argument("--key", default=None,
+                   help="full-record dump of cells whose fingerprint "
+                        "starts with this prefix")
+    p.set_defaults(fn=cmd_inspect)
+    p = sub.add_parser("compact", help="drop superseded journal lines")
+    p.add_argument("journal")
+    p.set_defaults(fn=cmd_compact)
+    p = sub.add_parser("diff", help="compare two journals by fingerprint")
+    p.add_argument("journal_a")
+    p.add_argument("journal_b")
+    p.set_defaults(fn=cmd_diff)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
